@@ -1,0 +1,72 @@
+"""Shared benchmark helpers: result rows, validation, cluster-sample cache."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+
+
+@dataclasses.dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: float
+    target: float | None = None
+    ok: bool | None = None
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.1f},{self.derived:.6g}"
+
+
+def check_abs(value: float, target: tuple[float, float]) -> bool:
+    mean, tol = target
+    return abs(value - mean) <= tol
+
+
+def check_rel(value: float, target: tuple[float, float]) -> bool:
+    mean, tol = target
+    return abs(value - mean) <= tol * abs(mean)
+
+
+class Bench:
+    """Collects rows and wall time for one paper artifact."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self.rows: list[Row] = []
+        self._t0 = time.time()
+
+    @property
+    def us(self) -> float:
+        return (time.time() - self._t0) * 1e6
+
+    def add(self, metric: str, value: float, target=None, mode="abs"):
+        ok = None
+        tval = None
+        if target is not None:
+            tval = target[0]
+            ok = check_abs(value, target) if mode == "abs" else check_rel(value, target)
+        self.rows.append(Row(f"{self.name}/{metric}", self.us, float(value),
+                             tval, ok))
+
+    def summary(self) -> str:
+        n_ok = sum(1 for r in self.rows if r.ok)
+        n_checked = sum(1 for r in self.rows if r.ok is not None)
+        return f"{self.name}: {n_ok}/{n_checked} targets hit, {len(self.rows)} metrics"
+
+
+# --------------------------------------------------------------------------- #
+# shared cluster sample (several figures read the same simulated deployment)
+# --------------------------------------------------------------------------- #
+@functools.lru_cache(maxsize=2)
+def cluster_sample(n_devices: int = 112, horizon_s: int = 10 * 3600, seed: int = 1):
+    from repro.cluster import generate_cluster
+    return generate_cluster(n_devices=n_devices, horizon_s=horizon_s, seed=seed)
+
+
+@functools.lru_cache(maxsize=2)
+def fleet_analysis(min_job_s: float = 7200.0, min_interval_s: float = 5.0):
+    from repro.telemetry import analyze_fleet
+    cs = cluster_sample()
+    return analyze_fleet(cs.frame, min_job_duration_s=min_job_s,
+                         min_interval_s=min_interval_s)

@@ -1,0 +1,100 @@
+"""Every number the paper reports, as validation targets with tolerances.
+
+Tolerances are absolute for fractions (simulation + sampling noise) and
+relative for powers/latencies.
+"""
+
+# Fig 3b — job-attributed time/energy split
+FIG3 = {
+    "deep_idle_time": (0.24, 0.06),
+    "deep_idle_energy": (0.07, 0.04),
+    "exec_idle_time": (0.15, 0.05),
+    "exec_idle_energy": (0.10, 0.04),
+    "active_time": (0.61, 0.07),
+    "active_energy": (0.83, 0.06),
+}
+
+# §3 headline (11,791 long jobs)
+HEADLINE = {
+    "in_exec_time_fraction": (0.197, 0.04),   # §4.3 baseline 19.17–19.7%
+    "in_exec_energy_fraction": (0.107, 0.03),
+}
+
+# Fig 5 (left) — academic classes: (time_frac, energy_frac)
+FIG5_ACADEMIC = {
+    "serving": ((0.61, 0.08), (0.48, 0.08)),
+    "training": ((0.13, 0.06), (0.065, 0.04)),
+    "batch_inference": ((0.12, 0.06), (0.07, 0.04)),
+    "other": ((0.05, 0.05), (0.03, 0.03)),
+}
+
+# Fig 5 (right) — industry trace replays: (time_frac, energy_frac)
+FIG5_TRACES = {
+    "azure_chat": ((0.29, 0.06), (0.17, 0.06)),
+    "azure_code": ((0.76, 0.05), (0.65, 0.06)),
+    "burstgpt_chat": ((0.72, 0.06), (0.52, 0.07)),
+    "qwen_reason": ((0.18, 0.06), (0.08, 0.04)),
+    "qwen_chat": ((0.14, 0.05), (0.07, 0.04)),
+}
+
+# Fig 6 — per-GPU inter-request medians: 4–8 s; heavy tails for
+# burstgpt_chat / qwen_reason (p90 > 10 s)
+FIG6_MEDIAN_RANGE = (3.0, 14.0)
+FIG6_HEAVY_TAIL_TRACES = ("burstgpt_chat", "qwen_reason")
+
+# Fig 7 — per-job CDF tail shares
+FIG7 = {
+    "time>0.1": (0.334, 0.08), "time>0.2": (0.252, 0.07),
+    "time>0.5": (0.154, 0.06),
+    "energy>0.1": (0.271, 0.07), "energy>0.2": (0.212, 0.06),
+    "energy>0.5": (0.128, 0.05),
+}
+
+# Fig 8 — interval duration percentiles (s)
+FIG8 = {"p50": (9.0, 3.0), "p90": (44.0, 15.0), "p99": (836.0, 400.0)}
+
+# Table 2 — sensitivity (time_frac, energy_frac)
+TABLE2 = {
+    "baseline_5s": ((0.1917, 0.05), (0.1067, 0.035)),
+    "permissive_1s": ((0.2377, 0.06), (0.1391, 0.045)),
+    "conservative_10s": ((0.156, 0.05), (0.0795, 0.03)),
+    "broader_1h": ((0.1922, 0.05), (0.1071, 0.035)),
+}
+
+# Fig 9 — pre-idle cause shares
+FIG9 = {
+    "pcie_heavy": (0.48, 0.10),
+    "compute_to_idle": (0.33, 0.10),
+    "nic_heavy": (0.17, 0.08),
+    "nvlink_heavy": (0.02, 0.03),
+}
+
+# Fig 10 — load imbalance (relative to 8-active balanced baseline)
+FIG10 = {
+    "energy_ratio_4active": (0.75, 0.18),   # interpolating the paper's trend
+    "energy_ratio_2active": (0.56, 0.12),
+    "p95_increase_4active": (0.80, 0.55),
+    "p95_increase_2active": (0.93, 0.60),
+    "util_ratio_2active": (1.0, 0.35),      # pool SM util stays similar
+}
+
+# Figs 11/12 — Algorithm 1 on the Azure Code replay (L40S)
+FIG11_12 = {
+    "baseline_avg_w": (123.9, 0.15),        # relative tol
+    "sm_only_avg_w": (96.4, 0.15),
+    "sm_mem_avg_w": (82.2, 0.15),
+    "sm_only_power_reduction": (0.22, 0.10),   # absolute
+    "sm_mem_power_reduction": (0.34, 0.12),
+    "baseline_p95_s": (2.31, 0.5),          # relative
+    "sm_only_p95_increase": (0.29, 0.45),   # absolute (+29%)
+    "sm_mem_p95_increase": (1.60, 1.2),     # absolute (+160%)
+    "exec_idle_power_baseline": (105.0, 0.1),
+    "exec_idle_power_sm_only": (61.0, 0.1),
+    "exec_idle_power_sm_mem": (35.0, 0.1),
+}
+
+# §3 — controlled experiment: exec-idle power stays elevated 4 s..2048 s
+PROLONGED_IDLE_MAX_DROP = 0.1   # default DVFS: < 10% drop over 2048 s
+
+# Fig 3a — observed energy 41.6% of TDP upper bound
+FIG3A_TDP_FRACTION = (0.416, 0.12)

@@ -1,0 +1,78 @@
+"""Benchmark entry point — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (plus target/ok columns when a
+paper number exists) and a per-bench validation summary. The §Roofline bench
+reads the dry-run reports if present (reports/dryrun/*.json).
+
+Run:  PYTHONPATH=src python -m benchmarks.run [--only fig5,fig10]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+
+def bench_roofline():
+    """Summarize dry-run roofline cells (§Roofline) if reports exist."""
+    from benchmarks.common import Bench
+    b = Bench("roofline")
+    report_dir = pathlib.Path("reports/dryrun")
+    if not report_dir.exists():
+        return b
+    cells = sorted(report_dir.glob("*.json"))
+    n_ok = n_skip = n_err = 0
+    for path in cells:
+        r = json.loads(path.read_text())
+        if r["status"] == "ok":
+            n_ok += 1
+            rf = r["roofline"]
+            cell = f"{r['arch']}_{r['shape']}_{r['mesh']}"
+            b.add(f"{cell}_bound_s", rf.get("roofline_bound_s", 0.0))
+            b.add(f"{cell}_useful_fraction", rf["useful_fraction"])
+        elif r["status"] == "skipped":
+            n_skip += 1
+        else:
+            n_err += 1
+    b.add("cells_ok", float(n_ok))
+    b.add("cells_skipped", float(n_skip))
+    b.add("cells_error", float(n_err), (0.0, 0.5))
+    return b
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench-name substrings")
+    args = ap.parse_args()
+
+    from benchmarks.paper_benches import ALL_BENCHES
+    benches = list(ALL_BENCHES) + [bench_roofline]
+    if args.only:
+        keys = args.only.split(",")
+        benches = [fn for fn in benches
+                   if any(k in fn.__name__ for k in keys)]
+
+    print("name,us_per_call,derived,target,ok")
+    summaries = []
+    all_ok = True
+    for fn in benches:
+        bench = fn()
+        for row in bench.rows:
+            target = "" if row.target is None else f"{row.target:.6g}"
+            ok = "" if row.ok is None else str(row.ok)
+            print(f"{row.csv()},{target},{ok}", flush=True)
+        summaries.append(bench.summary())
+        if any(r.ok is False for r in bench.rows):
+            all_ok = False
+
+    print("\n== validation summary ==", file=sys.stderr)
+    for s in summaries:
+        print("  " + s, file=sys.stderr)
+    print(f"overall: {'ALL TARGETS HIT' if all_ok else 'SOME TARGETS MISSED'}",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""End-to-end training driver: a ~100M-param qwen-family model for a few
+hundred steps with checkpoint/restart, telemetry, and the execution-idle
+controller guarding input-pipeline stalls.
+
+On this CPU container the default is a scaled-down run (--steps 30); pass
+--full for the ~100M/300-step version on real hardware.
+
+Run:  PYTHONPATH=src python examples/train_100m.py [--steps N] [--full]
+"""
+import argparse
+import dataclasses
+import tempfile
+
+from repro.configs import get_config, get_smoke_config
+from repro.telemetry import analyze_job
+from repro.train.trainer import Trainer, TrainerConfig
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=30)
+ap.add_argument("--full", action="store_true")
+args = ap.parse_args()
+
+if args.full:
+    # ~110M params: qwen1.5-0.5b geometry at 12 layers
+    cfg = dataclasses.replace(get_config("qwen1.5-0.5b"), n_layers=12,
+                              name="qwen-100m")
+    batch, seq, steps = 32, 512, max(args.steps, 300)
+else:
+    cfg = get_smoke_config("qwen1.5-0.5b")
+    batch, seq, steps = 8, 64, args.steps
+
+ckpt_dir = tempfile.mkdtemp(prefix="train100m_")
+tc = TrainerConfig(steps=steps, checkpoint_every=max(steps // 3, 5),
+                   checkpoint_dir=ckpt_dir, lr=1e-3)
+trainer = Trainer(cfg, tc, global_batch=batch, seq_len=seq, controller=True)
+report = trainer.run()
+print(f"loss {report.losses[0]:.3f} -> {report.final_loss:.3f} over "
+      f"{report.steps_run} steps ({report.wall_s:.0f}s wall), "
+      f"checkpoints in {ckpt_dir}")
+
+# restart from the checkpoint and keep training (fault-tolerance demo)
+trainer2 = Trainer(cfg, dataclasses.replace(tc, steps=steps + 10),
+                   global_batch=batch, seq_len=seq, controller=True)
+report2 = trainer2.run()
+print(f"resumed from step {report2.resumed_from}; "
+      f"loss -> {report2.final_loss:.3f}")
+
+frame = trainer2.sampler.frame()
+if len(frame):
+    ja = analyze_job(frame, job_id=1, min_duration_s=1.0)
+    print(f"telemetry: exec-idle {ja.exec_idle_time_fraction:.1%} of step time "
+          f"({ja.breakdown.total_energy_j/1e3:.1f} kJ simulated)")
+assert report2.final_loss < report.losses[0], "training must make progress"
+print("OK")

@@ -1,0 +1,2 @@
+"""Academic-cluster telemetry simulator (paper §2.1 deployment, regenerated)."""
+from repro.cluster.simulator import generate_cluster, ClusterSample  # noqa: F401

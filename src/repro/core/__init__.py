@@ -1,0 +1,47 @@
+"""Core: the paper's contribution — execution-idle as a first-class state.
+
+Taxonomy + classifier (states), sustained-interval extraction (intervals),
+energy accounting (energy), platform power/DVFS models (power_model),
+Algorithm-1 controller (controller), load-imbalance pool scheduling
+(imbalance), density clustering (clustering), pre-idle cause attribution
+(attribution).
+"""
+from repro.core.states import (  # noqa: F401
+    DeviceState,
+    ClassifierConfig,
+    DEFAULT_CLASSIFIER,
+    classify_sample,
+    classify_series,
+    state_time_fractions,
+    in_execution_mask,
+)
+from repro.core.intervals import (  # noqa: F401
+    Interval,
+    extract_intervals,
+    apply_min_duration,
+    duration_percentiles,
+)
+from repro.core.energy import EnergyBreakdown, integrate, merge  # noqa: F401
+from repro.core.power_model import (  # noqa: F401
+    ClockLevel,
+    PlatformSpec,
+    PLATFORMS,
+    get_platform,
+    SimulatedDevice,
+    TPU_V5E,
+)
+from repro.core.controller import (  # noqa: F401
+    ControllerConfig,
+    DownscaleMode,
+    ExecutionIdleController,
+)
+from repro.core.imbalance import (  # noqa: F401
+    PoolPolicy,
+    PoolConfig,
+    ImbalanceScheduler,
+)
+from repro.core.attribution import (  # noqa: F401
+    extract_pre_idle_windows,
+    attribute_causes,
+    AttributionResult,
+)

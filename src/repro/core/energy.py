@@ -1,0 +1,135 @@
+"""Energy accounting over telemetry series (paper §2.2, §4).
+
+Power is integrated per-sample (1 Hz board power, as NVML would report).
+The paper's headline metrics are *in-execution fractions*: the denominator is
+execution-idle + active time/energy only; deep-idle (unallocated or program
+absent) is excluded (§4, "In-execution fractions").
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.intervals import apply_min_duration
+from repro.core.states import DeviceState, in_execution_mask
+
+
+JOULES_PER_KWH = 3.6e6
+US_CENTS_PER_KWH = 13.6          # paper footnote 3
+CO2E_LBS_PER_KWH = (0.82, 0.89)  # paper footnote 3
+LBS_PER_METRIC_TON = 2204.62
+
+
+@dataclasses.dataclass(frozen=True)
+class EnergyBreakdown:
+    """Time (s) and energy (J) per state, plus in-execution fractions."""
+
+    time_s: dict[DeviceState, float]
+    energy_j: dict[DeviceState, float]
+
+    @property
+    def total_time_s(self) -> float:
+        return float(sum(self.time_s.values()))
+
+    @property
+    def total_energy_j(self) -> float:
+        return float(sum(self.energy_j.values()))
+
+    # ------------------------------------------------------------------ #
+    # Whole-window fractions (Fig 3b uses these, denominator = everything)
+    # ------------------------------------------------------------------ #
+    def time_fraction(self, state: DeviceState) -> float:
+        t = self.total_time_s
+        return self.time_s[state] / t if t else 0.0
+
+    def energy_fraction(self, state: DeviceState) -> float:
+        e = self.total_energy_j
+        return self.energy_j[state] / e if e else 0.0
+
+    # ------------------------------------------------------------------ #
+    # In-execution fractions (§4 headline metrics; deep-idle excluded)
+    # ------------------------------------------------------------------ #
+    @property
+    def in_execution_time_s(self) -> float:
+        return self.time_s[DeviceState.EXECUTION_IDLE] + self.time_s[DeviceState.ACTIVE]
+
+    @property
+    def in_execution_energy_j(self) -> float:
+        return self.energy_j[DeviceState.EXECUTION_IDLE] + self.energy_j[DeviceState.ACTIVE]
+
+    @property
+    def exec_idle_time_fraction(self) -> float:
+        t = self.in_execution_time_s
+        return self.time_s[DeviceState.EXECUTION_IDLE] / t if t else 0.0
+
+    @property
+    def exec_idle_energy_fraction(self) -> float:
+        e = self.in_execution_energy_j
+        return self.energy_j[DeviceState.EXECUTION_IDLE] / e if e else 0.0
+
+
+def integrate(
+    states: np.ndarray,
+    power_w: np.ndarray,
+    dt_s: float = 1.0,
+    min_duration_s: float | None = 5.0,
+) -> EnergyBreakdown:
+    """Integrate power over a classified series.
+
+    Args:
+        states: int array [T] of DeviceState values.
+        power_w: float array [T] of board power in watts.
+        dt_s: sample spacing.
+        min_duration_s: if given, EXECUTION_IDLE runs shorter than this are
+            conservatively relabelled ACTIVE before accounting (§2.2).
+    """
+    states = np.asarray(states)
+    power_w = np.asarray(power_w, dtype=np.float64)
+    if states.shape != power_w.shape:
+        raise ValueError(f"states {states.shape} vs power {power_w.shape}")
+    if min_duration_s is not None:
+        states = apply_min_duration(states, min_duration_s, dt_s)
+
+    time_s: dict[DeviceState, float] = {}
+    energy_j: dict[DeviceState, float] = {}
+    for s in DeviceState:
+        mask = states == int(s)
+        time_s[s] = float(np.sum(mask) * dt_s)
+        energy_j[s] = float(np.sum(power_w[mask]) * dt_s)
+    return EnergyBreakdown(time_s=time_s, energy_j=energy_j)
+
+
+def merge(breakdowns: list[EnergyBreakdown]) -> EnergyBreakdown:
+    """Aggregate per-device/per-job breakdowns into a fleet breakdown."""
+    time_s = {s: 0.0 for s in DeviceState}
+    energy_j = {s: 0.0 for s in DeviceState}
+    for b in breakdowns:
+        for s in DeviceState:
+            time_s[s] += b.time_s[s]
+            energy_j[s] += b.energy_j[s]
+    return EnergyBreakdown(time_s=time_s, energy_j=energy_j)
+
+
+def energy_kwh(energy_j: float) -> float:
+    return energy_j / JOULES_PER_KWH
+
+
+def cost_usd(energy_j: float, cents_per_kwh: float = US_CENTS_PER_KWH) -> float:
+    return energy_kwh(energy_j) * cents_per_kwh / 100.0
+
+
+def co2e_metric_tons(energy_j: float) -> tuple[float, float]:
+    """(low, high) CO2e estimate per paper footnote 3."""
+    kwh = energy_kwh(energy_j)
+    lo, hi = CO2E_LBS_PER_KWH
+    return kwh * lo / LBS_PER_METRIC_TON, kwh * hi / LBS_PER_METRIC_TON
+
+
+def tdp_upper_bound_j(tdp_w: float, window_s: float, n_devices: int = 1) -> float:
+    """Energy had the fleet run at TDP continuously (Fig 3a comparison)."""
+    return tdp_w * window_s * n_devices
+
+
+def fraction_of_tdp(total_energy_j: float, tdp_w: float, window_s: float, n_devices: int) -> float:
+    return total_energy_j / tdp_upper_bound_j(tdp_w, window_s, n_devices)

@@ -1,0 +1,2 @@
+"""Distribution substrate: context, sharding rules, gradient compression."""
+from repro.distributed.context import DistContext, LOCAL  # noqa: F401

@@ -1,0 +1,55 @@
+"""Distribution context threaded through model code.
+
+Keeps model code mesh-agnostic: when ``mesh`` is None (CPU smoke tests)
+all constraints are no-ops and MoE uses the dense fallback; when a mesh is
+present, activations get explicit sharding constraints and MoE dispatch runs
+expert-parallel over the ``model`` axis via shard_map + all_to_all.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class DistContext:
+    mesh: Mesh | None = None
+    #: axes that shard the global batch (("pod","data") on the multi-pod mesh)
+    batch_axes: tuple[str, ...] = ("data",)
+    #: axis used for tensor/expert/sequence parallelism
+    model_axis: str = "model"
+
+    @property
+    def enabled(self) -> bool:
+        return self.mesh is not None
+
+    @property
+    def dp_size(self) -> int:
+        if not self.enabled:
+            return 1
+        return int(
+            jax.numpy.prod(jax.numpy.array(
+                [self.mesh.shape[a] for a in self.batch_axes])))
+
+    @property
+    def ep_size(self) -> int:
+        return self.mesh.shape[self.model_axis] if self.enabled else 1
+
+    # ------------------------------------------------------------------ #
+    def batch_spec(self, *rest) -> P:
+        return P(self.batch_axes, *rest)
+
+    def constraint(self, x, spec: P):
+        if not self.enabled:
+            return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+
+    def sharding(self, spec: P) -> NamedSharding:
+        assert self.mesh is not None
+        return NamedSharding(self.mesh, spec)
+
+
+#: default single-process context (no mesh)
+LOCAL = DistContext()

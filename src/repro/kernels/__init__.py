@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the serving/training hot paths.
+
+flash_attention, decode_attention, rwkv6_scan, ssm_scan, rmsnorm — each with
+a jit'd wrapper in ops.py and a pure-jnp oracle in ref.py. Validated in
+interpret mode on CPU; compiled kernels target TPU (see DESIGN.md §2).
+"""

@@ -1,0 +1,102 @@
+"""Pallas TPU decode attention: one query token vs a long KV cache.
+
+Flash-decoding-style schedule: grid (batch, kv_heads, kv_blocks) with the kv
+dimension innermost; all q heads in one KV group are processed together as an
+MXU-friendly (q_per_kv, d) tile, with online-softmax stats in VMEM scratch.
+``cache_len`` arrives via scalar prefetch (SMEM) and masks invalid cache
+slots, so one compiled kernel serves every fill level.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                   scale: float, block_k: int, n_kv_blocks: int):
+    ik = pl.program_id(2)
+    cache_len = len_ref[0]
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # skip blocks entirely past the valid cache
+    @pl.when(ik * block_k < cache_len)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                # (qpk, d)
+        k = k_ref[0, 0].astype(jnp.float32)                # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)                # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        k_pos = ik * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        s = jnp.where(k_pos < cache_len, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ik == n_kv_blocks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, block_k: int = 512,
+                     interpret: bool = False):
+    """q: (B, H, d) one token; caches: (B, KV, S, d); cache_len scalar int32.
+
+    Returns (B, H, d). Layout is head-major like flash_attention.
+    """
+    b, h, d = q.shape
+    _, kv, s, _ = k_cache.shape
+    assert h % kv == 0
+    qpk = h // kv
+    block_k = min(block_k, s)
+    assert s % block_k == 0
+    nk = s // block_k
+    scale = 1.0 / np.sqrt(d)
+
+    q4 = q.reshape(b, kv, qpk, d)
+    cache_len = jnp.asarray(cache_len, jnp.int32).reshape(1)
+
+    kernel = functools.partial(_decode_kernel, scale=scale, block_k=block_k,
+                               n_kv_blocks=nk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(b, kv, nk),
+            in_specs=[
+                # index maps receive the scalar-prefetch ref as a trailing arg
+                pl.BlockSpec((1, 1, qpk, d), lambda ib, ih, ik, _len: (ib, ih, 0, 0)),
+                pl.BlockSpec((1, 1, block_k, d), lambda ib, ih, ik, _len: (ib, ih, ik, 0)),
+                pl.BlockSpec((1, 1, block_k, d), lambda ib, ih, ik, _len: (ib, ih, ik, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, qpk, d), lambda ib, ih, ik, _len: (ib, ih, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((qpk, d), jnp.float32),
+                pltpu.VMEM((qpk,), jnp.float32),
+                pltpu.VMEM((qpk,), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, kv, qpk, d), q.dtype),
+        interpret=interpret,
+    )(cache_len, q4, k_cache, v_cache)
+    return out.reshape(b, h, d)

@@ -1,0 +1,86 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contracts).
+
+These are deliberately simple O(S^2) / sequential implementations; kernel
+tests sweep shapes/dtypes and assert allclose against them.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def mha_reference(q, k, v, causal: bool = True, window: int = 0):
+    """q: (B,H,Sq,d); k/v: (B,KV,Sk,d) -> (B,H,Sq,d) f32."""
+    b, h, sq, d = q.shape
+    kvh, sk = k.shape[1], k.shape[2]
+    k = jnp.repeat(k, h // kvh, axis=1)
+    v = jnp.repeat(v, h // kvh, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / np.sqrt(d)
+    q_pos = jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+
+
+def decode_attention_reference(q, k_cache, v_cache, cache_len):
+    """q: (B,H,d); caches: (B,KV,S,d) -> (B,H,d) f32."""
+    b, h, d = q.shape
+    kvh, s = k_cache.shape[1], k_cache.shape[2]
+    k = jnp.repeat(k_cache, h // kvh, axis=1)
+    v = jnp.repeat(v_cache, h // kvh, axis=1)
+    scores = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / np.sqrt(d)
+    scores = jnp.where(jnp.arange(s)[None, None, :] < cache_len, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhk,bhkd->bhd", p, v.astype(jnp.float32))
+
+
+def wkv6_reference(r, k, v, w, u, state0=None):
+    """Sequential WKV-6. r/k/v/w: (B,H,S,K); u: (H,K)."""
+    b, h, s, kd = r.shape
+    r, k, v, w = (t.astype(jnp.float32) for t in (r, k, v, w))
+    state = (jnp.zeros((b, h, kd, kd), jnp.float32) if state0 is None
+             else state0.astype(jnp.float32))
+
+    def step(state, t):
+        kv = k[:, :, t, :, None] * v[:, :, t, None, :]
+        y = jnp.einsum("bhk,bhkv->bhv", r[:, :, t],
+                       state + u[None, :, :, None] * kv)
+        state = w[:, :, t, :, None] * state + kv
+        return state, y
+
+    state, ys = jax.lax.scan(step, state, jnp.arange(s))
+    return jnp.moveaxis(ys, 0, 2), state
+
+
+def ssm_scan_reference(u, dt, a, b, c, h0=None):
+    """Sequential selective scan. u/dt: (B,S,I); a: (I,N); b/c: (B,S,N)."""
+    bsz, s, di = u.shape
+    n = a.shape[-1]
+    u, dt, b, c = (t.astype(jnp.float32) for t in (u, dt, b, c))
+    h = jnp.zeros((bsz, di, n), jnp.float32) if h0 is None else h0
+
+    def step(h, t):
+        da = jnp.exp(dt[:, t, :, None] * a)
+        h = da * h + dt[:, t, :, None] * b[:, t, None, :] * u[:, t, :, None]
+        y = jnp.einsum("bin,bn->bi", h, c[:, t])
+        return h, y
+
+    h, ys = jax.lax.scan(step, h, jnp.arange(s))
+    return jnp.moveaxis(ys, 0, 1), h
+
+
+def rmsnorm_reference(x, weight, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * weight.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,253 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell the step function (train_step / prefill / decode_step) is
+jit-compiled against abstract inputs (ShapeDtypeStruct — no allocation) under
+the production mesh shardings; we record memory_analysis, cost_analysis, and
+the collective bytes parsed from the optimized HLO (roofline inputs).
+
+Usage:
+    python -m repro.launch.dryrun --arch gemma-2b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all --mesh both --out reports/dryrun
+"""
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, ASSIGNED_ARCHS, LM_SHAPES, cell_is_applicable, get_config
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.distributed import sharding as shd
+from repro.distributed.context import DistContext
+from repro.launch.mesh import make_dist
+from repro.models import api
+from repro.roofline import analysis as roofline
+from repro.roofline import hlo_parse
+from repro.train import optimizer as opt_mod
+from repro.train.trainer import make_train_step
+
+
+# --------------------------------------------------------------------------- #
+# abstract inputs
+# --------------------------------------------------------------------------- #
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    f32 = jnp.float32
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        batch = {"tokens": sds((b, s), i32), "labels": sds((b, s), i32)}
+        if cfg.family == "encdec":
+            batch["frames"] = sds((b, cfg.n_frames, cfg.d_model), f32)
+        if cfg.family == "vlm":
+            batch["vision"] = sds((b, cfg.n_vision_tokens, cfg.d_model), f32)
+        return {"batch": batch}
+    if shape.kind == "prefill":
+        out = {"tokens": sds((b, s), i32)}
+        if cfg.family == "encdec":
+            out["frames"] = sds((b, cfg.n_frames, cfg.d_model), f32)
+        if cfg.family == "vlm":
+            out["vision"] = sds((b, cfg.n_vision_tokens, cfg.d_model), f32)
+        return out
+    # decode: KV cache filled to seq_len, one new token
+    cache = jax.eval_shape(lambda: api.init_cache(cfg, b, s))
+    return {"cache": cache, "tokens": sds((b, 1), i32)}
+
+
+def model_flops_global(cfg: ModelConfig, shape: ShapeSpec) -> float:
+    """Useful-math floor: 6*N_active*tokens (train) / 2*N_active*tokens."""
+    n_active = api.active_params_abstract(cfg)
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch  # decode: one token per seq
+
+
+# --------------------------------------------------------------------------- #
+# per-cell lowering
+# --------------------------------------------------------------------------- #
+def lower_cell(arch: str, shape_name: str, dist: DistContext,
+               donate: bool = True):
+    cfg = get_config(arch)
+    shape = LM_SHAPES[shape_name]
+    specs = input_specs(cfg, shape)
+    from repro.models import common as cm
+    cm.set_shard_hook(shd.make_shard_hook(cfg, dist))
+    abstract = api.abstract_params(cfg, ep_size=dist.ep_size)
+    p_specs = shd.param_specs(abstract, dist)
+    p_sh = shd.named(dist, p_specs)
+
+    if shape.kind == "train":
+        optimizer = opt_mod.for_arch(cfg.name)
+        step = make_train_step(cfg, optimizer, dist)
+        opt_abstract = jax.eval_shape(optimizer.init, abstract)
+        lowered = step.lower(abstract, opt_abstract, specs["batch"])
+    elif shape.kind == "prefill":
+        def prefill_fn(params, tokens, frames=None, vision=None):
+            return api.prefill(params, tokens, cfg, dist=dist,
+                               frames=frames, vision=vision)
+
+        cache_abs = jax.eval_shape(
+            lambda: api.init_cache(cfg, shape.global_batch, shape.seq_len))
+        c_specs = shd.cache_specs(cfg, cache_abs, dist)
+        tok_sh = dist.sharding(shd.token_specs(dist, shape.global_batch))
+        in_sh = [p_sh, tok_sh]
+        args = [abstract, specs["tokens"]]
+        kw_sh = {}
+        if cfg.family == "encdec":
+            in_sh.append(dist.sharding(
+                shd.batch_specs(cfg, dist, shape.global_batch)["frames"]))
+            args.append(specs["frames"])
+        if cfg.family == "vlm":
+            in_sh.append(dist.sharding(
+                shd.batch_specs(cfg, dist, shape.global_batch)["vision"]))
+            args.append(specs["vision"])
+        jitted = jax.jit(prefill_fn, in_shardings=tuple(in_sh),
+                         out_shardings=(shd.named(dist, c_specs), None))
+        lowered = jitted.lower(*args)
+    else:  # decode
+        def decode_fn(params, cache, tokens):
+            return api.decode_step(params, cache, tokens, cfg, dist=dist)
+
+        cache_abs = specs["cache"]
+        c_specs = shd.cache_specs(cfg, cache_abs, dist)
+        c_sh = shd.named(dist, c_specs)
+        tok_sh = dist.sharding(shd.token_specs(dist, shape.global_batch))
+        jitted = jax.jit(decode_fn, in_shardings=(p_sh, c_sh, tok_sh),
+                         out_shardings=(c_sh, None),
+                         donate_argnums=(1,) if donate else ())
+        lowered = jitted.lower(abstract, cache_abs, specs["tokens"])
+    return lowered, cfg, shape
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: pathlib.Path | None = None, tune: str = "") -> dict:
+    from repro.models import tuning as tuning_mod
+    kwargs = {}
+    for part in filter(None, tune.split(",")):
+        if part.startswith("q_block="):
+            kwargs["q_block"] = int(part.split("=")[1])
+        else:
+            kwargs[part] = True
+    tuning_mod.set_tuning(**kwargs)
+    mesh_name = "multi" if multi_pod else "single"
+    if tune:
+        mesh_name += "__tuned-" + tuning_mod.ACTIVE.describe()
+    t0 = time.time()
+    result: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                    "tune": tuning_mod.ACTIVE.describe()}
+    if not cell_is_applicable(arch, shape_name):
+        result["status"] = "skipped"
+        result["reason"] = ("long_500k needs sub-quadratic attention; "
+                            "full-attention arch — see DESIGN.md §4")
+        result["wall_s"] = 0.0
+        if out_dir is not None:
+            out_dir.mkdir(parents=True, exist_ok=True)
+            (out_dir / f"{arch.replace('.', '_')}__{shape_name}__{mesh_name}.json"
+             ).write_text(json.dumps(result, indent=1))
+        return result
+    try:
+        dist = make_dist(multi_pod=multi_pod)
+        lowered, cfg, shape = lower_cell(arch, shape_name, dist)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        cost = compiled.cost_analysis()
+        mem = compiled.memory_analysis()
+        hlo = compiled.as_text()
+        if out_dir is not None:
+            import gzip
+            out_dir.mkdir(parents=True, exist_ok=True)
+            hlo_path = out_dir / (
+                f"{arch.replace('.', '_')}__{shape_name}__{mesh_name}.hlo.gz")
+            with gzip.open(hlo_path, "wt") as f:
+                f.write(hlo)
+        stats = hlo_parse.analyze_hlo(hlo)
+        n_chips = 512 if multi_pod else 256
+        terms = roofline.derive_terms(cost or {}, stats, n_chips,
+                                      model_flops_global(cfg, shape))
+        result.update({
+            "status": "ok",
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "n_chips": n_chips,
+            "memory": _memory_dict(mem),
+            "collectives": {"total_bytes": stats.collective_bytes,
+                            "by_op": stats.collective_by_op,
+                            "counts": stats.collective_counts},
+            "roofline": terms.as_dict(),
+        })
+    except Exception as e:  # noqa: BLE001 — record, don't abort the sweep
+        result["status"] = "error"
+        result["error"] = f"{type(e).__name__}: {e}"
+        result["traceback"] = traceback.format_exc()[-2000:]
+    result["wall_s"] = round(time.time() - t0, 1)
+    if out_dir is not None:
+        out_dir.mkdir(parents=True, exist_ok=True)
+        path = out_dir / f"{arch.replace('.', '_')}__{shape_name}__{mesh_name}.json"
+        path.write_text(json.dumps(result, indent=1, default=str))
+    return result
+
+
+def _memory_dict(mem) -> dict:
+    if mem is None:
+        return {}
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        v = getattr(mem, attr, None)
+        if v is not None:
+            out[attr] = int(v)
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=[*LM_SHAPES, None])
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="reports/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--tune", default="",
+                    help="comma list of tuning knobs, e.g. attn_probs_bf16,seq_parallel")
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out)
+    archs = list(ASSIGNED_ARCHS) if args.all or not args.arch else [args.arch]
+    shapes = list(LM_SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                name = f"{arch.replace('.', '_')}__{shape}__{'multi' if multi else 'single'}"
+                if args.skip_existing and (out_dir / f"{name}.json").exists():
+                    prev = json.loads((out_dir / f"{name}.json").read_text())
+                    if prev.get("status") in ("ok", "skipped"):
+                        print(f"[skip] {name} ({prev['status']})", flush=True)
+                        continue
+                r = run_cell(arch, shape, multi, out_dir, tune=args.tune)
+                msg = r.get("error", "")[:120]
+                extra = ""
+                if r["status"] == "ok":
+                    rf = r["roofline"]
+                    extra = (f"bottleneck={rf['bottleneck']} "
+                             f"c={rf['compute_s']:.4f}s m={rf['memory_s']:.4f}s "
+                             f"x={rf['collective_s']:.4f}s")
+                print(f"[{r['status']:7s}] {name} wall={r['wall_s']}s {extra}{msg}",
+                      flush=True)
+
+
+if __name__ == "__main__":
+    main()

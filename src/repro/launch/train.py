@@ -1,0 +1,71 @@
+"""Training launcher.
+
+Single-host runs execute directly (smoke-size on CPU; full configs on TPU).
+The execution-idle telemetry + Algorithm-1 controller are first-class flags.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b --smoke \
+        --steps 20 --batch 8 --seq 128 --controller --checkpoint-dir /tmp/ck
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.configs import get_config, get_smoke_config
+from repro.core.states import DeviceState
+from repro.telemetry import analyze_job
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument("--controller", action="store_true",
+                    help="enable the Algorithm-1 execution-idle controller")
+    ap.add_argument("--platform", default="tpu_v5e")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    tc = TrainerConfig(steps=args.steps, checkpoint_every=args.checkpoint_every,
+                       checkpoint_dir=args.checkpoint_dir, lr=args.lr)
+    trainer = Trainer(cfg, tc, global_batch=args.batch, seq_len=args.seq,
+                      platform=args.platform, controller=args.controller,
+                      seed=args.seed)
+    report = trainer.run()
+
+    frame = trainer.sampler.frame()
+    telemetry = {}
+    if len(frame):
+        ja = analyze_job(frame, job_id=1, min_duration_s=1.0)
+        telemetry = {
+            "exec_idle_time_fraction": round(ja.exec_idle_time_fraction, 4),
+            "exec_idle_energy_fraction": round(ja.exec_idle_energy_fraction, 4),
+            "active_s": ja.breakdown.time_s[DeviceState.ACTIVE],
+            "exec_idle_s": ja.breakdown.time_s[DeviceState.EXECUTION_IDLE],
+            "energy_j": round(ja.breakdown.total_energy_j, 1),
+        }
+    print(json.dumps({
+        "arch": cfg.name,
+        "steps": report.steps_run,
+        "final_loss": round(report.final_loss, 4),
+        "loss_first": round(report.losses[0], 4) if report.losses else None,
+        "resumed_from": report.resumed_from,
+        "stragglers": report.straggler_events,
+        "wall_s": round(report.wall_s, 1),
+        "telemetry": telemetry,
+        "controller_downscales": (trainer.controller.stats.downscale_events
+                                  if trainer.controller else None),
+    }, indent=1))
+
+
+if __name__ == "__main__":
+    main()

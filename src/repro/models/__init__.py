@@ -1,0 +1,2 @@
+"""Model zoo: 7 families covering the 10 assigned architectures."""
+from repro.models import api  # noqa: F401

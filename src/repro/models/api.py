@@ -1,0 +1,172 @@
+"""Uniform LM interface over all model families.
+
+Every family module provides:
+    init_params(key, cfg[, ep_size])          -> params pytree
+    abstract_params(cfg[, ep_size])            -> ShapeDtypeStruct pytree
+    loss_fn(params, batch, cfg[, dist])        -> (loss, metrics)
+    init_cache(cfg, batch, max_len)            -> cache pytree
+    prefill(params, tokens, cfg, ...)          -> (cache, last_logits)
+    decode_step(params, cache, tokens, cfg, ...)-> (cache, logits)
+
+This module dispatches on ``cfg.family`` and normalizes the extra-arg
+differences (dist context for MoE families; frames/vision stubs for
+multimodal families).
+"""
+from __future__ import annotations
+
+import inspect
+from types import ModuleType
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.context import DistContext, LOCAL
+from repro.models import dense, hymba, mla, moe, rwkv, vlm, whisper
+
+_FAMILY_MODULES: dict[str, ModuleType] = {
+    "dense": dense,
+    "moe": moe,
+    "mla_moe": mla,
+    "rwkv": rwkv,
+    "hybrid": hymba,
+    "encdec": whisper,
+    "vlm": vlm,
+}
+
+
+def family_module(cfg: ModelConfig) -> ModuleType:
+    return _FAMILY_MODULES[cfg.family]
+
+
+def _accepts(fn, name: str) -> bool:
+    return name in inspect.signature(fn).parameters
+
+
+# --------------------------------------------------------------------------- #
+def init_params(key, cfg: ModelConfig, ep_size: int = 1):
+    fn = family_module(cfg).init_params
+    if _accepts(fn, "ep_size"):
+        return fn(key, cfg, ep_size=ep_size)
+    return fn(key, cfg)
+
+
+def abstract_params(cfg: ModelConfig, ep_size: int = 1):
+    fn = family_module(cfg).abstract_params
+    if _accepts(fn, "ep_size"):
+        return fn(cfg, ep_size=ep_size)
+    return fn(cfg)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, dist: DistContext = LOCAL):
+    fn = family_module(cfg).loss_fn
+    if _accepts(fn, "dist"):
+        return fn(params, batch, cfg, dist=dist)
+    return fn(params, batch, cfg)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    return family_module(cfg).init_cache(cfg, batch, max_len)
+
+
+def prefill(params, tokens, cfg: ModelConfig, dist: DistContext = LOCAL,
+            frames=None, vision=None):
+    fn = family_module(cfg).prefill
+    kwargs = {}
+    if _accepts(fn, "dist"):
+        kwargs["dist"] = dist
+    if _accepts(fn, "frames"):
+        kwargs["frames"] = frames
+    if _accepts(fn, "vision"):
+        kwargs["vision"] = vision
+    return fn(params, tokens, cfg, **kwargs)
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig, dist: DistContext = LOCAL):
+    fn = family_module(cfg).decode_step
+    if _accepts(fn, "dist"):
+        return fn(params, cache, tokens, cfg, dist=dist)
+    return fn(params, cache, tokens, cfg)
+
+
+def pad_cache(cfg: ModelConfig, cache, max_len: int):
+    """Grow a prefill-sized cache so decode_step has room for new tokens.
+
+    decode_step writes at position cache['len']; a cache whose sequence dim
+    equals the prefill length has no free slot (dynamic_update_slice would
+    clamp and corrupt the last entry). Families with O(1) state (rwkv) are
+    returned unchanged; hymba pads only its global-attention layers (window
+    layers are ring buffers).
+    """
+    import jax.numpy as jnp
+
+    def pad(leaf, axis: int, target: int):
+        cur = leaf.shape[axis]
+        if cur >= target:
+            return leaf
+        width = [(0, 0)] * leaf.ndim
+        width[axis] = (0, target - cur)
+        return jnp.pad(leaf, width)
+
+    if cfg.family in ("dense", "moe"):
+        return dict(cache, k=pad(cache["k"], 2, max_len),
+                    v=pad(cache["v"], 2, max_len))
+    if cfg.family == "mla_moe":
+        return dict(cache, ckv=pad(cache["ckv"], 2, max_len),
+                    krope=pad(cache["krope"], 2, max_len))
+    if cfg.family == "encdec":
+        return dict(cache, k=pad(cache["k"], 2, max_len),
+                    v=pad(cache["v"], 2, max_len))
+    if cfg.family == "vlm":
+        return dict(cache, k=pad(cache["k"], 3, max_len),
+                    v=pad(cache["v"], 3, max_len))
+    if cfg.family == "hybrid":
+        layers = []
+        for i, lc in enumerate(cache["layers"]):
+            if i in cfg.global_layers:
+                layers.append(dict(lc, k=pad(lc["k"], 1, max_len),
+                                   v=pad(lc["v"], 1, max_len)))
+            else:
+                layers.append(lc)
+        return dict(cache, layers=layers)
+    return cache  # rwkv: O(1) state
+
+
+# --------------------------------------------------------------------------- #
+def make_batch(cfg: ModelConfig, batch: int, seq: int, key=None):
+    """A synthetic training batch matching the family's input signature."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    tokens = jax.random.randint(k1, (batch, seq), 0, cfg.vocab_size, jnp.int32)
+    labels = jax.random.randint(k2, (batch, seq), 0, cfg.vocab_size, jnp.int32)
+    out = {"tokens": tokens, "labels": labels}
+    if cfg.family == "encdec":
+        out["frames"] = jax.random.normal(
+            k3, (batch, cfg.n_frames, cfg.d_model), jnp.float32)
+    if cfg.family == "vlm":
+        out["vision"] = jax.random.normal(
+            k3, (batch, cfg.n_vision_tokens, cfg.d_model), jnp.float32)
+    return out
+
+
+def count_params(params) -> int:
+    return sum(int(jnp.size(x)) for x in jax.tree.leaves(params))
+
+
+def count_params_abstract(cfg: ModelConfig, ep_size: int = 1) -> int:
+    import numpy as np
+    tree = abstract_params(cfg, ep_size)
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def active_params_abstract(cfg: ModelConfig) -> int:
+    """Active parameters per token (MoE: top_k + shared experts only)."""
+    total = count_params_abstract(cfg)
+    if not cfg.is_moe:
+        return total
+    n_moe_layers = cfg.n_layers - cfg.first_k_dense
+    per_expert = 3 * cfg.d_model * cfg.d_expert
+    import math
+    e_pad = math.ceil(cfg.n_experts / 1) if True else 0
+    inactive = n_moe_layers * (cfg.n_experts - cfg.top_k) * per_expert
+    return total - inactive

@@ -1,0 +1,323 @@
+"""Shared neural building blocks for the model zoo.
+
+Pure-functional JAX; params are nested dicts of arrays. All families use:
+RMSNorm (f32 accumulation), RoPE, GQA/MQA attention with blocked softmax
+(bounded memory at 32k prefill), SwiGLU/GeGLU MLPs, and a vocab-parallel
+cross-entropy that never materializes one-hot labels.
+
+Activation sharding: model code stays mesh-agnostic but calls
+``hint(x, kind)`` at layout-critical points; the launcher installs a hook
+(``set_shard_hook``) that turns hints into ``with_sharding_constraint``s.
+Without a hook, hints are no-ops (CPU smoke tests).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# --------------------------------------------------------------------------- #
+# activation-sharding hints (installed by launch/distributed code)
+# --------------------------------------------------------------------------- #
+_SHARD_HOOK: Callable | None = None
+
+
+def set_shard_hook(fn: Callable | None) -> None:
+    """fn(x, kind) -> x with sharding constraint. kinds:
+    'act_bsd' (B,S,D), 'act_bshd' (B,S,H,hd), 'kv_bskd' (B,S,KV,hd),
+    'logits' (B,S,V)."""
+    global _SHARD_HOOK
+    _SHARD_HOOK = fn
+
+
+def hint(x, kind: str):
+    if _SHARD_HOOK is None:
+        return x
+    return _SHARD_HOOK(x, kind)
+
+
+# --------------------------------------------------------------------------- #
+# init helpers
+# --------------------------------------------------------------------------- #
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    scale = scale if scale is not None else (1.0 / np.sqrt(d_in))
+    return (jax.random.normal(key, (d_in, d_out), dtype=jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d), dtype=jnp.float32) * 0.02).astype(dtype)
+
+
+def split_keys(key, n: int):
+    return list(jax.random.split(key, n))
+
+
+# --------------------------------------------------------------------------- #
+# norms
+# --------------------------------------------------------------------------- #
+def rmsnorm(x, weight, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    normed = x32 * jax.lax.rsqrt(var + eps)
+    return (normed * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(x, weight, bias, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    normed = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (normed * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def groupnorm_heads(x, weight, bias, n_heads: int, eps: float = 1e-5):
+    """GroupNorm over head groups; x: (..., n_heads * head_dim). Used by RWKV."""
+    shape = x.shape
+    xh = x.reshape(*shape[:-1], n_heads, shape[-1] // n_heads).astype(jnp.float32)
+    mu = jnp.mean(xh, axis=-1, keepdims=True)
+    var = jnp.var(xh, axis=-1, keepdims=True)
+    xn = ((xh - mu) * jax.lax.rsqrt(var + eps)).reshape(shape)
+    return (xn * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# rotary embeddings
+# --------------------------------------------------------------------------- #
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float64) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (B, S, H, hd); positions: (S,) or (B, S). Half-rotation convention."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta), dtype=jnp.float32)
+    if positions.ndim == 1:
+        angles = positions.astype(jnp.float32)[:, None] * freqs[None, :]     # (S, hd/2)
+        angles = angles[None, :, None, :]                                    # (1, S, 1, hd/2)
+    else:
+        angles = positions.astype(jnp.float32)[..., None] * freqs            # (B, S, hd/2)
+        angles = angles[:, :, None, :]                                       # (B, S, 1, hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# attention
+# --------------------------------------------------------------------------- #
+NEG_INF = -1e30
+
+
+def _expand_kv(k, q_per_kv: int):
+    """(B, S, KV, hd) -> (B, S, KV*q_per_kv, hd) by repeat (GQA)."""
+    if q_per_kv == 1:
+        return k
+    b, s, kv, hd = k.shape
+    return jnp.repeat(k, q_per_kv, axis=2)
+
+
+def attention(
+    q, k, v,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    q_block: int = 1024,
+    logits_soft_cap: float = 0.0,
+):
+    """Blocked multi-head attention.
+
+    q: (B, Sq, H, hd); k/v: (B, Sk, KV, hd) with H % KV == 0.
+    Processes queries in blocks of ``q_block`` so peak score memory is
+    O(Sk * q_block) per head — required at 32k prefill. ``window > 0`` adds a
+    sliding-window constraint (keys within [pos - window + 1, pos]).
+    ``q_offset`` is the absolute position of q[0] relative to k[0].
+    """
+    b, sq, h, hd = q.shape
+    kv = k.shape[2]
+    vd = v.shape[-1]             # may differ from hd (MLA: q/k 192, v 128)
+    q = hint(q, "act_bshd")
+    k = hint(k, "kv_bskd")
+    v = hint(v, "kv_bskd")
+    from repro.models import tuning
+    grouped = tuning.ACTIVE.attn_grouped
+    if not grouped:
+        k = _expand_kv(k, h // kv)
+        v = _expand_kv(v, h // kv)
+    scale = 1.0 / np.sqrt(hd)
+
+    def _mask(bq, blk_start, extra_dims):
+        q_pos = q_offset + blk_start + jnp.arange(bq)
+        k_pos = jnp.arange(k.shape[1])
+        mask = jnp.ones((bq, k.shape[1]), dtype=bool)
+        if causal:
+            mask &= k_pos[None, :] <= q_pos[:, None]
+        if window > 0:
+            mask &= k_pos[None, :] > q_pos[:, None] - window
+        return mask.reshape((1,) * extra_dims + mask.shape)
+
+    def block_attn(q_blk, blk_start):
+        # q_blk: (B, Bq, H, hd)
+        if grouped:
+            bq = q_blk.shape[1]
+            qg = q_blk.reshape(b, bq, kv, h // kv, hd)
+            scores = jnp.einsum("bqgpd,bkgd->bgpqk", qg, k,
+                                preferred_element_type=jnp.float32) * scale
+            if logits_soft_cap > 0.0:
+                scores = logits_soft_cap * jnp.tanh(scores / logits_soft_cap)
+            scores = jnp.where(_mask(bq, blk_start, 3), scores, NEG_INF)
+            probs = jax.nn.softmax(scores, axis=-1)
+            if tuning.ACTIVE.attn_probs_bf16:
+                probs = probs.astype(jnp.bfloat16)
+            out = jnp.einsum("bgpqk,bkgd->bqgpd", probs.astype(v.dtype), v,
+                             preferred_element_type=jnp.float32)
+            return out.reshape(b, bq, h, vd).astype(q_blk.dtype)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q_blk.astype(jnp.float32),
+                            k.astype(jnp.float32)) * scale
+        if logits_soft_cap > 0.0:
+            scores = logits_soft_cap * jnp.tanh(scores / logits_soft_cap)
+        scores = jnp.where(_mask(q_blk.shape[1], blk_start, 2), scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        if tuning.ACTIVE.attn_probs_bf16:
+            probs = probs.astype(jnp.bfloat16)  # halves the score traffic
+        return jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+
+    if tuning.ACTIVE.attn_block_remat:
+        block_attn = jax.checkpoint(block_attn, static_argnums=(1,))
+    q_block = tuning.ACTIVE.q_block if tuning.ACTIVE.q_block != 1024 else q_block
+
+    if sq <= q_block or sq % q_block:
+        # short or non-divisible sequences: one block (whisper's 1500 frames)
+        return block_attn(q, 0)
+
+    n_blocks = sq // q_block
+    q_blocks = q.reshape(b, n_blocks, q_block, h, hd).transpose(1, 0, 2, 3, 4)
+
+    def body(i, _):
+        return None, block_attn(q_blocks[i], i * q_block)
+
+    _, out = jax.lax.scan(lambda c, i: body(i, c), None, jnp.arange(n_blocks))
+    return out.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, vd)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window: int = 0):
+    """Single-token attention against a (possibly ring-buffered) KV cache.
+
+    q: (B, 1, H, hd); caches: (B, S, KV, hd); cache_len: scalar int — number
+    of valid entries (absolute position of the new token is cache_len).
+    For ``window > 0`` the cache is a ring buffer of size S=window and all
+    entries are valid once full.
+    """
+    from repro.models import tuning
+    b, s, kv, hd = k_cache.shape
+    h = q.shape[2]
+    q = hint(q, "act_bshd")
+    k_cache = hint(k_cache, "kv_cache_bskd")
+    v_cache = hint(v_cache, "kv_cache_bskd")
+    scale = 1.0 / np.sqrt(hd)
+    positions = jnp.arange(s)
+    if window > 0:
+        valid = positions < jnp.minimum(cache_len, s)
+    else:
+        valid = positions < cache_len
+
+    if tuning.ACTIVE.attn_grouped:
+        # per-group contraction: no q_per_kv-times KV copy, bf16 operands,
+        # f32 accumulation
+        qg = q.reshape(b, 1, kv, h // kv, hd)[:, 0]          # (B, KV, qpk, hd)
+        scores = jnp.einsum("bgpd,bsgd->bgps", qg, k_cache,
+                            preferred_element_type=jnp.float32) * scale
+        scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        if tuning.ACTIVE.attn_probs_bf16:
+            probs = probs.astype(jnp.bfloat16)
+        out = jnp.einsum("bgps,bsgd->bgpd", probs.astype(v_cache.dtype), v_cache,
+                         preferred_element_type=jnp.float32)
+        return out.reshape(b, 1, h, hd).astype(q.dtype)
+
+    kc = _expand_kv(k_cache, h // kv)
+    vc = _expand_kv(v_cache, h // kv)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        kc.astype(jnp.float32)) * scale     # (B, H, 1, S)
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs.astype(vc.dtype), vc)
+
+
+# --------------------------------------------------------------------------- #
+# MLPs
+# --------------------------------------------------------------------------- #
+def act_fn(name: str) -> Callable:
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[name]
+
+
+def glu_mlp(x, w_gate, w_up, w_down, act: str = "silu"):
+    """SwiGLU / GeGLU: down(act(gate(x)) * up(x))."""
+    g = act_fn(act)(x @ w_gate)
+    return (g * (x @ w_up)) @ w_down
+
+
+def dense_mlp(x, w_up, b_up, w_down, b_down, act: str = "gelu"):
+    """Plain 2-layer MLP with biases (whisper)."""
+    return act_fn(act)(x @ w_up + b_up) @ w_down + b_down
+
+
+# --------------------------------------------------------------------------- #
+# losses
+# --------------------------------------------------------------------------- #
+def cross_entropy(logits, labels, mask=None):
+    """logits: (..., V) any float dtype; labels int (...,). Mean over mask.
+
+    Vocab-parallel-friendly: the label score uses an iota-compare select that
+    partitions cleanly when V is sharded (each shard reduces its slice, then
+    one small all-reduce) — a gather here would make GSPMD replicate the
+    full logits tensor.
+    """
+    logits = hint(logits.astype(jnp.float32), "logits")
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          logits.ndim - 1)
+    picked = jnp.where(vocab_iota == labels[..., None], logits, 0.0)
+    label_logit = jnp.sum(picked, axis=-1)
+    nll = lse - label_logit
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def lm_logits(x, embed, out_head=None):
+    """Project hidden states to vocabulary (tied embeddings by default)."""
+    w = embed.T if out_head is None else out_head
+    return x @ w
+
+
+# --------------------------------------------------------------------------- #
+# scan utilities
+# --------------------------------------------------------------------------- #
+def chunked_scan(step, init, xs, chunk: int = 64):
+    """`lax.scan` with chunk-boundary checkpointing.
+
+    Equivalent to ``lax.scan(step, init, xs)`` but the backward pass stores the
+    carry only at chunk boundaries and rematerializes within chunks — required
+    for long recurrences (WKV, selective scan) whose carries are large.
+    xs: pytree with leading (time) axis; falls back to a plain scan when the
+    time axis is not divisible by ``chunk``.
+    """
+    length = jax.tree.leaves(xs)[0].shape[0]
+    if chunk <= 1 or length % chunk or length <= chunk:
+        return jax.lax.scan(step, init, xs)
+    n = length // chunk
+    xs_r = jax.tree.map(lambda a: a.reshape(n, chunk, *a.shape[1:]), xs)
+
+    @jax.checkpoint
+    def inner(carry, xc):
+        return jax.lax.scan(step, carry, xc)
+
+    final, ys = jax.lax.scan(inner, init, xs_r)
+    ys = jax.tree.map(lambda a: a.reshape(length, *a.shape[2:]), ys)
+    return final, ys

@@ -1,0 +1,195 @@
+"""Dense decoder-only transformer (gemma-2b, granite-3-8b, qwen1.5-*, llama-13b).
+
+GQA/MQA attention with RoPE (optional QKV bias for qwen), SwiGLU/GeGLU MLP,
+RMSNorm, tied embeddings optional. Layer weights are stacked on axis 0 and the
+stack is traversed with ``lax.scan`` (compact HLO at any depth) with
+activation rematerialization per layer.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+
+
+def param_dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# parameters
+# --------------------------------------------------------------------------- #
+def init_params(key, cfg: ModelConfig):
+    dt = param_dtype(cfg)
+    hd = cfg.resolved_head_dim
+    l, d, f = cfg.n_layers, cfg.d_model, cfg.d_ff
+    keys = cm.split_keys(key, 12)
+
+    def stack(initializer, *shape):
+        def one(k):
+            return initializer(k, *shape)
+        return jax.vmap(one)(jax.random.split(keys.pop(), l))
+
+    layers = {
+        "attn_norm": jnp.ones((l, d), dt),
+        "wq": stack(lambda k: cm.dense_init(k, d, cfg.n_heads * hd, dt)),
+        "wk": stack(lambda k: cm.dense_init(k, d, cfg.n_kv_heads * hd, dt)),
+        "wv": stack(lambda k: cm.dense_init(k, d, cfg.n_kv_heads * hd, dt)),
+        "wo": stack(lambda k: cm.dense_init(k, cfg.n_heads * hd, d, dt)),
+        "mlp_norm": jnp.ones((l, d), dt),
+        "w_gate": stack(lambda k: cm.dense_init(k, d, f, dt)),
+        "w_up": stack(lambda k: cm.dense_init(k, d, f, dt)),
+        "w_down": stack(lambda k: cm.dense_init(k, f, d, dt)),
+    }
+    if cfg.qkv_bias:
+        layers["bq"] = jnp.zeros((l, cfg.n_heads * hd), dt)
+        layers["bk"] = jnp.zeros((l, cfg.n_kv_heads * hd), dt)
+        layers["bv"] = jnp.zeros((l, cfg.n_kv_heads * hd), dt)
+
+    params = {
+        "embed": cm.embed_init(keys.pop(), cfg.vocab_size, d, dt),
+        "final_norm": jnp.ones((d,), dt),
+        "layers": layers,
+    }
+    if not cfg.tie_embeddings:
+        params["out_head"] = cm.dense_init(keys.pop(), d, cfg.vocab_size, dt)
+    return params
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+# --------------------------------------------------------------------------- #
+# blocks
+# --------------------------------------------------------------------------- #
+def _qkv(x, lp, cfg: ModelConfig):
+    hd = cfg.resolved_head_dim
+    b, s, _ = x.shape
+    q = x @ lp["wq"]
+    k = x @ lp["wk"]
+    v = x @ lp["wv"]
+    if cfg.qkv_bias:
+        q = q + lp["bq"]
+        k = k + lp["bk"]
+        v = v + lp["bv"]
+    q = q.reshape(b, s, cfg.n_heads, hd)
+    k = k.reshape(b, s, cfg.n_kv_heads, hd)
+    v = v.reshape(b, s, cfg.n_kv_heads, hd)
+    return q, k, v
+
+
+def _block(x, lp, cfg: ModelConfig, positions, q_block: int = 1024):
+    """One pre-norm transformer block over a full sequence."""
+    x = cm.hint(x, "act_bsd")
+    h = cm.rmsnorm(x, lp["attn_norm"], cfg.norm_eps)
+    q, k, v = _qkv(h, lp, cfg)
+    q = cm.apply_rope(q, positions, cfg.rope_theta)
+    k = cm.apply_rope(k, positions, cfg.rope_theta)
+    attn = cm.attention(q, k, v, causal=True, q_block=q_block)
+    x = x + attn.reshape(x.shape[0], x.shape[1], -1) @ lp["wo"]
+    h = cm.rmsnorm(x, lp["mlp_norm"], cfg.norm_eps)
+    x = x + cm.glu_mlp(h, lp["w_gate"], lp["w_up"], lp["w_down"], cfg.act)
+    return x
+
+
+def _scan_blocks(x, layers, cfg: ModelConfig, positions, remat: bool = True):
+    block = functools.partial(_block, cfg=cfg, positions=positions)
+    if remat:
+        block = jax.checkpoint(block)
+
+    def body(carry, lp):
+        return block(carry, lp), None
+
+    x, _ = jax.lax.scan(body, x, layers)
+    return x
+
+
+# --------------------------------------------------------------------------- #
+# training loss
+# --------------------------------------------------------------------------- #
+def loss_fn(params, batch, cfg: ModelConfig):
+    tokens, labels = batch["tokens"], batch["labels"]
+    b, s = tokens.shape
+    x = params["embed"][tokens]
+    positions = jnp.arange(s)
+    x = _scan_blocks(x, params["layers"], cfg, positions)
+    x = cm.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = cm.lm_logits(x, params["embed"], params.get("out_head"))
+    loss = cm.cross_entropy(logits, labels)
+    return loss, {"loss": loss}
+
+
+# --------------------------------------------------------------------------- #
+# serving: prefill + decode
+# --------------------------------------------------------------------------- #
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    hd = cfg.resolved_head_dim
+    dt = param_dtype(cfg)
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, hd)
+    return {
+        "k": jnp.zeros(shape, dt),
+        "v": jnp.zeros(shape, dt),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(params, tokens, cfg: ModelConfig, q_block: int = 1024):
+    """Full-sequence forward that also populates the KV cache.
+
+    Returns (cache, logits_last) — logits for the final position only.
+    """
+    b, s = tokens.shape
+    x = params["embed"][tokens]
+    positions = jnp.arange(s)
+
+    def body(carry, lp):
+        x = cm.hint(carry, "act_bsd")
+        h = cm.rmsnorm(x, lp["attn_norm"], cfg.norm_eps)
+        q, k, v = _qkv(h, lp, cfg)
+        q = cm.apply_rope(q, positions, cfg.rope_theta)
+        k = cm.apply_rope(k, positions, cfg.rope_theta)
+        attn = cm.attention(q, k, v, causal=True, q_block=q_block)
+        x = x + attn.reshape(b, s, -1) @ lp["wo"]
+        h = cm.rmsnorm(x, lp["mlp_norm"], cfg.norm_eps)
+        x = x + cm.glu_mlp(h, lp["w_gate"], lp["w_up"], lp["w_down"], cfg.act)
+        return x, (k, v)
+
+    x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+    x = cm.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = cm.lm_logits(x[:, -1:], params["embed"], params.get("out_head"))
+    cache = {"k": ks, "v": vs, "len": jnp.asarray(s, jnp.int32)}
+    return cache, logits
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig):
+    """One decode step. tokens: (B, 1). Returns (new_cache, logits)."""
+    b = tokens.shape[0]
+    x = params["embed"][tokens]
+    pos = cache["len"]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+
+    def body(carry, layer_in):
+        x = carry
+        lp, k_cache, v_cache = layer_in
+        h = cm.rmsnorm(x, lp["attn_norm"], cfg.norm_eps)
+        q, k, v = _qkv(h, lp, cfg)
+        q = cm.apply_rope(q, positions, cfg.rope_theta)
+        k = cm.apply_rope(k, positions, cfg.rope_theta)
+        k_cache = jax.lax.dynamic_update_slice(k_cache, k, (0, pos, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(v_cache, v, (0, pos, 0, 0))
+        attn = cm.decode_attention(q, k_cache, v_cache, pos + 1)
+        x = x + attn.reshape(b, 1, -1) @ lp["wo"]
+        h = cm.rmsnorm(x, lp["mlp_norm"], cfg.norm_eps)
+        x = x + cm.glu_mlp(h, lp["w_gate"], lp["w_up"], lp["w_down"], cfg.act)
+        return x, (k_cache, v_cache)
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    x = cm.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = cm.lm_logits(x, params["embed"], params.get("out_head"))
+    new_cache = {"k": ks, "v": vs, "len": cache["len"] + 1}
+    return new_cache, logits

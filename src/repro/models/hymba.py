@@ -1,0 +1,302 @@
+"""Hymba (arXiv:2411.13676): hybrid-head LM — parallel attention + Mamba
+(SSM) heads in every layer.
+
+Each layer runs a GQA attention branch and a Mamba selective-scan branch on
+the same normed input; branch outputs are RMS-normalized, averaged with
+learned per-branch scales, and added to the residual, followed by a SwiGLU
+MLP. Most layers use sliding-window attention (``cfg.window``); layers in
+``cfg.global_layers`` use full attention — so decode state is
+O(window + ssm_state) except for the few global layers, which is why
+hymba-1.5b qualifies for ``long_500k``.
+
+Layers are NOT weight-stacked (mixed window/global cache shapes); a Python
+loop over 32 layers keeps the HLO acceptable.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+
+
+# --------------------------------------------------------------------------- #
+# parameters
+# --------------------------------------------------------------------------- #
+def _init_layer(key, cfg: ModelConfig):
+    dt = jnp.dtype(cfg.dtype)
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    di, n = cfg.d_inner, cfg.ssm_state
+    dt_rank = max(1, math.ceil(d / 16))
+    ks = cm.split_keys(key, 12)
+    p = {
+        "attn_norm": jnp.ones((d,), dt),
+        # attention branch
+        "wq": cm.dense_init(ks[0], d, cfg.n_heads * hd, dt),
+        "wk": cm.dense_init(ks[1], d, cfg.n_kv_heads * hd, dt),
+        "wv": cm.dense_init(ks[2], d, cfg.n_kv_heads * hd, dt),
+        "wo": cm.dense_init(ks[3], cfg.n_heads * hd, d, dt),
+        "attn_out_norm": jnp.ones((d,), dt),
+        # mamba branch
+        "in_proj": cm.dense_init(ks[4], d, 2 * di, dt),
+        "conv_w": (jax.random.normal(ks[5], (cfg.conv_kernel, di), jnp.float32) * 0.2).astype(dt),
+        "conv_b": jnp.zeros((di,), dt),
+        "x_proj": cm.dense_init(ks[6], di, dt_rank + 2 * n, dt),
+        "dt_proj": cm.dense_init(ks[7], dt_rank, di, dt),
+        "dt_bias": jnp.zeros((di,), jnp.float32),
+        "a_log": jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32), (di, 1))),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "ssm_out_proj": cm.dense_init(ks[8], di, d, dt),
+        "ssm_out_norm": jnp.ones((d,), dt),
+        # fusion + MLP
+        "beta_attn": jnp.ones((), jnp.float32),
+        "beta_ssm": jnp.ones((), jnp.float32),
+        "mlp_norm": jnp.ones((d,), dt),
+        "w_gate": cm.dense_init(ks[9], d, cfg.d_ff, dt),
+        "w_up": cm.dense_init(ks[10], d, cfg.d_ff, dt),
+        "w_down": cm.dense_init(ks[11], cfg.d_ff, d, dt),
+    }
+    return p
+
+
+def init_params(key, cfg: ModelConfig):
+    dt = jnp.dtype(cfg.dtype)
+    keys = cm.split_keys(key, cfg.n_layers + 2)
+    return {
+        "embed": cm.embed_init(keys[0], cfg.vocab_size, cfg.d_model, dt),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+        "layers": [_init_layer(keys[i + 1], cfg) for i in range(cfg.n_layers)],
+    }
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+# --------------------------------------------------------------------------- #
+# mamba branch
+# --------------------------------------------------------------------------- #
+def _causal_conv(x, w, b):
+    """Depthwise causal 1D conv. x: (B,S,I); w: (K,I)."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        out = out + pad[:, i:i + x.shape[1]] * w[i]
+    return out + b
+
+
+def selective_scan(u, dt, a, b_t, c_t, d_skip, h0=None):
+    """u/dt: (B,S,I); a: (I,N); b_t/c_t: (B,S,N). Returns (y, h_final)."""
+    bsz, s, di = u.shape
+    n = a.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((bsz, di, n), jnp.float32)
+
+    def step(h, inp):
+        u_t, dt_t, bt, ct = inp                               # (B,I),(B,I),(B,N),(B,N)
+        da = jnp.exp(dt_t[..., None] * a)                     # (B,I,N)
+        dbu = dt_t[..., None] * bt[:, None, :] * u_t[..., None]
+        h = da * h + dbu
+        y = jnp.einsum("bin,bn->bi", h, ct)
+        return h, y
+
+    xs = (
+        jnp.moveaxis(u.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(b_t.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(c_t.astype(jnp.float32), 1, 0),
+    )
+    h, ys = cm.chunked_scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1) + u.astype(jnp.float32) * d_skip
+    return y, h
+
+
+def mamba_branch(x, lp, cfg: ModelConfig, conv_state=None, ssm_state=None):
+    """Full-sequence Mamba. Returns (out, new_conv_state, new_ssm_state)."""
+    b, s, d = x.shape
+    di, n = cfg.d_inner, cfg.ssm_state
+    dt_rank = lp["dt_proj"].shape[0]
+    xz = x @ lp["in_proj"]
+    u, z = xz[..., :di], xz[..., di:]
+
+    if conv_state is not None:  # prepend carried (K-1) inputs
+        u_ext = jnp.concatenate([conv_state.astype(u.dtype), u], axis=1)
+        conv_out = _causal_conv(u_ext, lp["conv_w"], lp["conv_b"])[:, conv_state.shape[1]:]
+    else:
+        conv_out = _causal_conv(u, lp["conv_w"], lp["conv_b"])
+    new_conv_state = (jnp.concatenate([conv_state, u], axis=1)[:, -(cfg.conv_kernel - 1):]
+                      if conv_state is not None else u[:, -(cfg.conv_kernel - 1):])
+    u = jax.nn.silu(conv_out)
+
+    proj = u @ lp["x_proj"]
+    dt_in, b_t, c_t = (proj[..., :dt_rank], proj[..., dt_rank:dt_rank + n],
+                       proj[..., dt_rank + n:])
+    dt = jax.nn.softplus(dt_in @ lp["dt_proj"] + lp["dt_bias"])
+    a = -jnp.exp(lp["a_log"])
+    y, new_ssm = selective_scan(u, dt, a, b_t, c_t, lp["d_skip"], ssm_state)
+    y = (y.astype(x.dtype) * jax.nn.silu(z)) @ lp["ssm_out_proj"]
+    return y, new_conv_state, new_ssm
+
+
+def mamba_step(x, lp, cfg: ModelConfig, conv_state, ssm_state):
+    """Single-token Mamba. x: (B,1,D); conv_state: (B,K-1,I); ssm: (B,I,N)."""
+    b = x.shape[0]
+    di, n = cfg.d_inner, cfg.ssm_state
+    dt_rank = lp["dt_proj"].shape[0]
+    xz = x @ lp["in_proj"]
+    u, z = xz[..., :di], xz[..., di:]
+
+    window = jnp.concatenate([conv_state.astype(u.dtype), u], axis=1)  # (B,K,I)
+    conv_out = jnp.einsum("bki,ki->bi", window, lp["conv_w"]) + lp["conv_b"]
+    new_conv_state = window[:, 1:]
+    u1 = jax.nn.silu(conv_out)[:, None, :]                              # (B,1,I)
+
+    proj = u1 @ lp["x_proj"]
+    dt_in, b_t, c_t = (proj[..., :dt_rank], proj[..., dt_rank:dt_rank + n],
+                       proj[..., dt_rank + n:])
+    dt = jax.nn.softplus(dt_in @ lp["dt_proj"] + lp["dt_bias"])
+    a = -jnp.exp(lp["a_log"])
+    da = jnp.exp(dt[:, 0, :, None].astype(jnp.float32) * a)
+    dbu = (dt[:, 0, :, None] * b_t[:, 0, None, :] * u1[:, 0, :, None]).astype(jnp.float32)
+    h = da * ssm_state + dbu
+    y = jnp.einsum("bin,bn->bi", h, c_t[:, 0].astype(jnp.float32))
+    y = y + u1[:, 0].astype(jnp.float32) * lp["d_skip"]
+    y = (y[:, None, :].astype(x.dtype) * jax.nn.silu(z)) @ lp["ssm_out_proj"]
+    return y, new_conv_state, h
+
+
+# --------------------------------------------------------------------------- #
+# layer
+# --------------------------------------------------------------------------- #
+def _attn_qkv(h, lp, cfg: ModelConfig):
+    b, s, _ = h.shape
+    hd = cfg.resolved_head_dim
+    q = (h @ lp["wq"]).reshape(b, s, cfg.n_heads, hd)
+    k = (h @ lp["wk"]).reshape(b, s, cfg.n_kv_heads, hd)
+    v = (h @ lp["wv"]).reshape(b, s, cfg.n_kv_heads, hd)
+    return q, k, v
+
+
+def _fuse(attn_out, ssm_out, lp, cfg: ModelConfig):
+    dt = attn_out.dtype  # f32 betas must not promote the residual stream
+    a = cm.rmsnorm(attn_out, lp["attn_out_norm"], cfg.norm_eps) * \
+        lp["beta_attn"].astype(dt)
+    m = cm.rmsnorm(ssm_out, lp["ssm_out_norm"], cfg.norm_eps) * \
+        lp["beta_ssm"].astype(dt)
+    return (0.5 * (a + m)).astype(dt)
+
+
+def _layer_full(x, lp, cfg: ModelConfig, positions, is_global: bool,
+                q_block: int = 1024):
+    """Full-sequence hybrid layer (training path)."""
+    x = cm.hint(x, "act_bsd")
+    b, s, _ = x.shape
+    h = cm.rmsnorm(x, lp["attn_norm"], cfg.norm_eps)
+    q, k, v = _attn_qkv(h, lp, cfg)
+    q = cm.apply_rope(q, positions, cfg.rope_theta)
+    k = cm.apply_rope(k, positions, cfg.rope_theta)
+    window = 0 if is_global else cfg.window
+    attn = cm.attention(q, k, v, causal=True, window=window, q_block=q_block)
+    attn_out = attn.reshape(b, s, -1) @ lp["wo"]
+    ssm_out, _, _ = mamba_branch(h, lp, cfg)
+    x = x + _fuse(attn_out, ssm_out, lp, cfg)
+    h = cm.rmsnorm(x, lp["mlp_norm"], cfg.norm_eps)
+    return x + cm.glu_mlp(h, lp["w_gate"], lp["w_up"], lp["w_down"], cfg.act)
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    tokens, labels = batch["tokens"], batch["labels"]
+    x = params["embed"][tokens]
+    positions = jnp.arange(tokens.shape[1])
+    for i, lp in enumerate(params["layers"]):
+        layer = jax.checkpoint(
+            lambda x, lp, g=(i in cfg.global_layers): _layer_full(
+                x, lp, cfg, positions, g))
+        x = layer(x, lp)
+    x = cm.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = cm.lm_logits(x, params["embed"])
+    loss = cm.cross_entropy(logits, labels)
+    return loss, {"loss": loss}
+
+
+# --------------------------------------------------------------------------- #
+# serving
+# --------------------------------------------------------------------------- #
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Window KV caches for local layers, full caches for global layers,
+    plus per-layer conv/ssm state."""
+    dt = jnp.dtype(cfg.dtype)
+    hd = cfg.resolved_head_dim
+    cache: dict[str, object] = {"len": jnp.zeros((), jnp.int32), "layers": []}
+    for i in range(cfg.n_layers):
+        size = max_len if i in cfg.global_layers else min(cfg.window, max_len)
+        cache["layers"].append({
+            "k": jnp.zeros((batch, size, cfg.n_kv_heads, hd), dt),
+            "v": jnp.zeros((batch, size, cfg.n_kv_heads, hd), dt),
+            "conv": jnp.zeros((batch, cfg.conv_kernel - 1, cfg.d_inner), dt),
+            "ssm": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+        })
+    return cache
+
+
+def prefill(params, tokens, cfg: ModelConfig, q_block: int = 1024):
+    b, s = tokens.shape
+    x = params["embed"][tokens]
+    positions = jnp.arange(s)
+    layers_cache = []
+    for i, lp in enumerate(params["layers"]):
+        is_global = i in cfg.global_layers
+        h = cm.rmsnorm(x, lp["attn_norm"], cfg.norm_eps)
+        q, k, v = _attn_qkv(h, lp, cfg)
+        q = cm.apply_rope(q, positions, cfg.rope_theta)
+        k = cm.apply_rope(k, positions, cfg.rope_theta)
+        window = 0 if is_global else cfg.window
+        attn = cm.attention(q, k, v, causal=True, window=window, q_block=q_block)
+        attn_out = attn.reshape(b, s, -1) @ lp["wo"]
+        ssm_out, conv_state, ssm_state = mamba_branch(h, lp, cfg)
+        x = x + _fuse(attn_out, ssm_out, lp, cfg)
+        hm = cm.rmsnorm(x, lp["mlp_norm"], cfg.norm_eps)
+        x = x + cm.glu_mlp(hm, lp["w_gate"], lp["w_up"], lp["w_down"], cfg.act)
+        keep = s if is_global else min(cfg.window, s)
+        layers_cache.append({
+            "k": k[:, -keep:], "v": v[:, -keep:],
+            "conv": conv_state, "ssm": ssm_state,
+        })
+    x = cm.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = cm.lm_logits(x[:, -1:], params["embed"])
+    return {"len": jnp.asarray(s, jnp.int32), "layers": layers_cache}, logits
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig):
+    b = tokens.shape[0]
+    x = params["embed"][tokens]
+    pos = cache["len"]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    new_layers = []
+    for i, lp in enumerate(params["layers"]):
+        is_global = i in cfg.global_layers
+        lc = cache["layers"][i]
+        h = cm.rmsnorm(x, lp["attn_norm"], cfg.norm_eps)
+        q, k, v = _attn_qkv(h, lp, cfg)
+        q = cm.apply_rope(q, positions, cfg.rope_theta)
+        k = cm.apply_rope(k, positions, cfg.rope_theta)
+        size = lc["k"].shape[1]
+        slot = pos % size if not is_global else pos
+        k_cache = jax.lax.dynamic_update_slice(lc["k"], k, (0, slot, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(lc["v"], v, (0, slot, 0, 0))
+        attn = cm.decode_attention(q, k_cache, v_cache, pos + 1,
+                                   window=0 if is_global else size)
+        attn_out = attn.reshape(b, 1, -1) @ lp["wo"]
+        ssm_out, conv_state, ssm_state = mamba_step(h, lp, cfg, lc["conv"], lc["ssm"])
+        x = x + _fuse(attn_out, ssm_out, lp, cfg)
+        hm = cm.rmsnorm(x, lp["mlp_norm"], cfg.norm_eps)
+        x = x + cm.glu_mlp(hm, lp["w_gate"], lp["w_up"], lp["w_down"], cfg.act)
+        new_layers.append({"k": k_cache, "v": v_cache,
+                           "conv": conv_state, "ssm": ssm_state})
+    x = cm.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = cm.lm_logits(x, params["embed"])
+    return {"len": cache["len"] + 1, "layers": new_layers}, logits

@@ -1,0 +1,337 @@
+"""DeepSeek-V3-style model: MLA attention + (shared + routed) MoE + MTP.
+
+MLA (Multi-head Latent Attention, arXiv:2412.19437): queries through a
+low-rank bottleneck (q_lora_rank), keys/values through a compressed latent
+(kv_lora_rank) plus a shared RoPE key. Training/prefill run the *expanded*
+form; decode runs the *absorbed* form, attending directly in latent space so
+the KV cache is (kv_lora + rope) wide instead of 2*H*head_dim.
+
+Layer stack: first ``first_k_dense`` layers use a dense GLU FFN (width d_ff),
+the rest use 1 shared + n_experts routed top-k MoE (width d_expert).
+One MTP module (depth 1) predicts token t+2 (dense-FFN block — see DESIGN.md).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.context import DistContext, LOCAL
+from repro.models import common as cm
+from repro.models import moe as moe_mod
+
+MTP_LOSS_WEIGHT = 0.3
+
+
+# --------------------------------------------------------------------------- #
+# parameters
+# --------------------------------------------------------------------------- #
+def _init_mla_attn(key, cfg: ModelConfig, n_layers: int):
+    dt = jnp.dtype(cfg.dtype)
+    d, h = cfg.d_model, cfg.n_heads
+    nope, rope, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ql, kvl = cfg.q_lora_rank, cfg.kv_lora_rank
+    ks = cm.split_keys(key, 5)
+
+    def stack(k, d_in, d_out):
+        scale = 1.0 / jnp.sqrt(d_in)
+        return (jax.random.normal(k, (n_layers, d_in, d_out), jnp.float32) * scale).astype(dt)
+
+    return {
+        "attn_norm": jnp.ones((n_layers, d), dt),
+        "w_dq": stack(ks[0], d, ql),
+        "q_norm": jnp.ones((n_layers, ql), dt),
+        "w_uq": stack(ks[1], ql, h * (nope + rope)),
+        "w_dkv": stack(ks[2], d, kvl + rope),
+        "kv_norm": jnp.ones((n_layers, kvl), dt),
+        "w_ukv": stack(ks[3], kvl, h * (nope + vd)),
+        "wo": stack(ks[4], h * vd, d),
+    }
+
+
+def init_params(key, cfg: ModelConfig, ep_size: int = 1):
+    dt = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    n_dense, n_moe = cfg.first_k_dense, cfg.n_layers - cfg.first_k_dense
+    keys = cm.split_keys(key, 8)
+
+    def glu_stack(k, n_layers, width):
+        ks = cm.split_keys(k, 3)
+        scale_in, scale_out = 1.0 / jnp.sqrt(d), 1.0 / jnp.sqrt(width)
+        return {
+            "mlp_norm": jnp.ones((n_layers, d), dt),
+            "w_gate": (jax.random.normal(ks[0], (n_layers, d, width), jnp.float32) * scale_in).astype(dt),
+            "w_up": (jax.random.normal(ks[1], (n_layers, d, width), jnp.float32) * scale_in).astype(dt),
+            "w_down": (jax.random.normal(ks[2], (n_layers, width, d), jnp.float32) * scale_out).astype(dt),
+        }
+
+    dense_layers = {**_init_mla_attn(keys[0], cfg, n_dense),
+                    **glu_stack(keys[1], n_dense, cfg.d_ff)}
+    moe_layers = {**_init_mla_attn(keys[2], cfg, n_moe),
+                  "mlp_norm": jnp.ones((n_moe, d), dt),
+                  **moe_mod.init_moe_ffn(keys[3], cfg, ep_size, n_layers=n_moe)}
+
+    params = {
+        "embed": cm.embed_init(keys[4], cfg.vocab_size, d, dt),
+        "final_norm": jnp.ones((d,), dt),
+        "dense_layers": dense_layers,
+        "moe_layers": moe_layers,
+    }
+    if cfg.mtp_depth > 0:
+        mtp_attn = _init_mla_attn(keys[5], cfg, 1)
+        mtp = {**mtp_attn, **glu_stack(keys[6], 1, cfg.d_ff)}
+        params["mtp"] = {
+            "norm_h": jnp.ones((d,), dt),
+            "norm_e": jnp.ones((d,), dt),
+            "proj": cm.dense_init(keys[7], 2 * d, d, dt),
+            "layer": jax.tree.map(lambda a: a[0], mtp),
+        }
+    return params
+
+
+def abstract_params(cfg: ModelConfig, ep_size: int = 1):
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg, ep_size))
+
+
+# --------------------------------------------------------------------------- #
+# MLA attention — expanded form (train / prefill)
+# --------------------------------------------------------------------------- #
+def mla_attention(x, lp, cfg: ModelConfig, positions, q_block: int = 1024):
+    """Returns (attn_out (B,S,D), (ckv, k_rope) latents for the cache)."""
+    b, s, d = x.shape
+    h, nope, rope, vd = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    kvl = cfg.kv_lora_rank
+
+    cq = cm.rmsnorm(x @ lp["w_dq"], lp["q_norm"], cfg.norm_eps)
+    q = (cq @ lp["w_uq"]).reshape(b, s, h, nope + rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = cm.apply_rope(q_rope, positions, cfg.rope_theta)
+
+    ckv_full = x @ lp["w_dkv"]
+    ckv = cm.rmsnorm(ckv_full[..., :kvl], lp["kv_norm"], cfg.norm_eps)
+    k_rope = cm.apply_rope(ckv_full[..., kvl:].reshape(b, s, 1, rope),
+                           positions, cfg.rope_theta)
+
+    kv = (ckv @ lp["w_ukv"]).reshape(b, s, h, nope + vd)
+    k_nope, v = kv[..., :nope], kv[..., nope:]
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b, s, h, rope))], axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+
+    attn = cm.attention(q, k, v, causal=True, q_block=q_block)
+    out = attn.reshape(b, s, h * vd) @ lp["wo"]
+    return out, (ckv, k_rope[:, :, 0, :])
+
+
+# --------------------------------------------------------------------------- #
+# MLA attention — absorbed form (decode against latent cache)
+# --------------------------------------------------------------------------- #
+def mla_decode_attention(x, lp, cfg: ModelConfig, ckv_cache, krope_cache, pos):
+    """x: (B,1,D); caches: (B,S,kvl) / (B,S,rope). Returns (out, new latents)."""
+    b = x.shape[0]
+    h, nope, rope, vd = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    kvl = cfg.kv_lora_rank
+    positions = jnp.full((b, 1), pos, jnp.int32)
+
+    cq = cm.rmsnorm(x @ lp["w_dq"], lp["q_norm"], cfg.norm_eps)
+    q = (cq @ lp["w_uq"]).reshape(b, 1, h, nope + rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = cm.apply_rope(q_rope, positions, cfg.rope_theta)
+
+    ckv_full = x @ lp["w_dkv"]
+    ckv_new = cm.rmsnorm(ckv_full[..., :kvl], lp["kv_norm"], cfg.norm_eps)
+    krope_new = cm.apply_rope(ckv_full[..., kvl:].reshape(b, 1, 1, rope),
+                              positions, cfg.rope_theta)[:, :, 0, :]
+
+    ckv_cache = jax.lax.dynamic_update_slice(ckv_cache, ckv_new, (0, pos, 0))
+    krope_cache = jax.lax.dynamic_update_slice(krope_cache, krope_new, (0, pos, 0))
+
+    w_ukv = lp["w_ukv"].reshape(kvl, h, nope + vd)
+    w_uk, w_uv = w_ukv[..., :nope], w_ukv[..., nope:]
+    # absorb W_UK into the query: q_abs (B,1,H,kvl)
+    q_abs = jnp.einsum("bqhn,khn->bqhk", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+
+    scale = 1.0 / jnp.sqrt(nope + rope)
+    scores = (
+        jnp.einsum("bqhk,bsk->bhqs", q_abs, ckv_cache.astype(jnp.float32))
+        + jnp.einsum("bqhr,bsr->bhqs", q_rope.astype(jnp.float32),
+                     krope_cache.astype(jnp.float32))
+    ) * scale
+    valid = jnp.arange(ckv_cache.shape[1]) <= pos
+    scores = jnp.where(valid[None, None, None, :], scores, cm.NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+
+    ctx = jnp.einsum("bhqs,bsk->bqhk", probs, ckv_cache.astype(jnp.float32))
+    v_out = jnp.einsum("bqhk,khv->bqhv", ctx, w_uv.astype(jnp.float32))
+    out = v_out.reshape(b, 1, h * vd).astype(x.dtype) @ lp["wo"]
+    return out, ckv_cache, krope_cache
+
+
+# --------------------------------------------------------------------------- #
+# blocks
+# --------------------------------------------------------------------------- #
+def _dense_block(x, lp, cfg: ModelConfig, positions):
+    x = cm.hint(x, "act_bsd")
+    h = cm.rmsnorm(x, lp["attn_norm"], cfg.norm_eps)
+    attn, _ = mla_attention(h, lp, cfg, positions)
+    x = x + attn
+    h = cm.rmsnorm(x, lp["mlp_norm"], cfg.norm_eps)
+    return x + cm.glu_mlp(h, lp["w_gate"], lp["w_up"], lp["w_down"], cfg.act)
+
+
+def _moe_block(x, lp, cfg: ModelConfig, positions, dist: DistContext):
+    x = cm.hint(x, "act_bsd")
+    h = cm.rmsnorm(x, lp["attn_norm"], cfg.norm_eps)
+    attn, _ = mla_attention(h, lp, cfg, positions)
+    x = x + attn
+    h = cm.rmsnorm(x, lp["mlp_norm"], cfg.norm_eps)
+    y, aux = moe_mod.moe_ffn(h, lp, cfg, dist)
+    return x + y, aux
+
+
+# --------------------------------------------------------------------------- #
+# training loss (+ MTP)
+# --------------------------------------------------------------------------- #
+def loss_fn(params, batch, cfg: ModelConfig, dist: DistContext = LOCAL):
+    tokens, labels = batch["tokens"], batch["labels"]
+    b, s = tokens.shape
+    x = params["embed"][tokens]
+    positions = jnp.arange(s)
+
+    dense_block = jax.checkpoint(functools.partial(
+        _dense_block, cfg=cfg, positions=positions))
+    moe_block = jax.checkpoint(functools.partial(
+        _moe_block, cfg=cfg, positions=positions, dist=dist))
+
+    def dense_body(carry, lp):
+        return dense_block(carry, lp), None
+
+    x, _ = jax.lax.scan(dense_body, x, params["dense_layers"])
+
+    def moe_body(carry, lp):
+        x, aux_sum = carry
+        x, aux = moe_block(x, lp)
+        return (x, aux_sum + aux), None
+
+    (x, aux_sum), _ = jax.lax.scan(moe_body, (x, 0.0), params["moe_layers"])
+
+    hidden = x
+    x = cm.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = cm.lm_logits(x, params["embed"])
+    ce = cm.cross_entropy(logits, labels)
+    aux = cfg.router_aux_coef * aux_sum / max(cfg.n_layers - cfg.first_k_dense, 1)
+    loss = ce + aux
+    metrics = {"ce": ce, "aux": aux}
+
+    if cfg.mtp_depth > 0:
+        mtp = params["mtp"]
+        # token t+1 embedding at position t (shift left, pad with last)
+        emb_next = params["embed"][jnp.roll(tokens, -1, axis=1)]
+        mtp_in = jnp.concatenate(
+            [cm.rmsnorm(hidden, mtp["norm_h"], cfg.norm_eps),
+             cm.rmsnorm(emb_next, mtp["norm_e"], cfg.norm_eps)], axis=-1
+        ) @ mtp["proj"]
+        h_mtp = _dense_block(mtp_in, mtp["layer"], cfg, positions)
+        h_mtp = cm.rmsnorm(h_mtp, params["final_norm"], cfg.norm_eps)
+        logits_mtp = cm.lm_logits(h_mtp, params["embed"])
+        labels_mtp = jnp.roll(labels, -1, axis=1)
+        mask = jnp.ones((b, s), bool).at[:, -2:].set(False)
+        ce_mtp = cm.cross_entropy(logits_mtp, labels_mtp, mask)
+        loss = loss + MTP_LOSS_WEIGHT * ce_mtp
+        metrics["ce_mtp"] = ce_mtp
+
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+# --------------------------------------------------------------------------- #
+# serving
+# --------------------------------------------------------------------------- #
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    dt = jnp.dtype(cfg.dtype)
+    l = cfg.n_layers
+    return {
+        "ckv": jnp.zeros((l, batch, max_len, cfg.kv_lora_rank), dt),
+        "krope": jnp.zeros((l, batch, max_len, cfg.qk_rope_dim), dt),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(params, tokens, cfg: ModelConfig, dist: DistContext = LOCAL,
+            q_block: int = 1024):
+    b, s = tokens.shape
+    x = params["embed"][tokens]
+    positions = jnp.arange(s)
+
+    def dense_body(carry, lp):
+        x = carry
+        h = cm.rmsnorm(x, lp["attn_norm"], cfg.norm_eps)
+        attn, (ckv, krope) = mla_attention(h, lp, cfg, positions, q_block)
+        x = x + attn
+        h = cm.rmsnorm(x, lp["mlp_norm"], cfg.norm_eps)
+        x = x + cm.glu_mlp(h, lp["w_gate"], lp["w_up"], lp["w_down"], cfg.act)
+        return x, (ckv, krope)
+
+    def moe_body(carry, lp):
+        x = carry
+        h = cm.rmsnorm(x, lp["attn_norm"], cfg.norm_eps)
+        attn, (ckv, krope) = mla_attention(h, lp, cfg, positions, q_block)
+        x = x + attn
+        h = cm.rmsnorm(x, lp["mlp_norm"], cfg.norm_eps)
+        y, _ = moe_mod.moe_ffn(h, lp, cfg, dist)
+        return x + y, (ckv, krope)
+
+    x, (ckv_d, krope_d) = jax.lax.scan(dense_body, x, params["dense_layers"])
+    x, (ckv_m, krope_m) = jax.lax.scan(moe_body, x, params["moe_layers"])
+    x = cm.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = cm.lm_logits(x[:, -1:], params["embed"])
+    cache = {
+        "ckv": jnp.concatenate([ckv_d, ckv_m], axis=0),
+        "krope": jnp.concatenate([krope_d, krope_m], axis=0),
+        "len": jnp.asarray(s, jnp.int32),
+    }
+    return cache, logits
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig, dist: DistContext = LOCAL):
+    b = tokens.shape[0]
+    x = params["embed"][tokens]
+    pos = cache["len"]
+    nd = cfg.first_k_dense
+
+    def dense_body(carry, layer_in):
+        x = carry
+        lp, ckv_c, krope_c = layer_in
+        h = cm.rmsnorm(x, lp["attn_norm"], cfg.norm_eps)
+        attn, ckv_c, krope_c = mla_decode_attention(h, lp, cfg, ckv_c, krope_c, pos)
+        x = x + attn
+        h = cm.rmsnorm(x, lp["mlp_norm"], cfg.norm_eps)
+        x = x + cm.glu_mlp(h, lp["w_gate"], lp["w_up"], lp["w_down"], cfg.act)
+        return x, (ckv_c, krope_c)
+
+    def moe_body(carry, layer_in):
+        x = carry
+        lp, ckv_c, krope_c = layer_in
+        h = cm.rmsnorm(x, lp["attn_norm"], cfg.norm_eps)
+        attn, ckv_c, krope_c = mla_decode_attention(h, lp, cfg, ckv_c, krope_c, pos)
+        x = x + attn
+        h = cm.rmsnorm(x, lp["mlp_norm"], cfg.norm_eps)
+        y, _ = moe_mod.moe_ffn(h, lp, cfg, dist)
+        return x + y, (ckv_c, krope_c)
+
+    x, (ckv_d, krope_d) = jax.lax.scan(
+        dense_body, x,
+        (params["dense_layers"], cache["ckv"][:nd], cache["krope"][:nd]))
+    x, (ckv_m, krope_m) = jax.lax.scan(
+        moe_body, x,
+        (params["moe_layers"], cache["ckv"][nd:], cache["krope"][nd:]))
+    x = cm.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = cm.lm_logits(x, params["embed"])
+    new_cache = {
+        "ckv": jnp.concatenate([ckv_d, ckv_m], axis=0),
+        "krope": jnp.concatenate([krope_d, krope_m], axis=0),
+        "len": cache["len"] + 1,
+    }
+    return new_cache, logits

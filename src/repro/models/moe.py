@@ -1,0 +1,330 @@
+"""Mixture-of-Experts FFN + the granite-moe architecture.
+
+Two dispatch paths with identical semantics:
+
+* **dense fallback** (no mesh / model axis == 1): every expert computed for
+  every token, masked by the top-k gates. Exact; O(E) FLOPs — used only by
+  CPU smoke tests and the `ref` oracle.
+* **expert-parallel** (production): tokens are sequence-sharded over the
+  `model` axis, routed into fixed-capacity per-expert buffers, exchanged with
+  `all_to_all` inside `shard_map` (DeepSeek-style EP), processed as batched
+  per-expert GEMMs, and combined on the way back. Capacity overflow drops
+  tokens (standard GShard behaviour; capacity_factor controls the rate).
+
+Experts are zero-padded to a multiple of the model-axis size (granite's 40
+experts -> 48 on a 16-wide axis); padded experts get -inf router logits.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.distributed.context import DistContext, LOCAL
+from repro.models import common as cm
+
+
+# --------------------------------------------------------------------------- #
+# parameters
+# --------------------------------------------------------------------------- #
+def padded_experts(cfg: ModelConfig, ep_size: int) -> int:
+    return int(math.ceil(cfg.n_experts / ep_size) * ep_size)
+
+
+def init_moe_ffn(key, cfg: ModelConfig, ep_size: int = 1, n_layers: int | None = None):
+    """Stacked-over-layers MoE FFN params. d_expert is the per-expert width."""
+    dt = jnp.dtype(cfg.dtype)
+    l = cfg.n_layers if n_layers is None else n_layers
+    d, fe, e = cfg.d_model, cfg.d_expert, padded_experts(cfg, ep_size)
+    ks = cm.split_keys(key, 7)
+
+    def stack(k, *shape, fan_in, dtype=None):
+        scale = 1.0 / jnp.sqrt(fan_in)
+        arr = jax.random.normal(k, (l, *shape), jnp.float32) * scale
+        return arr.astype(dt if dtype is None else dtype)
+
+    params = {
+        "router": stack(ks[0], d, e, fan_in=d, dtype=jnp.float32),
+        "we_gate": stack(ks[1], e, d, fe, fan_in=d),
+        "we_up": stack(ks[2], e, d, fe, fan_in=d),
+        "we_down": stack(ks[3], e, fe, d, fan_in=fe),
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.d_expert * cfg.n_shared_experts
+        params["ws_gate"] = stack(ks[4], d, fs, fan_in=d)
+        params["ws_up"] = stack(ks[5], d, fs, fan_in=d)
+        params["ws_down"] = stack(ks[6], fs, d, fan_in=fs)
+    return params
+
+
+# --------------------------------------------------------------------------- #
+# routing
+# --------------------------------------------------------------------------- #
+def router_topk(x, w_router, cfg: ModelConfig):
+    """Returns (gates (..., k) f32, ids (..., k) int32, aux_loss scalar)."""
+    logits = x.astype(jnp.float32) @ w_router.astype(jnp.float32)
+    e_pad = w_router.shape[-1]
+    if e_pad > cfg.n_experts:  # mask padded experts
+        pad_mask = jnp.arange(e_pad) >= cfg.n_experts
+        logits = jnp.where(pad_mask, -jnp.inf, logits)
+    top_logits, ids = jax.lax.top_k(logits, cfg.top_k)
+    gates = jax.nn.softmax(top_logits, axis=-1)
+
+    # switch-style load-balance auxiliary loss over real experts
+    probs = jax.nn.softmax(logits, axis=-1)
+    me = jnp.mean(probs.reshape(-1, e_pad), axis=0)
+    assign = jax.nn.one_hot(ids, e_pad, dtype=jnp.float32).sum(axis=-2)
+    ce = jnp.mean(assign.reshape(-1, e_pad), axis=0) / cfg.top_k
+    aux = cfg.n_experts * jnp.sum(me * ce)
+    return gates, ids.astype(jnp.int32), aux
+
+
+# --------------------------------------------------------------------------- #
+# dense fallback dispatch
+# --------------------------------------------------------------------------- #
+def moe_ffn_dense(x, p, cfg: ModelConfig):
+    """All-experts compute, gate-masked. x: (B, S, D). Exact oracle."""
+    gates, ids, aux = router_topk(x, p["router"], cfg)
+    e_pad = p["router"].shape[-1]
+    one_hot = jax.nn.one_hot(ids, e_pad, dtype=jnp.float32)       # (B,S,k,E)
+    combine = jnp.einsum("bske,bsk->bse", one_hot, gates)         # (B,S,E)
+    h = jnp.einsum("bsd,edf->bsef", x, p["we_gate"])
+    u = jnp.einsum("bsd,edf->bsef", x, p["we_up"])
+    y = jnp.einsum("bsef,efd->bsed", cm.act_fn(cfg.act)(h) * u, p["we_down"])
+    out = jnp.einsum("bsed,bse->bsd", y.astype(jnp.float32), combine).astype(x.dtype)
+    return out, aux
+
+
+# --------------------------------------------------------------------------- #
+# expert-parallel dispatch (shard_map + all_to_all)
+# --------------------------------------------------------------------------- #
+def _ep_block(x_loc, router, we_gate, we_up, we_down, *, cfg: ModelConfig,
+              ep_axis: str, ep_size: int, capacity_factor: float,
+              all_axes: tuple[str, ...]):
+    """Per-shard body. x_loc: (b_loc, s_loc, D); expert weights are the LOCAL
+    slice (e_loc, D, F). Returns (out_loc, aux_loss_local)."""
+    b, s, d = x_loc.shape
+    e_pad = router.shape[-1]
+    e_loc = e_pad // ep_size
+    k = cfg.top_k
+    n_tok = b * s
+    n_assign = n_tok * k
+    cap = max(1, int(math.ceil(n_tok * k / e_pad * capacity_factor)))
+
+    xf = x_loc.reshape(n_tok, d)
+    gates, ids, aux = router_topk(xf, router, cfg)                 # (n,k)
+    flat_ids = ids.reshape(-1)                                     # (n*k,)
+    flat_gates = gates.reshape(-1)
+    tok_idx = jnp.repeat(jnp.arange(n_tok), k)
+
+    # position of each assignment within its expert's capacity buffer
+    order = jnp.argsort(flat_ids)                                  # stable
+    sorted_ids = flat_ids[order]
+    counts = jnp.zeros((e_pad,), jnp.int32).at[flat_ids].add(1)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1]])
+    pos_in_e = jnp.arange(n_assign, dtype=jnp.int32) - starts[sorted_ids]
+    keep = pos_in_e < cap
+    slot = jnp.where(keep, pos_in_e, cap)                          # overflow -> dropped row
+
+    # scatter tokens into (E, cap+1, D); slot `cap` catches drops
+    send = jnp.zeros((e_pad, cap + 1, d), x_loc.dtype)
+    send = send.at[sorted_ids, slot].set(xf[tok_idx[order]], mode="drop")
+    send = send[:, :cap]                                           # (E, cap, D)
+
+    # exchange: (ep, e_loc, cap, D) -> recv[src] on each expert shard
+    send = send.reshape(ep_size, e_loc, cap, d)
+    recv = jax.lax.all_to_all(send, ep_axis, split_axis=0, concat_axis=0,
+                              tiled=False)                          # (ep_src, e_loc, cap, D)
+    hbuf = recv.transpose(1, 0, 2, 3).reshape(e_loc, ep_size * cap, d)
+
+    g = cm.act_fn(cfg.act)(jnp.einsum("ecd,edf->ecf", hbuf, we_gate))
+    u = jnp.einsum("ecd,edf->ecf", hbuf, we_up)
+    y = jnp.einsum("ecf,efd->ecd", g * u, we_down)                  # (e_loc, ep*cap, D)
+
+    y = y.reshape(e_loc, ep_size, cap, d).transpose(1, 0, 2, 3)     # (ep, e_loc, cap, D)
+    back = jax.lax.all_to_all(y, ep_axis, split_axis=0, concat_axis=0,
+                              tiled=False)                          # (ep, e_loc, cap, D)
+    back = back.reshape(e_pad, cap, d)
+
+    # gather per-assignment results and combine with gates
+    pad_row = jnp.zeros((e_pad, 1, d), back.dtype)
+    back = jnp.concatenate([back, pad_row], axis=1)                 # slot `cap` -> zeros
+    y_sorted = back[sorted_ids, slot]                               # (n*k, D)
+    y_assign = jnp.zeros_like(y_sorted).at[order].set(y_sorted)
+    out = jax.ops.segment_sum(
+        y_assign.astype(jnp.float32) * flat_gates[:, None], tok_idx,
+        num_segments=n_tok)
+    # mean aux across every mesh axis so the P() out-spec is truly replicated
+    aux = jax.lax.pmean(aux, all_axes)
+    return out.reshape(b, s, d).astype(x_loc.dtype), aux
+
+
+def moe_ffn_ep(x, p, cfg: ModelConfig, dist: DistContext,
+               capacity_factor: float = 1.25):
+    """Expert-parallel MoE FFN. x: (B, S, D) sharded (batch_axes, None, None).
+
+    Train/prefill (S divisible by the model axis): sequence-shard x over
+    `model` so every device dispatches a distinct token slice. Decode (S=1):
+    tokens stay replicated over `model` — every expert shard receives the
+    same dispatch, computes its local experts, and the combine discards the
+    duplicates; correct, with redundant expert FLOPs proportional to ep_size
+    (a decode-path optimization target recorded in EXPERIMENTS.md §Perf).
+    """
+    mesh = dist.mesh
+    assert mesh is not None
+    ep_axis = dist.model_axis
+    ep_size = dist.ep_size
+    seq_shard = x.shape[1] % ep_size == 0 and x.shape[1] >= ep_size
+    x_spec = (P(dist.batch_axes, ep_axis, None) if seq_shard
+              else P(dist.batch_axes, None, None))
+
+    x = dist.constraint(x, x_spec)
+    block = functools.partial(
+        _ep_block, cfg=cfg, ep_axis=ep_axis, ep_size=ep_size,
+        capacity_factor=capacity_factor,
+        all_axes=tuple(mesh.axis_names))
+
+    in_specs = (
+        x_spec,                                  # x: batch (+ seq) sharded
+        P(),                                     # router replicated
+        P(ep_axis, None, None),                  # expert weights sharded on E
+        P(ep_axis, None, None),
+        P(ep_axis, None, None),
+    )
+    out_specs = (x_spec, P())
+    out, aux = jax.shard_map(
+        block, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_vma=False,
+    )(x, p["router"], p["we_gate"], p["we_up"], p["we_down"])
+    out = dist.constraint(out, P(dist.batch_axes, None, None))
+    return out, aux
+
+
+def moe_ffn(x, p, cfg: ModelConfig, dist: DistContext = LOCAL,
+            capacity_factor: float = 1.25):
+    """Routed experts + optional shared experts. Returns (out, aux_loss)."""
+    if dist.enabled and dist.ep_size > 1:
+        out, aux = moe_ffn_ep(x, p, cfg, dist, capacity_factor)
+    else:
+        out, aux = moe_ffn_dense(x, p, cfg)
+    if cfg.n_shared_experts:
+        out = out + cm.glu_mlp(x, p["ws_gate"], p["ws_up"], p["ws_down"], cfg.act)
+    return out, aux
+
+
+# =========================================================================== #
+# granite-moe architecture: GQA attention blocks with MoE FFNs
+# =========================================================================== #
+from repro.models import dense as _dense  # noqa: E402  (shares attention code)
+
+
+def init_params(key, cfg: ModelConfig, ep_size: int = 1):
+    k1, k2 = jax.random.split(key)
+    params = _dense.init_params(k1, cfg)
+    layers = params["layers"]
+    # replace the dense FFN with MoE FFN params
+    for name in ("w_gate", "w_up", "w_down"):
+        del layers[name]
+    layers.update(init_moe_ffn(k2, cfg, ep_size))
+    return params
+
+
+def abstract_params(cfg: ModelConfig, ep_size: int = 1):
+    return jax.eval_shape(
+        lambda: init_params(jax.random.PRNGKey(0), cfg, ep_size))
+
+
+def _moe_block(x, lp, cfg: ModelConfig, positions, dist: DistContext,
+               q_block: int = 1024):
+    x = cm.hint(x, "act_bsd")
+    h = cm.rmsnorm(x, lp["attn_norm"], cfg.norm_eps)
+    q, k, v = _dense._qkv(h, lp, cfg)
+    q = cm.apply_rope(q, positions, cfg.rope_theta)
+    k = cm.apply_rope(k, positions, cfg.rope_theta)
+    attn = cm.attention(q, k, v, causal=True, q_block=q_block)
+    x = x + attn.reshape(x.shape[0], x.shape[1], -1) @ lp["wo"]
+    h = cm.rmsnorm(x, lp["mlp_norm"], cfg.norm_eps)
+    y, aux = moe_ffn(h, lp, cfg, dist)
+    return x + y, aux
+
+
+def loss_fn(params, batch, cfg: ModelConfig, dist: DistContext = LOCAL):
+    tokens, labels = batch["tokens"], batch["labels"]
+    b, s = tokens.shape
+    x = params["embed"][tokens]
+    positions = jnp.arange(s)
+
+    block = functools.partial(_moe_block, cfg=cfg, positions=positions, dist=dist)
+    block = jax.checkpoint(block)
+
+    def body(carry, lp):
+        x, aux_sum = carry
+        x, aux = block(x, lp)
+        return (x, aux_sum + aux), None
+
+    (x, aux_sum), _ = jax.lax.scan(body, (x, 0.0), params["layers"])
+    x = cm.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = cm.lm_logits(x, params["embed"], params.get("out_head"))
+    ce = cm.cross_entropy(logits, labels)
+    aux = cfg.router_aux_coef * aux_sum / cfg.n_layers
+    loss = ce + aux
+    return loss, {"loss": loss, "ce": ce, "aux": aux}
+
+
+init_cache = _dense.init_cache
+
+
+def prefill(params, tokens, cfg: ModelConfig, dist: DistContext = LOCAL,
+            q_block: int = 1024):
+    b, s = tokens.shape
+    x = params["embed"][tokens]
+    positions = jnp.arange(s)
+
+    def body(carry, lp):
+        x = carry
+        h = cm.rmsnorm(x, lp["attn_norm"], cfg.norm_eps)
+        q, k, v = _dense._qkv(h, lp, cfg)
+        q = cm.apply_rope(q, positions, cfg.rope_theta)
+        k = cm.apply_rope(k, positions, cfg.rope_theta)
+        attn = cm.attention(q, k, v, causal=True, q_block=q_block)
+        x = x + attn.reshape(b, s, -1) @ lp["wo"]
+        h = cm.rmsnorm(x, lp["mlp_norm"], cfg.norm_eps)
+        y, _ = moe_ffn(h, lp, cfg, dist)
+        return x + y, (k, v)
+
+    x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+    x = cm.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = cm.lm_logits(x[:, -1:], params["embed"], params.get("out_head"))
+    return {"k": ks, "v": vs, "len": jnp.asarray(s, jnp.int32)}, logits
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig, dist: DistContext = LOCAL):
+    b = tokens.shape[0]
+    x = params["embed"][tokens]
+    pos = cache["len"]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+
+    def body(carry, layer_in):
+        x = carry
+        lp, k_cache, v_cache = layer_in
+        h = cm.rmsnorm(x, lp["attn_norm"], cfg.norm_eps)
+        q, k, v = _dense._qkv(h, lp, cfg)
+        q = cm.apply_rope(q, positions, cfg.rope_theta)
+        k = cm.apply_rope(k, positions, cfg.rope_theta)
+        k_cache = jax.lax.dynamic_update_slice(k_cache, k, (0, pos, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(v_cache, v, (0, pos, 0, 0))
+        attn = cm.decode_attention(q, k_cache, v_cache, pos + 1)
+        x = x + attn.reshape(b, 1, -1) @ lp["wo"]
+        h = cm.rmsnorm(x, lp["mlp_norm"], cfg.norm_eps)
+        y, _ = moe_ffn(h, lp, cfg, dist)
+        return x + y, (k_cache, v_cache)
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    x = cm.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = cm.lm_logits(x, params["embed"], params.get("out_head"))
+    return {"k": ks, "v": vs, "len": cache["len"] + 1}, logits

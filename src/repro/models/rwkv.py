@@ -1,0 +1,259 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): attention-free LM with data-dependent
+per-channel decay.
+
+Each layer = time-mix (token shift + 5-way data-dependent lerp via LoRA,
+WKV linear recurrence with decay w_t = exp(-exp(.)) and bonus u) +
+channel-mix (token shift + squared-ReLU FFN). LayerNorms per RWKV convention.
+Decode state is O(1) in sequence length: (heads, head_k, head_v) matrix per
+layer plus two token-shift vectors — which is why rwkv6-3b is a `long_500k`
+architecture.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+
+
+# --------------------------------------------------------------------------- #
+# parameters
+# --------------------------------------------------------------------------- #
+def init_params(key, cfg: ModelConfig):
+    dt = jnp.dtype(cfg.dtype)
+    l, d, f = cfg.n_layers, cfg.d_model, cfg.d_ff
+    ml, dl = cfg.rwkv_mix_lora, cfg.rwkv_decay_lora
+    ks = cm.split_keys(key, 14)
+
+    def stack(k, *shape, fan_in):
+        scale = 1.0 / jnp.sqrt(fan_in)
+        return (jax.random.normal(k, (l, *shape), jnp.float32) * scale).astype(dt)
+
+    layers = {
+        "ln1_w": jnp.ones((l, d), dt), "ln1_b": jnp.zeros((l, d), dt),
+        "ln2_w": jnp.ones((l, d), dt), "ln2_b": jnp.zeros((l, d), dt),
+        # time-mix lerp anchors + LoRA
+        "mu_x": jnp.full((l, d), 0.5, dt),
+        "mu": jnp.full((l, 5, d), 0.5, dt),            # w,k,v,r,g anchors
+        "tm_w1": stack(ks[0], d, 5 * ml, fan_in=d),
+        "tm_w2": stack(ks[1], 5, ml, d, fan_in=ml),
+        # decay
+        "decay_base": jnp.full((l, d), -4.0, jnp.float32),
+        "dw1": stack(ks[2], d, dl, fan_in=d),
+        "dw2": stack(ks[3], dl, d, fan_in=dl),
+        "u": jnp.zeros((l, d), jnp.float32),            # per-channel bonus
+        # projections
+        "wr": stack(ks[4], d, d, fan_in=d),
+        "wk": stack(ks[5], d, d, fan_in=d),
+        "wv": stack(ks[6], d, d, fan_in=d),
+        "wg": stack(ks[7], d, d, fan_in=d),
+        "wo": stack(ks[8], d, d, fan_in=d),
+        "gn_w": jnp.ones((l, d), dt), "gn_b": jnp.zeros((l, d), dt),
+        # channel-mix
+        "cm_mu_k": jnp.full((l, d), 0.5, dt),
+        "cm_mu_r": jnp.full((l, d), 0.5, dt),
+        "cm_wk": stack(ks[9], d, f, fan_in=d),
+        "cm_wv": stack(ks[10], f, d, fan_in=f),
+        "cm_wr": stack(ks[11], d, d, fan_in=d),
+    }
+    return {
+        "embed": cm.embed_init(ks[12], cfg.vocab_size, d, dt),
+        "ln0_w": jnp.ones((d,), dt), "ln0_b": jnp.zeros((d,), dt),
+        "final_ln_w": jnp.ones((d,), dt), "final_ln_b": jnp.zeros((d,), dt),
+        "head": cm.dense_init(ks[13], d, cfg.vocab_size, dt),
+        "layers": layers,
+    }
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+# --------------------------------------------------------------------------- #
+# WKV recurrence
+# --------------------------------------------------------------------------- #
+def wkv_scan(r, k, v, w, u):
+    """Sequential WKV. r/k/v/w: (B,S,H,K); u: (H,K). Returns (y, final_state).
+
+    y_t = r_t . (S_t + u * k_t v_t^T);  S_{t+1} = diag(w_t) S_t + k_t v_t^T
+    """
+    b, s, h, kd = r.shape
+    state0 = jnp.zeros((b, h, kd, kd), jnp.float32)
+
+    def step(state, inp):
+        r_t, k_t, v_t, w_t = inp                     # (B,H,K)
+        kv = k_t[..., :, None] * v_t[..., None, :]   # (B,H,K,V)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, state + u[None, :, :, None] * kv)
+        state = w_t[..., :, None] * state + kv
+        return state, y
+
+    xs = tuple(jnp.moveaxis(t.astype(jnp.float32), 1, 0) for t in (r, k, v, w))
+    state, ys = cm.chunked_scan(step, state0, xs)
+    return jnp.moveaxis(ys, 0, 1), state             # (B,S,H,V), (B,H,K,V)
+
+
+def wkv_step(r, k, v, w, u, state):
+    """Single-token WKV. r/k/v/w: (B,H,K); state: (B,H,K,V) f32."""
+    kv = k[..., :, None] * v[..., None, :]
+    y = jnp.einsum("bhk,bhkv->bhv", r, state + u[None, :, :, None] * kv)
+    state = w[..., :, None] * state + kv
+    return y, state
+
+
+# --------------------------------------------------------------------------- #
+# time-mix / channel-mix
+# --------------------------------------------------------------------------- #
+def _token_shift(x, prev):
+    """prev: (B,1,D) last token of previous chunk. Returns shifted x."""
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _ddlerp(x, dx, lp):
+    """Data-dependent 5-way lerp (w,k,v,r,g inputs). Returns 5 mixed tensors."""
+    b, s, d = x.shape
+    ml = lp["tm_w1"].shape[-1] // 5
+    xxx = x + dx * lp["mu_x"]
+    ws = jnp.tanh(xxx @ lp["tm_w1"]).reshape(b, s, 5, ml)
+    offs = jnp.einsum("bsim,imd->bsid", ws, lp["tm_w2"])      # (B,S,5,D)
+    mix = lp["mu"][None, None] + offs                          # (B,S,5,D)
+    return tuple(x + dx * mix[:, :, i] for i in range(5))
+
+
+def time_mix(x, lp, cfg: ModelConfig, shift_prev, wkv_state=None):
+    """Full-sequence time-mix. Returns (out, new_shift, new_wkv_state)."""
+    b, s, d = x.shape
+    h, kd = cfg.n_rwkv_heads, cfg.rwkv_head_size
+    prev = _token_shift(x, shift_prev)
+    dx = prev - x
+    xw, xk, xv, xr, xg = _ddlerp(x, dx, lp)
+
+    r = (xr @ lp["wr"]).reshape(b, s, h, kd)
+    k = (xk @ lp["wk"]).reshape(b, s, h, kd)
+    v = (xv @ lp["wv"]).reshape(b, s, h, kd)
+    g = jax.nn.silu(xg @ lp["wg"])
+
+    decay = lp["decay_base"] + jnp.tanh(xw.astype(jnp.float32) @ lp["dw1"].astype(jnp.float32)) @ lp["dw2"].astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(decay)).reshape(b, s, h, kd)
+    u = lp["u"].reshape(h, kd)
+
+    if wkv_state is None:
+        wkv_state = jnp.zeros((b, h, kd, kd), jnp.float32)
+    # fold the carried state in by treating it as S_0 of the scan
+    y, new_state = _wkv_with_state(r, k, v, w, u, wkv_state)
+    y = y.reshape(b, s, d).astype(x.dtype)
+    y = cm.groupnorm_heads(y, lp["gn_w"], lp["gn_b"], h) * g
+    return y @ lp["wo"], x[:, -1:], new_state
+
+
+def _wkv_with_state(r, k, v, w, u, state0):
+    def step(state, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, state + u[None, :, :, None] * kv)
+        state = w_t[..., :, None] * state + kv
+        return state, y
+
+    xs = tuple(jnp.moveaxis(t.astype(jnp.float32), 1, 0) for t in (r, k, v, w))
+    state, ys = cm.chunked_scan(step, state0, xs)
+    return jnp.moveaxis(ys, 0, 1), state
+
+
+def channel_mix(x, lp, shift_prev):
+    prev = _token_shift(x, shift_prev)
+    dx = prev - x
+    xk = x + dx * lp["cm_mu_k"]
+    xr = x + dx * lp["cm_mu_r"]
+    r = jax.nn.sigmoid(xr @ lp["cm_wr"])
+    k = jnp.square(jax.nn.relu(xk @ lp["cm_wk"]))
+    return r * (k @ lp["cm_wv"]), x[:, -1:]
+
+
+def _block(x, lp, cfg: ModelConfig, tm_shift=None, cm_shift=None, wkv_state=None):
+    x = cm.hint(x, "act_bsd")
+    b = x.shape[0]
+    d = x.shape[-1]
+    if tm_shift is None:
+        tm_shift = jnp.zeros((b, 1, d), x.dtype)
+    if cm_shift is None:
+        cm_shift = jnp.zeros((b, 1, d), x.dtype)
+    h = cm.layernorm(x, lp["ln1_w"], lp["ln1_b"])
+    y, new_tm, new_state = time_mix(h, lp, cfg, tm_shift, wkv_state)
+    x = x + y
+    h = cm.layernorm(x, lp["ln2_w"], lp["ln2_b"])
+    y, new_cm = channel_mix(h, lp, cm_shift)
+    return x + y, new_tm, new_cm, new_state
+
+
+# --------------------------------------------------------------------------- #
+# training / serving
+# --------------------------------------------------------------------------- #
+def loss_fn(params, batch, cfg: ModelConfig):
+    tokens, labels = batch["tokens"], batch["labels"]
+    x = params["embed"][tokens]
+    x = cm.layernorm(x, params["ln0_w"], params["ln0_b"])
+
+    block = jax.checkpoint(functools.partial(_block, cfg=cfg))
+
+    def body(carry, lp):
+        x, _, _, _ = block(carry, lp)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = cm.layernorm(x, params["final_ln_w"], params["final_ln_b"])
+    logits = x @ params["head"]
+    loss = cm.cross_entropy(logits, labels)
+    return loss, {"loss": loss}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int = 0):
+    """O(1)-in-sequence cache; max_len ignored (kept for API parity)."""
+    l, d = cfg.n_layers, cfg.d_model
+    h, kd = cfg.n_rwkv_heads, cfg.rwkv_head_size
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "wkv": jnp.zeros((l, batch, h, kd, kd), jnp.float32),
+        "tm_shift": jnp.zeros((l, batch, 1, d), dt),
+        "cm_shift": jnp.zeros((l, batch, 1, d), dt),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(params, tokens, cfg: ModelConfig):
+    b, s = tokens.shape
+    x = params["embed"][tokens]
+    x = cm.layernorm(x, params["ln0_w"], params["ln0_b"])
+
+    def body(carry, lp):
+        x = carry
+        x, tm, cmix, state = _block(x, lp, cfg)
+        return x, (tm, cmix, state)
+
+    x, (tms, cms, states) = jax.lax.scan(body, x, params["layers"])
+    x = cm.layernorm(x, params["final_ln_w"], params["final_ln_b"])
+    logits = x[:, -1:] @ params["head"]
+    cache = {"wkv": states, "tm_shift": tms, "cm_shift": cms,
+             "len": jnp.asarray(s, jnp.int32)}
+    return cache, logits
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig):
+    b = tokens.shape[0]
+    x = params["embed"][tokens]
+    x = cm.layernorm(x, params["ln0_w"], params["ln0_b"])
+
+    def body(carry, layer_in):
+        x = carry
+        lp, tm_shift, cm_shift, state = layer_in
+        x, new_tm, new_cm, new_state = _block(x, lp, cfg, tm_shift, cm_shift, state)
+        return x, (new_tm, new_cm, new_state)
+
+    x, (tms, cms, states) = jax.lax.scan(
+        body, x, (params["layers"], cache["tm_shift"], cache["cm_shift"], cache["wkv"]))
+    x = cm.layernorm(x, params["final_ln_w"], params["final_ln_b"])
+    logits = x @ params["head"]
+    new_cache = {"wkv": states, "tm_shift": tms, "cm_shift": cms,
+                 "len": cache["len"] + 1}
+    return new_cache, logits

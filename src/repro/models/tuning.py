@@ -1,0 +1,56 @@
+"""Performance-tuning knobs (§Perf hillclimbing).
+
+Module-level switches read at TRACE time; the dry-run CLI sets them before
+lowering so baseline and optimized artifacts can be produced from the same
+model code. Every knob corresponds to one hypothesis -> change -> measure
+cycle recorded in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class Tuning:
+    #: cast softmax probabilities to bf16 before the AV matmul (halves the
+    #: dominant score-traffic term; f32 row-stats retained)
+    attn_probs_bf16: bool = False
+    #: remat each attention q-block (stops the backward from stacking
+    #: per-block probs into (n_blocks, ...) residual buffers)
+    attn_block_remat: bool = False
+    #: Megatron-style sequence parallelism: residual-stream activations
+    #: sharded (batch, model, None) between blocks; TP collectives become
+    #: all-gather + reduce-scatter pairs instead of all-reduces
+    seq_parallel: bool = False
+    #: decode KV caches sharded over batch axes only (GSPMD turns a
+    #: dynamic-update-slice into a model-sharded seq dim into a full
+    #: gather/re-shard of the cache every step)
+    decode_cache_data_only: bool = False
+    #: grouped-query attention without KV expansion: contract per KV group
+    #: with bf16 operands + f32 accumulation (preferred_element_type) instead
+    #: of materializing an f32, q_per_kv-times-repeated copy of K/V
+    attn_grouped: bool = False
+    #: q-block length used by blocked attention
+    q_block: int = 1024
+
+    def describe(self) -> str:
+        on = [f.name for f in dataclasses.fields(self)
+              if f.name != "q_block" and getattr(self, f.name)]
+        if self.q_block != 1024:
+            on.append(f"qblk{self.q_block}")
+        return "+".join(on) if on else "baseline"
+
+
+#: the active configuration (mutated by launch code before tracing)
+ACTIVE = Tuning()
+
+
+def set_tuning(**kwargs) -> Tuning:
+    global ACTIVE
+    ACTIVE = Tuning(**kwargs)
+    return ACTIVE
+
+
+def reset() -> None:
+    global ACTIVE
+    ACTIVE = Tuning()

@@ -1,0 +1,243 @@
+"""Whisper-style encoder-decoder (arXiv:2212.04356).
+
+The conv audio frontend is a STUB per the assignment: the model consumes
+precomputed frame embeddings (B, n_frames, d_model). Encoder: bidirectional
+MHA + GELU MLP, pre-LN. Decoder: causal self-attention + cross-attention to
+encoder states. Positions are sinusoidal on both sides (whisper's decoder
+uses a learned table capped at 448; sinusoidal keeps every assigned decode
+length valid — noted in DESIGN.md).
+
+Batch for training: {"frames": (B,F,D), "tokens": (B,S), "labels": (B,S)}.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+
+
+def sinusoidal(positions, d: int):
+    """positions: (S,) or (B,S) -> (..., d) f32."""
+    half = d // 2
+    freqs = np.exp(-np.log(10000.0) * np.arange(half) / max(half - 1, 1))
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.concatenate([jnp.sin(angles), jnp.cos(angles)], axis=-1)
+
+
+# --------------------------------------------------------------------------- #
+# parameters
+# --------------------------------------------------------------------------- #
+def _attn_stack(key, n_layers: int, d: int, n_heads: int, hd: int, dt):
+    ks = cm.split_keys(key, 4)
+
+    def stack(k, d_in, d_out):
+        scale = 1.0 / jnp.sqrt(d_in)
+        return (jax.random.normal(k, (n_layers, d_in, d_out), jnp.float32) * scale).astype(dt)
+
+    return {
+        "wq": stack(ks[0], d, n_heads * hd), "bq": jnp.zeros((n_layers, n_heads * hd), dt),
+        "wk": stack(ks[1], d, n_heads * hd),
+        "wv": stack(ks[2], d, n_heads * hd), "bv": jnp.zeros((n_layers, n_heads * hd), dt),
+        "wo": stack(ks[3], n_heads * hd, d), "bo": jnp.zeros((n_layers, d), dt),
+    }
+
+
+def _mlp_stack(key, n_layers: int, d: int, f: int, dt):
+    k1, k2 = jax.random.split(key)
+    s_in, s_out = 1.0 / jnp.sqrt(d), 1.0 / jnp.sqrt(f)
+    return {
+        "w_up": (jax.random.normal(k1, (n_layers, d, f), jnp.float32) * s_in).astype(dt),
+        "b_up": jnp.zeros((n_layers, f), dt),
+        "w_down": (jax.random.normal(k2, (n_layers, f, d), jnp.float32) * s_out).astype(dt),
+        "b_down": jnp.zeros((n_layers, d), dt),
+    }
+
+
+def _ln(n_layers: int, d: int, dt, name: str):
+    return {f"{name}_w": jnp.ones((n_layers, d), dt),
+            f"{name}_b": jnp.zeros((n_layers, d), dt)}
+
+
+def init_params(key, cfg: ModelConfig):
+    dt = jnp.dtype(cfg.dtype)
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    ne, nd = cfg.n_enc_layers, cfg.n_layers
+    ks = cm.split_keys(key, 8)
+    enc = {**_ln(ne, d, dt, "ln1"), **_attn_stack(ks[0], ne, d, cfg.n_heads, hd, dt),
+           **_ln(ne, d, dt, "ln2"), **_mlp_stack(ks[1], ne, d, cfg.d_ff, dt)}
+    dec = {**_ln(nd, d, dt, "ln1"), **_attn_stack(ks[2], nd, d, cfg.n_heads, hd, dt),
+           **_ln(nd, d, dt, "ln_x")}
+    cross = _attn_stack(ks[3], nd, d, cfg.n_heads, hd, dt)
+    dec.update({f"x_{k}": v for k, v in cross.items()})
+    dec.update({**_ln(nd, d, dt, "ln2"), **_mlp_stack(ks[4], nd, d, cfg.d_ff, dt)})
+    return {
+        "embed": cm.embed_init(ks[5], cfg.vocab_size, d, dt),
+        "enc_ln_w": jnp.ones((d,), dt), "enc_ln_b": jnp.zeros((d,), dt),
+        "dec_ln_w": jnp.ones((d,), dt), "dec_ln_b": jnp.zeros((d,), dt),
+        "enc_layers": enc,
+        "dec_layers": dec,
+    }
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+# --------------------------------------------------------------------------- #
+# attention helpers (bias MHA, no RoPE)
+# --------------------------------------------------------------------------- #
+def _heads(x, n_heads: int):
+    b, s, dd = x.shape
+    return x.reshape(b, s, n_heads, dd // n_heads)
+
+
+def _mha(x, kv_src, lp, cfg: ModelConfig, prefix: str = "", causal: bool = False,
+         q_block: int = 1024):
+    h = cfg.n_heads
+    q = _heads(x @ lp[prefix + "wq"] + lp[prefix + "bq"], h)
+    k = _heads(kv_src @ lp[prefix + "wk"], h)
+    v = _heads(kv_src @ lp[prefix + "wv"] + lp[prefix + "bv"], h)
+    out = cm.attention(q, k, v, causal=causal, q_block=q_block)
+    return out.reshape(x.shape) @ lp[prefix + "wo"] + lp[prefix + "bo"], (k, v)
+
+
+# --------------------------------------------------------------------------- #
+# encoder
+# --------------------------------------------------------------------------- #
+def encode(params, frames, cfg: ModelConfig):
+    """frames: (B, F, D) stub embeddings -> encoder states (B, F, D)."""
+    b, f, d = frames.shape
+    x = frames.astype(jnp.dtype(cfg.dtype)) + sinusoidal(
+        jnp.arange(f), d).astype(jnp.dtype(cfg.dtype))
+
+    def body(x, lp):
+        x = cm.hint(x, "act_bsd")
+        h = cm.layernorm(x, lp["ln1_w"], lp["ln1_b"])
+        attn, _ = _mha(h, h, lp, cfg, causal=False)
+        x = x + attn
+        h = cm.layernorm(x, lp["ln2_w"], lp["ln2_b"])
+        x = x + cm.dense_mlp(h, lp["w_up"], lp["b_up"], lp["w_down"], lp["b_down"])
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return cm.layernorm(x, params["enc_ln_w"], params["enc_ln_b"])
+
+
+# --------------------------------------------------------------------------- #
+# decoder (training)
+# --------------------------------------------------------------------------- #
+def _dec_block(x, lp, enc_out, cfg: ModelConfig, q_block: int = 1024):
+    x = cm.hint(x, "act_bsd")
+    h = cm.layernorm(x, lp["ln1_w"], lp["ln1_b"])
+    attn, _ = _mha(h, h, lp, cfg, causal=True, q_block=q_block)
+    x = x + attn
+    h = cm.layernorm(x, lp["ln_x_w"], lp["ln_x_b"])
+    attn, _ = _mha(h, enc_out, lp, cfg, prefix="x_", causal=False, q_block=q_block)
+    x = x + attn
+    h = cm.layernorm(x, lp["ln2_w"], lp["ln2_b"])
+    return x + cm.dense_mlp(h, lp["w_up"], lp["b_up"], lp["w_down"], lp["b_down"])
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    frames, tokens, labels = batch["frames"], batch["tokens"], batch["labels"]
+    enc_out = encode(params, frames, cfg)
+    b, s = tokens.shape
+    x = params["embed"][tokens] + sinusoidal(
+        jnp.arange(s), cfg.d_model).astype(jnp.dtype(cfg.dtype))
+
+    block = jax.checkpoint(functools.partial(_dec_block, enc_out=enc_out, cfg=cfg))
+
+    def body(carry, lp):
+        return block(carry, lp), None
+
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    x = cm.layernorm(x, params["dec_ln_w"], params["dec_ln_b"])
+    logits = cm.lm_logits(x, params["embed"])
+    loss = cm.cross_entropy(logits, labels)
+    return loss, {"loss": loss}
+
+
+# --------------------------------------------------------------------------- #
+# serving
+# --------------------------------------------------------------------------- #
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    dt = jnp.dtype(cfg.dtype)
+    hd = cfg.resolved_head_dim
+    l = cfg.n_layers
+    return {
+        "k": jnp.zeros((l, batch, max_len, cfg.n_heads, hd), dt),
+        "v": jnp.zeros((l, batch, max_len, cfg.n_heads, hd), dt),
+        "xk": jnp.zeros((l, batch, cfg.n_frames, cfg.n_heads, hd), dt),
+        "xv": jnp.zeros((l, batch, cfg.n_frames, cfg.n_heads, hd), dt),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(params, tokens, cfg: ModelConfig, frames=None, q_block: int = 1024):
+    """tokens: (B,S) decoder prompt; frames: (B,F,D) stub audio embeddings."""
+    b, s = tokens.shape
+    if frames is None:
+        frames = jnp.zeros((b, cfg.n_frames, cfg.d_model), jnp.dtype(cfg.dtype))
+    enc_out = encode(params, frames, cfg)
+    x = params["embed"][tokens] + sinusoidal(
+        jnp.arange(s), cfg.d_model).astype(jnp.dtype(cfg.dtype))
+
+    def body(carry, lp):
+        x = carry
+        h = cm.layernorm(x, lp["ln1_w"], lp["ln1_b"])
+        attn, (k, v) = _mha(h, h, lp, cfg, causal=True, q_block=q_block)
+        x = x + attn
+        h = cm.layernorm(x, lp["ln_x_w"], lp["ln_x_b"])
+        attn, (xk, xv) = _mha(h, enc_out, lp, cfg, prefix="x_", causal=False,
+                              q_block=q_block)
+        x = x + attn
+        h = cm.layernorm(x, lp["ln2_w"], lp["ln2_b"])
+        x = x + cm.dense_mlp(h, lp["w_up"], lp["b_up"], lp["w_down"], lp["b_down"])
+        return x, (k, v, xk, xv)
+
+    x, (ks, vs, xks, xvs) = jax.lax.scan(body, x, params["dec_layers"])
+    x = cm.layernorm(x, params["dec_ln_w"], params["dec_ln_b"])
+    logits = cm.lm_logits(x[:, -1:], params["embed"])
+    cache = {"k": ks, "v": vs, "xk": xks, "xv": xvs,
+             "len": jnp.asarray(s, jnp.int32)}
+    return cache, logits
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig):
+    b = tokens.shape[0]
+    pos = cache["len"]
+    x = params["embed"][tokens] + sinusoidal(
+        jnp.full((b, 1), pos), cfg.d_model).astype(jnp.dtype(cfg.dtype))
+    h_heads = cfg.n_heads
+
+    def body(carry, layer_in):
+        x = carry
+        lp, k_c, v_c, xk, xv = layer_in
+        h = cm.layernorm(x, lp["ln1_w"], lp["ln1_b"])
+        q = _heads(h @ lp["wq"] + lp["bq"], h_heads)
+        k = _heads(h @ lp["wk"], h_heads)
+        v = _heads(h @ lp["wv"] + lp["bv"], h_heads)
+        k_c = jax.lax.dynamic_update_slice(k_c, k, (0, pos, 0, 0))
+        v_c = jax.lax.dynamic_update_slice(v_c, v, (0, pos, 0, 0))
+        attn = cm.decode_attention(q, k_c, v_c, pos + 1)
+        x = x + attn.reshape(b, 1, -1) @ lp["wo"] + lp["bo"]
+        h = cm.layernorm(x, lp["ln_x_w"], lp["ln_x_b"])
+        q = _heads(h @ lp["x_wq"] + lp["x_bq"], h_heads)
+        attn = cm.decode_attention(q, xk, xv, xk.shape[1])
+        x = x + attn.reshape(b, 1, -1) @ lp["x_wo"] + lp["x_bo"]
+        h = cm.layernorm(x, lp["ln2_w"], lp["ln2_b"])
+        x = x + cm.dense_mlp(h, lp["w_up"], lp["b_up"], lp["w_down"], lp["b_down"])
+        return x, (k_c, v_c)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["k"], cache["v"],
+                  cache["xk"], cache["xv"]))
+    x = cm.layernorm(x, params["dec_ln_w"], params["dec_ln_b"])
+    logits = cm.lm_logits(x, params["embed"])
+    new_cache = dict(cache, k=ks, v=vs, len=cache["len"] + 1)
+    return new_cache, logits

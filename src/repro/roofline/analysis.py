@@ -1,0 +1,202 @@
+"""Roofline-term derivation from compiled dry-run artifacts (§Roofline).
+
+    compute term    = HLO_FLOPs / (chips x peak_FLOP/s)
+    memory term     = HLO_bytes / (chips x HBM_bw)
+    collective term = collective_bytes / (chips x link_bw)
+
+Sources: ``compiled.cost_analysis()`` for FLOPs/bytes; collective bytes by
+parsing the optimized HLO (``compiled.as_text()``) and summing operand sizes
+of all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+ops. cost_analysis is per-program (already per-device under SPMD); the HLO is
+likewise the per-device program, so no further division by chip count is
+applied to parsed collective bytes.
+
+Hardware constants (TPU-v5e class): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b(pred|bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64|c64|c128)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(.*?)\s+(" + "|".join(COLLECTIVE_OPS) + r")(-start|-done)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_COMP_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)(?:\.clone)?\s*\([^)]*\)\s*->")
+_WHILE_RE = re.compile(r"=\s*.*?\s+while\(.*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    total_bytes: int
+    by_op: dict[str, int]
+    counts: dict[str, int]
+
+
+def _operand_bytes(op: str, out_bytes: int, group_size: int) -> int:
+    """Derive per-device operand (transmitted) bytes from the output type."""
+    if op == "all-gather":
+        return out_bytes // max(group_size, 1)
+    if op == "reduce-scatter":
+        return out_bytes * max(group_size, 1)
+    return out_bytes  # all-reduce / all-to-all / collective-permute
+
+
+def _split_computations(hlo_text: str) -> dict[str, list[str]]:
+    """computation name -> its body lines (optimized-HLO textual format)."""
+    comps: dict[str, list[str]] = {}
+    current = None
+    for line in hlo_text.splitlines():
+        stripped = line.rstrip()
+        if stripped.endswith("{"):
+            m = _COMP_RE.match(stripped)
+            if m:
+                current = m.group(1)
+                comps[current] = []
+                continue
+        if stripped == "}":
+            current = None
+            continue
+        if current is not None:
+            comps[current].append(stripped)
+    return comps
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> CollectiveStats:
+    """Per-device collective bytes from optimized HLO, *loop-aware*:
+    collectives inside `while` bodies (jax scans) are multiplied by the trip
+    count recovered from the loop condition's bound constant."""
+    comps = _split_computations(hlo_text)
+
+    def trip_count(cond_name: str) -> int:
+        best = 1
+        for line in comps.get(cond_name, []):
+            if "compare" not in line:
+                continue
+            for m in _CONST_RE.finditer(line):
+                best = max(best, int(m.group(1)))
+        if best == 1:  # bound may live in a separate constant line
+            for line in comps.get(cond_name, []):
+                for m in _CONST_RE.finditer(line):
+                    best = max(best, int(m.group(1)))
+        return max(best, 1)
+
+    cache: dict[str, tuple[dict[str, int], dict[str, int]]] = {}
+
+    def accumulate(comp: str, depth: int = 0):
+        if comp in cache:
+            return cache[comp]
+        by_op = {op: 0 for op in COLLECTIVE_OPS}
+        counts = {op: 0.0 for op in COLLECTIVE_OPS}
+        if depth > 16:
+            return by_op, counts
+        for line in comps.get(comp, []):
+            w = _WHILE_RE.search(line)
+            if w:
+                cond, body = w.group(1), w.group(2)
+                trips = trip_count(cond)
+                sub_b, sub_c = accumulate(body, depth + 1)
+                for op in COLLECTIVE_OPS:
+                    by_op[op] += trips * sub_b[op]
+                    counts[op] += trips * sub_c[op]
+                continue
+            m = _OP_RE.search(line)
+            if not m or m.group(3) == "-done":
+                continue
+            op = m.group(2)
+            out_bytes = sum(_shape_bytes(d, s)
+                            for d, s in _SHAPE_RE.findall(m.group(1)))
+            g = _GROUPS_RE.search(line)
+            group_size = int(g.group(2)) if g else 1
+            by_op[op] += _operand_bytes(op, out_bytes, group_size)
+            counts[op] += 1
+        cache[comp] = (by_op, counts)
+        return cache[comp]
+
+    entry = None
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_RE.match(line)
+            if m:
+                entry = m.group(1)
+            break
+    names = list(comps)
+    if entry is None:
+        # fall back: the computation with the most lines
+        entry = max(names, key=lambda n: len(comps[n])) if names else ""
+    by_op, counts = accumulate(entry)
+    return CollectiveStats(total_bytes=int(sum(by_op.values())),
+                           by_op={k: int(v) for k, v in by_op.items()},
+                           counts={k: int(v) for k, v in counts.items()})
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float                 # per-device HLO flops (loop-aware)
+    hbm_bytes: float             # per-device HBM traffic estimate (loop-aware)
+    collective_bytes: float      # per-device collective transmitted bytes
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float           # useful flops per device (6*N*D etc.)
+    useful_fraction: float       # model_flops / hlo_flops
+    roofline_bound_s: float      # max of the three terms
+    cost_analysis_flops: float   # raw (loop-unaware) cost_analysis values
+    cost_analysis_bytes: float
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def derive_terms(cost: dict, hlo_stats, n_chips: int,
+                 model_flops_global: float,
+                 peak_flops: float = PEAK_FLOPS, hbm_bw: float = HBM_BW,
+                 ici_bw: float = ICI_BW) -> RooflineTerms:
+    """hlo_stats: ``hlo_parse.analyze_hlo`` output for the per-device program.
+
+    model_flops_global: useful math for the step across ALL chips
+    (6*N_active*tokens for training; 2*N_active*tokens for inference).
+    ``cost`` keeps the raw (loop-unaware) cost_analysis numbers for reference.
+    """
+    flops = float(hlo_stats.flops)
+    hbm = float(hlo_stats.hbm_bytes)
+    cbytes = float(hlo_stats.collective_bytes)
+    compute_s = flops / peak_flops
+    memory_s = hbm / hbm_bw
+    collective_s = cbytes / ici_bw
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)  # type: ignore[arg-type]
+    model_flops = model_flops_global / n_chips
+    useful = model_flops / flops if flops else 0.0
+    return RooflineTerms(
+        flops=flops, hbm_bytes=hbm, collective_bytes=cbytes,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        bottleneck=bottleneck, model_flops=model_flops,
+        useful_fraction=useful,
+        roofline_bound_s=max(terms.values()),
+        cost_analysis_flops=float(cost.get("flops", 0.0)),
+        cost_analysis_bytes=float(cost.get("bytes accessed", 0.0)))

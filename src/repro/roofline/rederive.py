@@ -1,0 +1,51 @@
+"""Re-derive roofline terms for existing dry-run reports from cached HLO.
+
+Accounting-model updates (hlo_parse.py) apply retroactively without
+recompiling:  PYTHONPATH=src python -m repro.roofline.rederive [--dir ...]
+"""
+from __future__ import annotations
+
+import argparse
+import gzip
+import json
+import pathlib
+
+from repro.configs import LM_SHAPES, get_config
+from repro.launch.dryrun import model_flops_global
+from repro.roofline import analysis as roofline
+from repro.roofline import hlo_parse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="reports/dryrun")
+    args = ap.parse_args()
+
+    n = 0
+    for jpath in sorted(pathlib.Path(args.dir).glob("*.json")):
+        r = json.loads(jpath.read_text())
+        if r["status"] != "ok":
+            continue
+        hpath = jpath.with_suffix("").with_suffix("")  # strip .json
+        hpath = jpath.parent / (jpath.stem + ".hlo.gz")
+        if not hpath.exists():
+            continue
+        hlo = gzip.open(hpath, "rt").read()
+        stats = hlo_parse.analyze_hlo(hlo)
+        cfg = get_config(r["arch"])
+        shape = LM_SHAPES[r["shape"]]
+        cost = {"flops": r["roofline"].get("cost_analysis_flops", 0.0),
+                "bytes accessed": r["roofline"].get("cost_analysis_bytes", 0.0)}
+        terms = roofline.derive_terms(cost, stats, r["n_chips"],
+                                      model_flops_global(cfg, shape))
+        r["roofline"] = terms.as_dict()
+        r["collectives"] = {"total_bytes": stats.collective_bytes,
+                            "by_op": stats.collective_by_op,
+                            "counts": stats.collective_counts}
+        jpath.write_text(json.dumps(r, indent=1, default=str))
+        n += 1
+    print(f"re-derived {n} reports")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Generate the §Roofline markdown table from dry-run reports.
+
+    PYTHONPATH=src python -m repro.roofline.report [--dir reports/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+
+def one_liner(r: dict) -> str:
+    """One sentence on what would move the dominant term down."""
+    rf = r["roofline"]
+    b = rf["bottleneck"]
+    shape = r["shape"]
+    if b == "memory" and shape in ("train_4k", "prefill_32k"):
+        return ("attention-score traffic dominates: wire the Pallas flash "
+                "kernel / grouped-GQA contraction (see §Perf)")
+    if b == "memory":
+        return ("KV/weight streaming bound: grouped GQA contraction avoids "
+                "expanded-cache copies; batch more sequences per step")
+    if b == "collective":
+        return ("TP/FSDP collectives dominate: sequence-parallel residual "
+                "stream + reduce-scatter gradients; overlap via latency-hiding "
+                "scheduler on TPU")
+    return "compute-bound: increase arithmetic intensity via larger blocks"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="reports/dryrun")
+    ap.add_argument("--out", default="reports/roofline_table.md")
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+
+    rows = []
+    for path in sorted(pathlib.Path(args.dir).glob(f"*__{args.mesh}.json")):
+        r = json.loads(path.read_text())
+        if r["status"] == "skipped":
+            rows.append((r["arch"], r["shape"], "skipped", None, r.get("reason", "")))
+        elif r["status"] == "ok":
+            rows.append((r["arch"], r["shape"], "ok", r, one_liner(r)))
+        else:
+            rows.append((r["arch"], r["shape"], "error", None,
+                         r.get("error", "")[:80]))
+
+    lines = [
+        f"# §Roofline — baseline table ({args.mesh}-pod mesh, "
+        f"{256 if args.mesh == 'single' else 512} chips)",
+        "",
+        "Terms in seconds per step/device; TPU-v5e constants "
+        "(197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s ICI).",
+        "",
+        "| arch | shape | compute_s | memory_s | collective_s | bottleneck | "
+        "MODEL_FLOPS/HLO_FLOPs | note |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for arch, shape, status, r, note in rows:
+        if status != "ok":
+            lines.append(f"| {arch} | {shape} | — | — | — | {status} | — | {note} |")
+            continue
+        rf = r["roofline"]
+        lines.append(
+            f"| {arch} | {shape} | {rf['compute_s']:.4f} | {rf['memory_s']:.4f} "
+            f"| {rf['collective_s']:.4f} | **{rf['bottleneck']}** "
+            f"| {rf['useful_fraction']:.3f} | {note} |")
+    out = pathlib.Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text("\n".join(lines) + "\n")
+    print(f"wrote {out} ({len(rows)} cells)")
+
+
+if __name__ == "__main__":
+    main()

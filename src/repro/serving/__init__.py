@@ -1,0 +1,1 @@
+"""Serving substrate: JAX engine, pool DES, latency stats, perf models."""

@@ -1,0 +1,13 @@
+"""Telemetry substrate: Table-1 records, runtime sampler, alignment, storage."""
+from repro.telemetry.records import TelemetryFrame, FIELDS, SCHEMA  # noqa: F401
+from repro.telemetry.sampler import RuntimeSampler  # noqa: F401
+from repro.telemetry.pipeline import (  # noqa: F401
+    analyze_job,
+    analyze_fleet,
+    classify_frame,
+    per_job_fraction_cdf,
+    tail_share,
+    JobAnalysis,
+    FleetAnalysis,
+)
+from repro.telemetry.storage import TelemetryStore  # noqa: F401

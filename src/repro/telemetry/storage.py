@@ -1,0 +1,57 @@
+"""Compressed telemetry log storage (paper §2.1: 20–100 MB/server/day).
+
+Columnar `.npz` (zip-deflate) with a JSON sidecar manifest. Append-oriented:
+one shard per (host, day); a reader concatenates shards.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Iterable
+
+import numpy as np
+
+from repro.telemetry.records import FIELDS, TelemetryFrame
+
+MANIFEST_NAME = "manifest.json"
+
+
+class TelemetryStore:
+    def __init__(self, root: str | pathlib.Path):
+        self.root = pathlib.Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self._manifest_path = self.root / MANIFEST_NAME
+        if self._manifest_path.exists():
+            self.manifest = json.loads(self._manifest_path.read_text())
+        else:
+            self.manifest = {"shards": []}
+
+    def _save_manifest(self) -> None:
+        self._manifest_path.write_text(json.dumps(self.manifest, indent=1))
+
+    def write_shard(self, frame: TelemetryFrame, host: str = "host0",
+                    day: int = 0) -> pathlib.Path:
+        name = f"telemetry_{host}_d{day:03d}_{len(self.manifest['shards']):05d}.npz"
+        path = self.root / name
+        np.savez_compressed(path, **frame.columns)
+        self.manifest["shards"].append(
+            {"file": name, "host": host, "day": day, "rows": len(frame)})
+        self._save_manifest()
+        return path
+
+    def read_shard(self, name: str) -> TelemetryFrame:
+        with np.load(self.root / name) as z:
+            return TelemetryFrame({f: z[f] for f in FIELDS if f in z})
+
+    def read_all(self, hosts: Iterable[str] | None = None) -> TelemetryFrame:
+        hosts = set(hosts) if hosts is not None else None
+        frames = [
+            self.read_shard(s["file"])
+            for s in self.manifest["shards"]
+            if hosts is None or s["host"] in hosts
+        ]
+        return TelemetryFrame.concat(frames)
+
+    @property
+    def total_rows(self) -> int:
+        return sum(s["rows"] for s in self.manifest["shards"])

@@ -1,0 +1,2 @@
+"""Industry serving-trace models + replay (paper §2.3)."""
+from repro.traces.models import TRACES, TraceSpec, generate_trace, get_trace  # noqa: F401

@@ -1,0 +1,105 @@
+"""Industry serving-trace models (Azure Code/Chat, BurstGPT Chat, Qwen
+Reason/Chat) — synthesized from published statistics (§2.3 adaptation note 3).
+
+Raw trace files are not shippable offline; each generator reproduces the
+structure the paper reports: per-GPU inter-request medians of ~4-8 s with
+heavier tails for BurstGPT Chat / Qwen Reason (Fig 6), and token-length mixes
+that land the replay's busy fractions at the paper's exec-idle numbers
+(Fig 5 right) under the calibrated Llama-13B/L40S perf model.
+
+Inter-arrival: lognormal (optionally burst-mixture); prompt/output lengths:
+lognormal with trace-specific means.
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+
+import numpy as np
+
+from repro.serving.latency import Request
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceSpec:
+    name: str
+    #: lognormal inter-arrival: median (s) and sigma
+    gap_median_s: float
+    gap_sigma: float
+    #: probability of a burst arrival (short-gap mixture component)
+    burst_p: float
+    burst_gap_median_s: float
+    #: token-length lognormals
+    prompt_mean: float
+    prompt_sigma: float
+    output_mean: float
+    output_sigma: float
+    #: device utilization while serving (power-model input; reasoning-style
+    #: long-decode traces batch better -> higher util)
+    busy_util: float
+    #: paper-reported replay exec-idle fractions (validation targets)
+    paper_time_fraction: float
+    paper_energy_fraction: float
+
+
+TRACES: dict[str, TraceSpec] = {
+    "azure_code": TraceSpec(
+        name="azure_code", gap_median_s=7.45, gap_sigma=0.8,
+        burst_p=0.40, burst_gap_median_s=1.0,
+        prompt_mean=1500, prompt_sigma=0.6, output_mean=25, output_sigma=0.5,
+        busy_util=0.25, paper_time_fraction=0.76, paper_energy_fraction=0.65),
+    "azure_chat": TraceSpec(
+        name="azure_chat", gap_median_s=5.49, gap_sigma=0.7,
+        burst_p=0.0, burst_gap_median_s=0.5,
+        prompt_mean=1024, prompt_sigma=0.7, output_mean=210, output_sigma=0.5,
+        busy_util=0.25, paper_time_fraction=0.29, paper_energy_fraction=0.17),
+    "burstgpt_chat": TraceSpec(
+        name="burstgpt_chat", gap_median_s=11.69, gap_sigma=1.2,
+        burst_p=0.35, burst_gap_median_s=1.2,
+        prompt_mean=900, prompt_sigma=0.7, output_mean=150, output_sigma=0.6,
+        busy_util=0.45, paper_time_fraction=0.72, paper_energy_fraction=0.52),
+    "qwen_reason": TraceSpec(
+        name="qwen_reason", gap_median_s=10.40, gap_sigma=1.1,
+        burst_p=0.0, burst_gap_median_s=0.5,
+        prompt_mean=950, prompt_sigma=0.6, output_mean=640, output_sigma=0.5,
+        busy_util=0.35, paper_time_fraction=0.18, paper_energy_fraction=0.08),
+    "qwen_chat": TraceSpec(
+        name="qwen_chat", gap_median_s=5.74, gap_sigma=0.68,
+        burst_p=0.0, burst_gap_median_s=0.5,
+        prompt_mean=800, prompt_sigma=0.6, output_mean=280, output_sigma=0.5,
+        busy_util=0.3, paper_time_fraction=0.14, paper_energy_fraction=0.07),
+}
+
+
+def generate_trace(spec: TraceSpec, duration_s: float, n_devices: int = 1,
+                   seed: int = 0) -> list[Request]:
+    """Per-device renewal streams concatenated (device pre-assignment models
+    the paper's fixed per-GPU replay; pool experiments re-route via the
+    scheduler instead and ignore the pre-assignment)."""
+    rng = np.random.default_rng(
+        np.random.SeedSequence([zlib.crc32(spec.name.encode()), seed]))
+    requests: list[Request] = []
+    rid = 0
+    for dev in range(n_devices):
+        t = float(rng.exponential(spec.gap_median_s))
+        while t < duration_s:
+            prompt = max(8, int(rng.lognormal(np.log(spec.prompt_mean), spec.prompt_sigma)))
+            output = max(1, int(rng.lognormal(np.log(spec.output_mean), spec.output_sigma)))
+            requests.append(Request(req_id=rid, arrival_s=t,
+                                    prompt_tokens=prompt, output_tokens=output,
+                                    device=dev))
+            rid += 1
+            if rng.random() < spec.burst_p:
+                gap = rng.lognormal(np.log(spec.burst_gap_median_s), 0.5)
+            else:
+                gap = rng.lognormal(np.log(spec.gap_median_s), spec.gap_sigma)
+            t += float(gap)
+    requests.sort(key=lambda r: r.arrival_s)
+    return requests
+
+
+def get_trace(name: str) -> TraceSpec:
+    try:
+        return TRACES[name]
+    except KeyError:
+        raise KeyError(f"unknown trace {name!r}; known: {sorted(TRACES)}") from None

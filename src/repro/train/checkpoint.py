@@ -1,0 +1,127 @@
+"""Step-atomic checkpointing with elastic restore (mesh-independent).
+
+Layout:
+    <dir>/step_000123/
+        arrays.npz          # flattened leaf -> array (host-gathered)
+        manifest.json       # treedef paths, shapes, dtypes, step, mesh info
+    <dir>/LATEST            # atomic pointer file (written last)
+
+Restore targets any mesh: arrays are loaded on host and ``jax.device_put``
+with the *new* mesh's NamedShardings (elastic re-shard). Failure recovery =
+read LATEST, load, continue; a crashed half-written step directory is ignored
+because LATEST moves only after a complete write.
+"""
+from __future__ import annotations
+
+import json
+
+import jax.numpy as jnp
+import pathlib
+import shutil
+
+import jax
+import numpy as np
+
+from repro.distributed.context import DistContext
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    keys, leaves = [], []
+    for path, leaf in flat:
+        keys.append(jax.tree_util.keystr(path))
+        leaves.append(leaf)
+    return keys, leaves, treedef
+
+
+def save(directory: str | pathlib.Path, step: int, params, opt_state,
+         extra: dict | None = None) -> pathlib.Path:
+    root = pathlib.Path(directory)
+    step_dir = root / f"step_{step:08d}"
+    tmp_dir = root / f".tmp_step_{step:08d}"
+    if tmp_dir.exists():
+        shutil.rmtree(tmp_dir)
+    tmp_dir.mkdir(parents=True)
+
+    state = {"params": params, "opt_state": opt_state}
+    keys, leaves, _ = _flatten_with_paths(state)
+    arrays = {}
+    for i, x in enumerate(leaves):
+        a = np.asarray(jax.device_get(x))
+        # npz cannot round-trip ml_dtypes (bf16 etc.); store as f32 and let
+        # restore cast back to the model dtype recorded in `dtypes`.
+        if a.dtype.kind not in "fiub?":
+            a = a.astype(np.float32)
+        elif a.dtype == np.float16 or str(a.dtype) == "bfloat16":
+            a = a.astype(np.float32)
+        arrays[f"a{i}"] = a
+    np.savez(tmp_dir / "arrays.npz", **arrays)
+    manifest = {
+        "step": step,
+        "keys": keys,
+        "shapes": [list(a.shape) for a in arrays.values()],
+        "dtypes": [str(a.dtype) for a in arrays.values()],
+        "extra": extra or {},
+    }
+    (tmp_dir / "manifest.json").write_text(json.dumps(manifest))
+    if step_dir.exists():
+        shutil.rmtree(step_dir)
+    tmp_dir.rename(step_dir)
+    (root / "LATEST").write_text(step_dir.name)       # atomic pointer last
+    return step_dir
+
+
+def latest_step(directory: str | pathlib.Path) -> int | None:
+    root = pathlib.Path(directory)
+    pointer = root / "LATEST"
+    if not pointer.exists():
+        return None
+    name = pointer.read_text().strip()
+    if not (root / name / "manifest.json").exists():
+        return None
+    return int(name.split("_")[1])
+
+
+def restore(directory: str | pathlib.Path, like_params, like_opt_state,
+            dist: DistContext | None = None, param_shardings=None,
+            opt_shardings=None, step: int | None = None):
+    """Load the checkpoint onto (possibly different) mesh/shardings.
+
+    ``like_*`` give the target tree structure; ``*_shardings`` (optional
+    NamedSharding trees) trigger elastic re-shard via device_put.
+    Returns (params, opt_state, step).
+    """
+    root = pathlib.Path(directory)
+    if step is None:
+        step = latest_step(root)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {root}")
+    step_dir = root / f"step_{step:08d}"
+    manifest = json.loads((step_dir / "manifest.json").read_text())
+
+    like = {"params": like_params, "opt_state": like_opt_state}
+    keys, like_leaves, treedef = _flatten_with_paths(like)
+    if keys != manifest["keys"]:
+        missing = set(manifest["keys"]) ^ set(keys)
+        raise ValueError(f"checkpoint/model structure mismatch: {sorted(missing)[:5]}...")
+
+    with np.load(step_dir / "arrays.npz") as z:
+        arrays = [z[f"a{i}"] for i in range(len(keys))]
+
+    shardings = None
+    if param_shardings is not None and opt_shardings is not None:
+        sh = {"params": param_shardings, "opt_state": opt_shardings}
+        _, sh_leaves, _ = _flatten_with_paths(sh)
+        shardings = sh_leaves
+
+    out_leaves = []
+    for i, (arr, like_leaf) in enumerate(zip(arrays, like_leaves)):
+        target_dtype = jnp.dtype(like_leaf.dtype)
+        if arr.dtype != target_dtype:
+            arr = jnp.asarray(arr).astype(target_dtype)
+        if shardings is not None:
+            out_leaves.append(jax.device_put(arr, shardings[i]))
+        else:
+            out_leaves.append(jax.device_put(arr))
+    state = jax.tree_util.tree_unflatten(treedef, out_leaves)
+    return state["params"], state["opt_state"], step

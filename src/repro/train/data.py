@@ -1,0 +1,52 @@
+"""Deterministic synthetic data pipeline (token stream + modality stubs).
+
+Produces the same global batch for a given (seed, step) on any topology —
+restart/elastic-safe — with host-side generation (cheap threefry via numpy)
+and device_put onto the batch shardings. Injects configurable host-side
+latency to emulate input-pipeline stalls (the paper's PCIe/NIC-preceded
+execution-idle states come largely from exactly this path, §4.5).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass
+class SyntheticDataset:
+    cfg: ModelConfig
+    global_batch: int
+    seq_len: int
+    seed: int = 0
+    #: emulated host-side fetch latency per batch (s); 0 disables
+    fetch_latency_s: float = 0.0
+
+    def batch_at(self, step: int) -> dict[str, np.ndarray]:
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step]))
+        if self.fetch_latency_s > 0:
+            time.sleep(self.fetch_latency_s)
+        tokens = rng.integers(0, self.cfg.vocab_size,
+                              (self.global_batch, self.seq_len + 1),
+                              dtype=np.int32)
+        out = {"tokens": tokens[:, :-1], "labels": tokens[:, 1:]}
+        if self.cfg.family == "encdec":
+            out["frames"] = rng.standard_normal(
+                (self.global_batch, self.cfg.n_frames, self.cfg.d_model),
+                dtype=np.float32)
+        if self.cfg.family == "vlm":
+            out["vision"] = rng.standard_normal(
+                (self.global_batch, self.cfg.n_vision_tokens, self.cfg.d_model),
+                dtype=np.float32)
+        return out
+
+    def device_batch_at(self, step: int, shardings=None):
+        host = self.batch_at(step)
+        if shardings is None:
+            return jax.tree.map(jax.device_put, host)
+        return {k: jax.device_put(v, shardings[k]) for k, v in host.items()}

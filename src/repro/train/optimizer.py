@@ -1,0 +1,176 @@
+"""Optimizers (pure-functional, no optax dependency).
+
+* **AdamW** — f32 master weights + f32 first/second moments (12 B/param of
+  state on top of the bf16 compute params).
+* **Adafactor** — factored second moment (row/col statistics), no first
+  moment, f32 master weights (~4 B/param of state). Used for deepseek-v3-671b
+  and llama-3.2-vision-90b, whose Adam state cannot fit 256 x 16 GiB chips
+  (see DESIGN.md §6 / EXPERIMENTS.md §Dry-run).
+
+API:
+    opt = adamw(lr=...) | adafactor(lr=...)
+    state = opt.init(params)
+    new_params, new_state, stats = opt.step(params, grads, state)
+    specs = opt.state_specs(param_spec_tree, abstract_params)
+State trees mirror the param tree, so param PartitionSpecs apply leaf-wise
+(factored stats drop one dim and inherit the compatible prefix spec).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    step: Callable
+    state_specs: Callable  # (param_specs, abstract_params) -> state spec tree
+
+
+def _global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def _clip_by_global_norm(grads, max_norm: float):
+    norm = _global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads), norm
+
+
+def _zip_apply(fn, *trees):
+    """Apply fn leaf-wise across trees whose structures match tree[0];
+    fn returns a tuple; returns a tuple of trees."""
+    flat0, treedef = jax.tree.flatten(trees[0])
+    flats = [flat0] + [treedef.flatten_up_to(t) for t in trees[1:]]
+    outs = [fn(*leaves) for leaves in zip(*flats)]
+    n_out = len(outs[0])
+    return tuple(jax.tree.unflatten(treedef, [o[i] for o in outs])
+                 for i in range(n_out))
+
+
+# --------------------------------------------------------------------------- #
+# AdamW
+# --------------------------------------------------------------------------- #
+def adamw(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1,
+          grad_clip: float = 1.0) -> Optimizer:
+    def init(params):
+        return {
+            "master": jax.tree.map(lambda p: p.astype(jnp.float32), params),
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def step(params, grads, state):
+        grads, gnorm = _clip_by_global_norm(grads, grad_clip)
+        count = state["count"] + 1
+        c = count.astype(jnp.float32)
+        bc1 = 1.0 - b1 ** c
+        bc2 = 1.0 - b2 ** c
+
+        def upd(master, g, m, v):
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * jnp.square(g)
+            new_master = master - lr * ((m / bc1) / (jnp.sqrt(v / bc2) + eps)
+                                        + weight_decay * master)
+            return new_master, m, v
+
+        master, m, v = _zip_apply(upd, state["master"], grads, state["m"], state["v"])
+        new_params = jax.tree.map(lambda ms, p: ms.astype(p.dtype), master, params)
+        return new_params, {"master": master, "m": m, "v": v, "count": count}, \
+            {"grad_norm": gnorm}
+
+    def state_specs(param_specs, abstract_params):
+        return {"master": param_specs, "m": param_specs, "v": param_specs,
+                "count": P()}
+
+    return Optimizer(init=init, step=step, state_specs=state_specs)
+
+
+# --------------------------------------------------------------------------- #
+# Adafactor (factored second moment, beta1 = 0)
+# --------------------------------------------------------------------------- #
+def adafactor(lr: float = 1e-3, decay: float = 0.8, eps: float = 1e-30,
+              weight_decay: float = 0.0, grad_clip: float = 1.0,
+              min_dim_size_to_factor: int = 128) -> Optimizer:
+    def _factored(shape) -> bool:
+        return (len(shape) >= 2 and shape[-1] >= min_dim_size_to_factor
+                and shape[-2] >= min_dim_size_to_factor)
+
+    def init(params):
+        def stats(p):
+            if _factored(p.shape):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {
+            "master": jax.tree.map(lambda p: p.astype(jnp.float32), params),
+            "stats": jax.tree.map(stats, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def step(params, grads, state):
+        grads, gnorm = _clip_by_global_norm(grads, grad_clip)
+        count = state["count"] + 1
+        c = count.astype(jnp.float32)
+        beta2 = 1.0 - c ** (-decay)
+
+        def upd(master, g, st):
+            g2 = jnp.square(g) + eps
+            if _factored(g.shape):
+                vr = beta2 * st["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc = beta2 * st["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)
+                v = (vr[..., None] * vc[..., None, :]) / denom[..., None]
+                new_st = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * st["v"] + (1 - beta2) * g2
+                new_st = {"v": v}
+            update = g * jax.lax.rsqrt(v + eps)
+            rms = jnp.sqrt(jnp.mean(jnp.square(update)) + eps)
+            update = update / jnp.maximum(1.0, rms)
+            return master - lr * (update + weight_decay * master), new_st
+
+        is_stats = lambda x: isinstance(x, dict) and ("v" in x or "vr" in x)
+        flat_m, treedef = jax.tree.flatten(state["master"])
+        flat_g = treedef.flatten_up_to(grads)
+        flat_s = treedef.flatten_up_to(
+            jax.tree.map(lambda s: s, state["stats"], is_leaf=is_stats))
+        new_m, new_s = [], []
+        for ms, g, st in zip(flat_m, flat_g, flat_s):
+            nm, ns = upd(ms, g, st)
+            new_m.append(nm)
+            new_s.append(ns)
+        master = jax.tree.unflatten(treedef, new_m)
+        stats = jax.tree.unflatten(treedef, new_s)
+        new_params = jax.tree.map(lambda ms, p: ms.astype(p.dtype), master, params)
+        return new_params, {"master": master, "stats": stats, "count": count}, \
+            {"grad_norm": gnorm}
+
+    def state_specs(param_specs, abstract_params):
+        def stats_spec(spec, leaf):
+            axes = tuple(spec) + (None,) * (len(leaf.shape) - len(tuple(spec)))
+            if _factored(leaf.shape):
+                return {"vr": P(*axes[:-1]), "vc": P(*(axes[:-2] + (axes[-1],)))}
+            return {"v": P(*axes)}
+
+        flat_spec, treedef = jax.tree.flatten(
+            param_specs, is_leaf=lambda x: isinstance(x, P))
+        flat_params = treedef.flatten_up_to(abstract_params)
+        stats = jax.tree.unflatten(
+            treedef, [stats_spec(s, p) for s, p in zip(flat_spec, flat_params)])
+        return {"master": param_specs, "stats": stats, "count": P()}
+
+    return Optimizer(init=init, step=step, state_specs=state_specs)
+
+
+def for_arch(arch_name: str, lr: float = 3e-4) -> Optimizer:
+    """Giant archs get Adafactor (memory); everything else AdamW."""
+    if arch_name.startswith(("deepseek-v3", "llama-3.2-vision")):
+        return adafactor(lr=lr)
+    return adamw(lr=lr)

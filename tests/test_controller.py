@@ -1,0 +1,137 @@
+"""Algorithm 1 controller + power model + imbalance scheduler tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.controller import (ControllerConfig, DownscaleMode,
+                                   ExecutionIdleController)
+from repro.core.imbalance import ImbalanceScheduler, PoolConfig, PoolPolicy
+from repro.core.power_model import (ClockLevel, PLATFORMS, SimulatedDevice,
+                                    get_platform)
+
+IDLE = {"sm": 0.0, "dram": 0.0, "pcie_rx": 0.0}
+BUSY = {"sm": 0.9, "dram": 0.5, "pcie_rx": 0.0}
+
+
+def make(mode=DownscaleMode.SM_ONLY, x=3.0, y=5.0):
+    dev = SimulatedDevice(get_platform("l40s"))
+    ctl = ExecutionIdleController(dev, ControllerConfig(
+        threshold_x_s=x, cooldown_y_s=y, mode=mode))
+    return dev, ctl
+
+
+def test_downscale_after_threshold():
+    dev, ctl = make()
+    for t in range(3):
+        ctl.step(float(t), IDLE)
+        assert not ctl.downscaled          # c <= X so far
+    ctl.step(3.0, IDLE)
+    assert ctl.downscaled                  # c = 4 > X
+    assert dev.clocks() == (ClockLevel.MIN, ClockLevel.MAX)
+
+
+def test_restore_on_activity_and_cooldown():
+    dev, ctl = make()
+    for t in range(5):
+        ctl.step(float(t), IDLE)
+    assert ctl.downscaled
+    ctl.step(5.0, BUSY)
+    assert not ctl.downscaled
+    assert dev.clocks() == (ClockLevel.MAX, ClockLevel.MAX)
+    # cooldown: immediate re-idle must NOT downscale before t=10 (y=5)
+    for t in range(6, 10):
+        ctl.step(float(t), IDLE)
+        assert not ctl.downscaled
+    ctl.step(10.0, IDLE)
+    assert ctl.downscaled
+
+
+def test_sm_and_mem_mode_reaches_deep_idle_power():
+    dev, ctl = make(mode=DownscaleMode.SM_AND_MEM)
+    for t in range(5):
+        ctl.step(float(t), IDLE)
+    plat = get_platform("l40s")
+    # §5.3: SM+mem downscale lands at deep-idle power (35 W on L40S)
+    assert dev.power_w(10.0, 0.0) == pytest.approx(plat.deep_idle_w)
+
+
+def test_busy_never_downscales():
+    dev, ctl = make()
+    for t in range(50):
+        ctl.step(float(t), BUSY)
+    assert not ctl.downscaled
+    assert ctl.stats.downscale_events == 0
+
+
+@given(st.integers(0, 2**31 - 1), st.floats(1.0, 6.0), st.floats(1.0, 8.0))
+@settings(max_examples=30, deadline=None)
+def test_controller_invariants(seed, x, y):
+    """Clocks are MIN only while `downscaled`; restore always follows
+    activity; downscale only after > x consecutive idle seconds."""
+    rng = np.random.default_rng(seed)
+    dev, ctl = make(x=x, y=y)
+    idle_run = 0.0
+    for t in range(200):
+        idle = rng.random() < 0.6
+        ctl.step(float(t), IDLE if idle else BUSY)
+        idle_run = idle_run + 1.0 if idle else 0.0
+        if ctl.downscaled:
+            assert dev.clocks()[0] == ClockLevel.MIN
+            assert idle_run > x                   # only after sustained idle
+        if not idle:
+            assert not ctl.downscaled             # activity restores
+
+
+# --------------------------------------------------------------------------- #
+# power model
+# --------------------------------------------------------------------------- #
+def test_exec_idle_above_deep_idle_all_platforms():
+    """Fig 4: execution-idle power >> deep-idle on every platform."""
+    for name, plat in PLATFORMS.items():
+        assert plat.exec_idle_w > plat.deep_idle_w, name
+        assert plat.power_w(0.0, resident=True) > plat.power_w(0.0, resident=False)
+        assert plat.power_w(1.0) <= plat.tdp_w * 1.0001
+
+
+def test_power_monotone_in_util():
+    plat = get_platform("tpu_v5e")
+    p = [plat.power_w(u) for u in np.linspace(0, 1, 11)]
+    assert all(b >= a for a, b in zip(p, p[1:]))
+
+
+def test_switch_latency_stalls():
+    dev = SimulatedDevice(get_platform("l40s"), switch_latency_s=0.3)
+    dev.set_clocks(10.0, ClockLevel.MIN, ClockLevel.MAX)
+    assert dev.perf_scale(10.1) == 0.0     # mid-switch
+    assert dev.perf_scale(10.4) > 0.0
+
+
+# --------------------------------------------------------------------------- #
+# imbalance scheduler (§5.1)
+# --------------------------------------------------------------------------- #
+def test_consolidated_routes_only_to_active():
+    pool = PoolConfig(n_devices=8, policy=PoolPolicy.CONSOLIDATED, n_active=2)
+    sched = ImbalanceScheduler(pool)
+    for _ in range(100):
+        assert sched.route(1.0) in (0, 1)
+    assert sched.inactive_devices() == tuple(range(2, 8))
+
+
+def test_balanced_join_shortest_queue():
+    sched = ImbalanceScheduler(PoolConfig(n_devices=4))
+    targets = [sched.route(1.0) for _ in range(8)]
+    # equal work -> round-robin-like spread: every device got 2
+    assert sorted(targets) == [0, 0, 1, 1, 2, 2, 3, 3]
+
+
+@given(st.integers(1, 8), st.integers(0, 2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_work_conservation(n_active, seed):
+    rng = np.random.default_rng(seed)
+    sched = ImbalanceScheduler(PoolConfig(
+        n_devices=8, policy=PoolPolicy.CONSOLIDATED, n_active=n_active))
+    work = rng.uniform(0.5, 5.0, 50)
+    for w in work:
+        sched.route(float(w))
+    assert sum(sched.outstanding) == pytest.approx(float(work.sum()))
+    assert sum(sched.routed) == 50

@@ -1,0 +1,146 @@
+"""Unit + property tests for the paper's core: states, intervals, energy."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.energy import integrate, merge
+from repro.core.intervals import (apply_min_duration, duration_percentiles,
+                                  extract_intervals, runs)
+from repro.core.states import (ClassifierConfig, DeviceState, classify_sample,
+                               classify_series, in_execution_mask,
+                               state_time_fractions)
+
+
+# --------------------------------------------------------------------------- #
+# classifier (§2.2)
+# --------------------------------------------------------------------------- #
+def test_deep_idle_when_not_resident():
+    assert classify_sample({"program_resident": False, "sm": 99.0}) \
+        == DeviceState.DEEP_IDLE
+
+
+def test_execution_idle_all_signals_low():
+    s = {"program_resident": True, "sm": 1.0, "tensor": 0.0, "dram": 2.0,
+         "pcie_tx": 0.1, "pcie_rx": 0.2}
+    assert classify_sample(s) == DeviceState.EXECUTION_IDLE
+
+
+def test_active_if_any_signal_high():
+    base = {"program_resident": True, "sm": 0.0, "dram": 0.0}
+    assert classify_sample({**base, "sm": 5.0}) == DeviceState.ACTIVE
+    assert classify_sample({**base, "dram": 50.0}) == DeviceState.ACTIVE
+    assert classify_sample({**base, "pcie_rx": 1.5}) == DeviceState.ACTIVE
+
+
+def test_missing_signal_omitted_not_violated():
+    # only sm available and low -> execution-idle (nan = unavailable)
+    s = {"program_resident": True, "sm": 1.0, "dram": float("nan")}
+    assert classify_sample(s) == DeviceState.EXECUTION_IDLE
+
+
+@given(
+    resident=st.lists(st.booleans(), min_size=1, max_size=200),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=50, deadline=None)
+def test_states_mutually_exclusive_exhaustive(resident, seed):
+    """The three states partition every sample (paper §2.2)."""
+    rng = np.random.default_rng(seed)
+    n = len(resident)
+    resident = np.array(resident)
+    sm = rng.uniform(0, 100, n)
+    states = classify_series(resident, {"sm": sm}, {})
+    # exhaustive: every sample classified
+    assert set(np.unique(states)) <= {0, 1, 2}
+    # deep-idle iff not resident
+    assert np.all((states == int(DeviceState.DEEP_IDLE)) == ~resident)
+    # active iff resident and sm >= 5
+    assert np.all((states == int(DeviceState.ACTIVE)) == (resident & (sm >= 5.0)))
+    fractions = state_time_fractions(states)
+    assert abs(sum(fractions.values()) - 1.0) < 1e-9
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 50))
+@settings(max_examples=30, deadline=None)
+def test_threshold_monotonicity(seed, n_jobs):
+    """A more permissive activity threshold can only grow exec-idle time."""
+    rng = np.random.default_rng(seed)
+    n = 500
+    resident = np.ones(n, bool)
+    sm = rng.uniform(0, 30, n)
+    lo = classify_series(resident, {"sm": sm}, {},
+                         ClassifierConfig(activity_threshold_pct=2.0))
+    hi = classify_series(resident, {"sm": sm}, {},
+                         ClassifierConfig(activity_threshold_pct=10.0))
+    assert np.sum(hi == int(DeviceState.EXECUTION_IDLE)) >= \
+        np.sum(lo == int(DeviceState.EXECUTION_IDLE))
+
+
+# --------------------------------------------------------------------------- #
+# intervals (§2.2 / §4.4)
+# --------------------------------------------------------------------------- #
+def test_runs_partition_series():
+    states = np.array([0, 0, 1, 1, 1, 2, 1, 1, 0])
+    rs = list(runs(states))
+    assert sum(r.duration for r in rs) == len(states)
+    assert [r.state for r in rs] == [DeviceState.DEEP_IDLE,
+                                     DeviceState.EXECUTION_IDLE,
+                                     DeviceState.ACTIVE,
+                                     DeviceState.EXECUTION_IDLE,
+                                     DeviceState.DEEP_IDLE]
+
+
+def test_min_duration_threshold():
+    # 3s idle run dropped at 5s threshold, kept at 1s threshold
+    states = np.array([2, 2, 1, 1, 1, 2, 2, 1, 1, 1, 1, 1, 2])
+    assert len(extract_intervals(states, min_duration_s=5)) == 1
+    assert len(extract_intervals(states, min_duration_s=1)) == 2
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_apply_min_duration_conservative(seed):
+    """Relabeling short idles can only reduce measured exec-idle time, and
+    never touches deep-idle samples."""
+    rng = np.random.default_rng(seed)
+    states = rng.choice([0, 1, 2], 300, p=[0.2, 0.3, 0.5]).astype(np.int8)
+    out = apply_min_duration(states, min_duration_s=5)
+    assert np.sum(out == 1) <= np.sum(states == 1)
+    assert np.array_equal(out == 0, states == 0)
+
+
+# --------------------------------------------------------------------------- #
+# energy accounting
+# --------------------------------------------------------------------------- #
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_energy_conservation(seed):
+    """Per-state energies sum to total integrated energy."""
+    rng = np.random.default_rng(seed)
+    n = 400
+    states = rng.choice([0, 1, 2], n).astype(np.int8)
+    power = rng.uniform(30, 400, n)
+    bd = integrate(states, power, min_duration_s=None)
+    assert bd.total_energy_j == pytest.approx(float(power.sum()))
+    assert bd.total_time_s == pytest.approx(n)
+    # in-execution fractions bounded
+    assert 0.0 <= bd.exec_idle_energy_fraction <= 1.0
+    assert 0.0 <= bd.exec_idle_time_fraction <= 1.0
+
+
+def test_merge_additive():
+    rng = np.random.default_rng(0)
+    parts = []
+    total = 0.0
+    for _ in range(5):
+        states = rng.choice([0, 1, 2], 100).astype(np.int8)
+        power = rng.uniform(30, 300, 100)
+        parts.append(integrate(states, power, min_duration_s=None))
+        total += power.sum()
+    merged = merge(parts)
+    assert merged.total_energy_j == pytest.approx(total)
+
+
+def test_in_execution_mask():
+    states = np.array([0, 1, 2, 0, 1])
+    assert list(in_execution_mask(states)) == [False, True, True, False, True]

@@ -1,0 +1,136 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs ref.py oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rmsnorm import rmsnorm
+from repro.kernels.rwkv6_scan import wkv6
+from repro.kernels.ssm_scan import ssm_scan
+
+KEY = jax.random.PRNGKey(0)
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+# --------------------------------------------------------------------------- #
+# flash attention
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("b,h,kv,s,d", [
+    (2, 4, 2, 256, 64), (1, 8, 1, 128, 128), (2, 2, 2, 512, 64),
+])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 64), (False, 0)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(b, h, kv, s, d, causal, window, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, h, s, d), dtype)
+    k = jax.random.normal(ks[1], (b, kv, s, d), dtype)
+    v = jax.random.normal(ks[2], (b, kv, s, d), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=64, block_k=64, interpret=True)
+    expect = ref.mha_reference(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), **tol(dtype))
+
+
+def test_flash_attention_uneven_heads():
+    """GQA with q_per_kv=3 (hymba-like 25H/5KV pattern scaled down)."""
+    q = jax.random.normal(KEY, (1, 6, 128, 64))
+    k = jax.random.normal(KEY, (1, 2, 128, 64))
+    v = jax.random.normal(KEY, (1, 2, 128, 64))
+    out = flash_attention(q, k, v, block_q=64, block_k=64, interpret=True)
+    expect = ref.mha_reference(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-5, atol=2e-5)
+
+
+# --------------------------------------------------------------------------- #
+# decode attention
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("b,h,kv,s,d,cl", [
+    (2, 8, 2, 1024, 64, 700), (1, 4, 4, 512, 128, 512),
+    (2, 2, 1, 512, 64, 1), (1, 16, 2, 2048, 64, 1500),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention(b, h, kv, s, d, cl, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, h, d), dtype)
+    kc = jax.random.normal(ks[1], (b, kv, s, d), dtype)
+    vc = jax.random.normal(ks[2], (b, kv, s, d), dtype)
+    out = decode_attention(q, kc, vc, cl, block_k=256, interpret=True)
+    expect = ref.decode_attention_reference(q, kc, vc, cl)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), **tol(dtype))
+
+
+# --------------------------------------------------------------------------- #
+# rwkv6 wkv
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("b,h,s,kd,chunk", [
+    (2, 3, 64, 16, 16), (1, 2, 128, 32, 32), (1, 1, 96, 64, 32),
+    (2, 2, 64, 32, 64),  # chunk > s falls back to one chunk
+])
+def test_wkv6(b, h, s, kd, chunk):
+    ks = jax.random.split(KEY, 5)
+    r = jax.random.normal(ks[0], (b, h, s, kd))
+    k = jax.random.normal(ks[1], (b, h, s, kd))
+    v = jax.random.normal(ks[2], (b, h, s, kd))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (b, h, s, kd))) * 0.55 + 0.4
+    u = jax.random.normal(ks[4], (h, kd)) * 0.1
+    y, state = wkv6(r, k, v, w, u, chunk=chunk, interpret=True)
+    ye, se = ref.wkv6_reference(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ye), rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(state), np.asarray(se), rtol=1e-3, atol=1e-3)
+
+
+def test_wkv6_extreme_decay():
+    """Decays near 0 and near 1 stay finite (log-space in-chunk form)."""
+    b, h, s, kd = 1, 1, 64, 16
+    ks = jax.random.split(KEY, 4)
+    r = jax.random.normal(ks[0], (b, h, s, kd))
+    k = jax.random.normal(ks[1], (b, h, s, kd))
+    v = jax.random.normal(ks[2], (b, h, s, kd))
+    w = jnp.where(jax.random.bernoulli(ks[3], 0.5, (b, h, s, kd)), 0.999, 1e-4)
+    y, state = wkv6(r, k, v, w, u=jnp.zeros((h, kd)), chunk=32, interpret=True)
+    assert np.isfinite(np.asarray(y)).all()
+    ye, _ = ref.wkv6_reference(r, k, v, w, jnp.zeros((h, kd)))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ye), rtol=1e-3, atol=1e-3)
+
+
+# --------------------------------------------------------------------------- #
+# mamba selective scan
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("bsz,s,di,n,chunk,bi", [
+    (2, 64, 32, 8, 16, 32), (1, 96, 64, 16, 32, 32), (2, 128, 128, 16, 32, 64),
+])
+def test_ssm_scan(bsz, s, di, n, chunk, bi):
+    ks = jax.random.split(KEY, 5)
+    u = jax.random.normal(ks[0], (bsz, s, di))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (bsz, s, di)))
+    a = -jnp.exp(jax.random.normal(ks[2], (di, n)) * 0.5)
+    b = jax.random.normal(ks[3], (bsz, s, n))
+    c = jax.random.normal(ks[4], (bsz, s, n))
+    y, h = ssm_scan(u, dt, a, b, c, chunk=chunk, block_i=bi, interpret=True)
+    ye, he = ref.ssm_scan_reference(u, dt, a, b, c)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ye), rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(he), rtol=2e-3, atol=2e-3)
+
+
+# --------------------------------------------------------------------------- #
+# rmsnorm
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("shape", [(4, 128), (3, 50, 128), (1, 7, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm(shape, dtype):
+    x = jax.random.normal(KEY, shape, dtype)
+    w = jax.random.normal(jax.random.PRNGKey(1), shape[-1:], dtype)
+    out = rmsnorm(x, w, interpret=True)
+    expect = ref.rmsnorm_reference(x, w)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), **tol(dtype))

@@ -1,0 +1,84 @@
+"""HLO-analyzer tests: loop awareness, collective accounting, dot flops."""
+import textwrap
+
+from repro.roofline.hlo_parse import analyze_hlo
+
+SIMPLE = textwrap.dedent("""\
+    HloModule test
+
+    %region_body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+      %p = (s32[], f32[8,8]) parameter(0)
+      %i = s32[] get-tuple-element(%p), index=0
+      %x = f32[8,8] get-tuple-element(%p), index=1
+      %ar = f32[8,8]{1,0} all-reduce(%x), replica_groups=[4,4]<=[16], to_apply=%add
+      ROOT %t = (s32[], f32[8,8]) tuple(%i, %ar)
+    }
+
+    %region_cond (p2: (s32[], f32[8,8])) -> pred[] {
+      %p2 = (s32[], f32[8,8]) parameter(0)
+      %i2 = s32[] get-tuple-element(%p2), index=0
+      %c = s32[] constant(10)
+      ROOT %lt = pred[] compare(%i2, %c), direction=LT
+    }
+
+    ENTRY %main (a: f32[16,32], b: f32[32,64]) -> f32[16,64] {
+      %a = f32[16,32]{1,0} parameter(0)
+      %b = f32[32,64]{1,0} parameter(1)
+      %d = f32[16,64]{1,0} dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %init = (s32[], f32[8,8]) tuple(%zero, %buf)
+      %w = (s32[], f32[8,8]) while(%init), condition=%region_cond, body=%region_body
+      ROOT %out = f32[16,64]{1,0} copy(%d)
+    }
+    """)
+
+
+def test_dot_flops():
+    stats = analyze_hlo(SIMPLE)
+    # 2 * 16 * 64 * 32 = 65536
+    assert stats.flops == 2 * 16 * 64 * 32
+
+
+def test_loop_multiplied_collectives():
+    stats = analyze_hlo(SIMPLE)
+    # all-reduce of f32[8,8] = 256 B, 10 loop trips
+    assert stats.collective_counts["all-reduce"] == 10
+    assert stats.collective_by_op["all-reduce"] == 256 * 10
+
+
+def test_materializing_bytes_counted():
+    stats = analyze_hlo(SIMPLE)
+    # dot: out 16*64*4 + operands (16*32 + 32*64)*4 ; copy: out+operand
+    dot_bytes = (16 * 64 + 16 * 32 + 32 * 64) * 4
+    copy_bytes = 2 * 16 * 64 * 4
+    ar_bytes = 256 * 2 * 10         # operand+output per trip
+    assert stats.hbm_bytes == dot_bytes + copy_bytes + ar_bytes
+
+
+def test_allgather_group_scaling():
+    hlo = textwrap.dedent("""\
+        HloModule t
+
+        ENTRY %main (x: f32[4,8]) -> f32[16,8] {
+          %x = f32[4,8]{1,0} parameter(0)
+          ROOT %ag = f32[16,8]{1,0} all-gather(%x), replica_groups=[4,4]<=[16], dimensions={0}
+        }
+        """)
+    stats = analyze_hlo(hlo)
+    # operand = output / group_size = 16*8*4 / 4
+    assert stats.collective_by_op["all-gather"] == 16 * 8 * 4 / 4
+
+
+def test_derive_terms_bottleneck():
+    from repro.roofline.analysis import derive_terms
+    from repro.roofline.hlo_parse import HloStats, COLLECTIVE_OPS
+    stats = HloStats(
+        flops=197e12, hbm_bytes=819e9 * 2, collective_bytes=50e9 * 0.5,
+        collective_by_op={o: 0.0 for o in COLLECTIVE_OPS},
+        collective_counts={o: 0.0 for o in COLLECTIVE_OPS})
+    terms = derive_terms({}, stats, n_chips=256,
+                         model_flops_global=197e12 * 256 * 0.5)
+    assert terms.compute_s == 1.0
+    assert terms.memory_s == 2.0
+    assert terms.collective_s == 0.5
+    assert terms.bottleneck == "memory"
+    assert terms.useful_fraction == 0.5

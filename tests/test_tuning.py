@@ -1,0 +1,70 @@
+"""Tuning knobs must not change semantics (optimized == baseline numerics)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import api, tuning
+from repro.models import common as cm
+
+
+@pytest.fixture(autouse=True)
+def _reset_tuning():
+    tuning.reset()
+    yield
+    tuning.reset()
+
+
+def test_grouped_attention_matches_baseline():
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (2, 256, 8, 64))
+    k = jax.random.normal(jax.random.PRNGKey(1), (2, 256, 2, 64))
+    v = jax.random.normal(jax.random.PRNGKey(2), (2, 256, 2, 64))
+    for kwargs in (dict(causal=True), dict(causal=True, window=64),
+                   dict(causal=False)):
+        tuning.reset()
+        base = cm.attention(q, k, v, q_block=128, **kwargs)
+        tuning.set_tuning(attn_grouped=True)
+        opt = cm.attention(q, k, v, q_block=128, **kwargs)
+        np.testing.assert_allclose(np.asarray(opt), np.asarray(base),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_grouped_decode_matches_baseline():
+    q = jax.random.normal(jax.random.PRNGKey(0), (2, 1, 8, 64))
+    kc = jax.random.normal(jax.random.PRNGKey(3), (2, 512, 2, 64))
+    vc = jax.random.normal(jax.random.PRNGKey(4), (2, 512, 2, 64))
+    base = cm.decode_attention(q, kc, vc, 300)
+    tuning.set_tuning(attn_grouped=True)
+    opt = cm.decode_attention(q, kc, vc, 300)
+    np.testing.assert_allclose(np.asarray(opt), np.asarray(base),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_block_remat_preserves_grads():
+    cfg = get_smoke_config("gemma-2b")
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    batch = api.make_batch(cfg, 2, 32)
+
+    def loss(p):
+        return api.loss_fn(p, batch, cfg)[0]
+
+    base_loss, base_grads = jax.value_and_grad(loss)(params)
+    tuning.set_tuning(attn_grouped=True, attn_probs_bf16=True,
+                      attn_block_remat=True)
+    opt_loss, opt_grads = jax.value_and_grad(loss)(params)
+    # bf16 probs change rounding slightly; loss must agree to bf16 precision
+    assert abs(float(base_loss) - float(opt_loss)) < 2e-2
+    gb = jnp.concatenate([g.astype(jnp.float32).ravel()
+                          for g in jax.tree.leaves(base_grads)])
+    go = jnp.concatenate([g.astype(jnp.float32).ravel()
+                          for g in jax.tree.leaves(opt_grads)])
+    cos = float(jnp.dot(gb, go) / (jnp.linalg.norm(gb) * jnp.linalg.norm(go)))
+    assert cos > 0.99
+
+
+def test_tuning_describe():
+    assert tuning.Tuning().describe() == "baseline"
+    t = tuning.Tuning(attn_grouped=True, seq_parallel=True)
+    assert "attn_grouped" in t.describe() and "seq_parallel" in t.describe()
