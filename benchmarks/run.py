@@ -45,10 +45,14 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated bench-name substrings")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the result rows as JSON (committed "
+                         "baselines, e.g. BENCH_fleet_analyze.json)")
     args = ap.parse_args()
 
+    from benchmarks.fleet_bench import bench_fleet_analyze
     from benchmarks.paper_benches import ALL_BENCHES
-    benches = list(ALL_BENCHES) + [bench_roofline]
+    benches = list(ALL_BENCHES) + [bench_roofline, bench_fleet_analyze]
     if args.only:
         keys = args.only.split(",")
         benches = [fn for fn in benches
@@ -56,6 +60,7 @@ def main() -> None:
 
     print("name,us_per_call,derived,target,ok")
     summaries = []
+    all_rows = []
     all_ok = True
     for fn in benches:
         bench = fn()
@@ -63,9 +68,16 @@ def main() -> None:
             target = "" if row.target is None else f"{row.target:.6g}"
             ok = "" if row.ok is None else str(row.ok)
             print(f"{row.csv()},{target},{ok}", flush=True)
+            all_rows.append({"name": row.name, "us_per_call": row.us_per_call,
+                             "derived": row.derived, "target": row.target,
+                             "ok": row.ok})
         summaries.append(bench.summary())
         if any(r.ok is False for r in bench.rows):
             all_ok = False
+
+    if args.json:
+        pathlib.Path(args.json).write_text(
+            json.dumps({"rows": all_rows, "all_ok": all_ok}, indent=1) + "\n")
 
     print("\n== validation summary ==", file=sys.stderr)
     for s in summaries:

@@ -18,7 +18,8 @@ import numpy as np
 
 from repro.cluster import jobgen
 from repro.core.power_model import PLATFORMS, PlatformSpec
-from repro.telemetry.records import FIELDS, TelemetryFrame
+from repro.telemetry.records import FIELDS, TelemetryFrame, _DTYPES
+from repro.telemetry.storage import TelemetryStore
 
 #: fleet platform mix (paper Table 4, profiled subset, normalized)
 FLEET_MIX: tuple[tuple[str, float], ...] = (
@@ -94,12 +95,40 @@ def _phase_signals(rng, phase: jobgen.Phase, plat: PlatformSpec, n: int):
     return cols, resident, nvlink
 
 
+def _materialize(col_lists: dict[str, list[np.ndarray]]) -> dict[str, np.ndarray]:
+    """Concatenate per-field piece lists into schema-typed columns; fields a
+    platform never emits (e.g. ici_*) become all-NaN / zero columns."""
+    n_total = sum(a.shape[0] for a in col_lists["timestamp"])
+    columns = {}
+    for f in FIELDS:
+        if col_lists[f]:
+            arr = np.concatenate(col_lists[f])
+        else:
+            fill = np.nan if _DTYPES[f].startswith("f") else 0
+            arr = np.full(n_total, fill)
+        columns[f] = arr.astype(_DTYPES[f])
+    return columns
+
+
 def generate_cluster(
     n_devices: int = 24,
     horizon_s: int = 6 * 3600,
     seed: int = 0,
     min_job_s: int = 1800,
+    store: TelemetryStore | None = None,
+    shard_s: int = 6 * 3600,
 ) -> ClusterSample:
+    """Simulate the §2.1 deployment.
+
+    With ``store=None`` (default) the whole fleet frame is materialized in
+    memory, as before. Passing a :class:`TelemetryStore` switches to chunked
+    emission: each device's stream is flushed to the store every ``shard_s``
+    samples, so peak memory is one shard (+ one phase block) — day-scale x
+    hundreds-of-devices fleets generate without building the fleet frame.
+    Shards are appended in (device, time) order, i.e. already in the
+    per-stream time order ``analyze_store`` requires, and the emitted rows
+    are identical to the monolithic frame for the same seed.
+    """
     rng = np.random.default_rng(seed)
     names = [n for n, _ in FLEET_MIX]
     probs = np.array([p for _, p in FLEET_MIX])
@@ -114,8 +143,31 @@ def generate_cluster(
         plat = PLATFORMS[str(rng.choice(names, p=probs))]
         t = 0
         dev_cols: dict[str, list[np.ndarray]] = {f: [] for f in FIELDS}
+        buffered = 0
+
+        def flush(force: bool = False):
+            """Chunked emission: spill the device buffer into <=shard_s-row
+            shards; a sub-shard remainder stays buffered unless forced."""
+            nonlocal buffered
+            if store is None or buffered == 0 or (buffered < shard_s and not force):
+                return
+            cols = _materialize(dev_cols)
+            start = 0
+            while buffered - start >= shard_s or (force and start < buffered):
+                end = min(start + shard_s, buffered)
+                store.write_shard(
+                    TelemetryFrame({k: v[start:end] for k, v in cols.items()}),
+                    host=f"h{dev // 4}",
+                    day=int(cols["timestamp"][start]) // 86400,
+                    flush_manifest=False)
+                start = end
+            for f in FIELDS:
+                dev_cols[f][:] = [cols[f][start:]] if start < buffered else []
+            buffered -= start
 
         def emit(cols, resident, nvlink, n, jid):
+            nonlocal buffered
+            buffered += n
             ts = np.arange(t, t + n, dtype=np.float64)
             dev_cols["timestamp"].append(ts)
             dev_cols["hostname"].append(np.full(n, dev // 4, np.int32))
@@ -129,7 +181,7 @@ def generate_cluster(
                 dev_cols[f].append(cols[f])
             dev_cols["nvlink_tx"].append(nvlink)
             dev_cols["nvlink_rx"].append(nvlink.copy())
-            for f in ("fp16", "fp32", "fp64"):
+            for f in ("fp16", "fp32", "fp64", "ici_tx", "ici_rx"):
                 dev_cols[f].append(np.full(n, np.nan))
             dev_cols["host_mem_util"].append(np.full(n, 35.0))
             dev_cols["sm_clk"].append(np.full(n, plat.sm_clk_mhz[1]))
@@ -149,6 +201,7 @@ def generate_cluster(
                       if plat.name not in jobgen.NVLINK_PLATFORMS else np.zeros(n))
                 emit(cols, np.zeros(n, np.int8), nv, n, -1)
                 t += n
+                flush()
             if t >= horizon_s:
                 break
 
@@ -167,21 +220,19 @@ def generate_cluster(
                 cols, resident, nvlink = _phase_signals(rng, ph, plat, n)
                 emit(cols, resident, nvlink, n, jid)
                 t += n
+                flush()
 
-        for f in FIELDS:
-            if dev_cols[f]:
-                all_cols[f].append(np.concatenate(dev_cols[f]))
+        if store is not None:
+            flush(force=True)
+        else:
+            for f in FIELDS:
+                if dev_cols[f]:
+                    all_cols[f].append(np.concatenate(dev_cols[f]))
 
-    columns = {}
-    from repro.telemetry.records import _DTYPES
-    n_total = sum(a.shape[0] for a in all_cols["timestamp"])
-    for f in FIELDS:
-        if all_cols[f]:
-            arr = np.concatenate(all_cols[f])
-        else:  # never emitted (e.g. ici_*): all-NaN / zero column
-            fill = np.nan if _DTYPES[f].startswith("f") else 0
-            arr = np.full(n_total, fill)
-        columns[f] = arr.astype(_DTYPES[f])
-    return ClusterSample(frame=TelemetryFrame(columns),
+    if store is not None:
+        store.save_manifest()
+    frame = (TelemetryFrame({f: np.empty(0, dtype=_DTYPES[f]) for f in FIELDS})
+             if store is not None else TelemetryFrame(_materialize(all_cols)))
+    return ClusterSample(frame=frame,
                          job_classes=job_classes,
                          job_platforms=job_platforms)

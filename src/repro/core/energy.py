@@ -11,8 +11,8 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.intervals import apply_min_duration
-from repro.core.states import DeviceState, in_execution_mask
+from repro.core.intervals import Interval, RunCarry, runs_streaming
+from repro.core.states import DeviceState
 
 
 JOULES_PER_KWH = 3.6e6
@@ -69,6 +69,111 @@ class EnergyBreakdown:
         return self.energy_j[DeviceState.EXECUTION_IDLE] / e if e else 0.0
 
 
+class StreamingIntegrator:
+    """Boundary-aware ``integrate`` + ``extract_intervals`` over one stream.
+
+    Feed time-ordered chunks of a single (job, host, device) stream via
+    :meth:`update`; :meth:`finalize` returns the :class:`EnergyBreakdown` and
+    the sustained EXECUTION_IDLE :class:`Interval` list. Results are
+    *bit-identical* for every chunking of the same series, including the
+    monolithic single-chunk case (:func:`integrate` is this class applied
+    once), because:
+
+    * run decomposition is chunking-invariant (:func:`runs_streaming` carries
+      the trailing run across boundaries), so the §2.2 sustain rule sees the
+      same maximal runs regardless of where chunks split;
+    * each run's energy is ``np.sum`` over the run's full power samples —
+      pending samples of an unfinished run are retained until the run closes,
+      so the summation tree only depends on the run itself;
+    * per-state totals accumulate run energies in time order, which is the
+      same sequence of additions under any chunking.
+
+    Retained pending samples are bounded by the longest constant-state run.
+    As a safety valve, runs longer than ``max_pending_samples`` collapse their
+    prefix into a partial sum (only such pathological runs can then differ
+    from the monolithic result, in the last ulp).
+    """
+
+    def __init__(self, min_duration_s: float | None = 5.0, dt_s: float = 1.0,
+                 max_pending_samples: int = 1 << 22):
+        self.dt_s = dt_s
+        self.min_samples = (0 if min_duration_s is None
+                            else int(np.ceil(min_duration_s / dt_s)))
+        self.max_pending_samples = max_pending_samples
+        self._carry = RunCarry()
+        self._pending: list[np.ndarray] = []   # power of the pending run
+        self._pending_n = 0
+        self._collapsed = 0.0                  # prefix sum of an over-long run
+        self._time: dict[DeviceState, int] = {s: 0 for s in DeviceState}
+        self._energy: dict[DeviceState, float] = {s: 0.0 for s in DeviceState}
+        self._intervals: list[Interval] = []
+        self.n_samples = 0
+
+    def _close_run(self, state: int, start: int, end: int, energy: float) -> None:
+        n = end - start
+        final = DeviceState(state)
+        if state == int(DeviceState.EXECUTION_IDLE):
+            if n < self.min_samples:
+                final = DeviceState.ACTIVE      # conservative relabel (§2.2)
+            else:
+                self._intervals.append(
+                    Interval(DeviceState.EXECUTION_IDLE, start, end))
+        self._time[final] += n
+        self._energy[final] += energy
+
+    def _pending_energy(self, extra: np.ndarray | None) -> float:
+        pieces = self._pending + ([extra] if extra is not None and extra.size else [])
+        if not pieces:
+            arr_sum = 0.0
+        elif len(pieces) == 1:
+            arr_sum = float(np.sum(pieces[0]))
+        else:
+            arr_sum = float(np.sum(np.concatenate(pieces)))
+        e = self._collapsed + arr_sum
+        self._pending = []
+        self._pending_n = 0
+        self._collapsed = 0.0
+        return e
+
+    def update(self, states: np.ndarray, power_w: np.ndarray) -> None:
+        states = np.asarray(states)
+        power_w = np.asarray(power_w, dtype=np.float64)
+        if states.shape != power_w.shape:
+            raise ValueError(f"states {states.shape} vs power {power_w.shape}")
+        if states.size == 0:
+            return
+        offset = self.n_samples
+        completed, carry = runs_streaming(states, self._carry, offset)
+        for state, start, end in completed:
+            if start < offset:          # run includes carried-in samples
+                energy = self._pending_energy(power_w[:max(end - offset, 0)])
+            else:
+                energy = float(np.sum(power_w[start - offset:end - offset]))
+            self._close_run(state, start, end, energy)
+        self._carry = carry
+        if carry.length:
+            # copy (not view) so chunk buffers can be released
+            piece = np.array(power_w[max(carry.start - offset, 0):])
+            if piece.size:
+                self._pending.append(piece)
+                self._pending_n += piece.size
+            if self._pending_n > self.max_pending_samples:
+                self._collapsed += float(np.sum(np.concatenate(self._pending)))
+                self._pending = []
+                self._pending_n = 0
+        self.n_samples += states.size
+
+    def finalize(self) -> tuple[EnergyBreakdown, list[Interval]]:
+        if self._carry.length:
+            energy = self._pending_energy(None)
+            self._close_run(self._carry.state, self._carry.start,
+                            self._carry.start + self._carry.length, energy)
+            self._carry = RunCarry()
+        time_s = {s: float(self._time[s] * self.dt_s) for s in DeviceState}
+        energy_j = {s: float(self._energy[s] * self.dt_s) for s in DeviceState}
+        return EnergyBreakdown(time_s=time_s, energy_j=energy_j), self._intervals
+
+
 def integrate(
     states: np.ndarray,
     power_w: np.ndarray,
@@ -77,6 +182,10 @@ def integrate(
 ) -> EnergyBreakdown:
     """Integrate power over a classified series.
 
+    Single-chunk application of :class:`StreamingIntegrator`, so monolithic
+    and chunked analyses share one accounting implementation (and agree
+    bit-for-bit).
+
     Args:
         states: int array [T] of DeviceState values.
         power_w: float array [T] of board power in watts.
@@ -84,20 +193,10 @@ def integrate(
         min_duration_s: if given, EXECUTION_IDLE runs shorter than this are
             conservatively relabelled ACTIVE before accounting (§2.2).
     """
-    states = np.asarray(states)
-    power_w = np.asarray(power_w, dtype=np.float64)
-    if states.shape != power_w.shape:
-        raise ValueError(f"states {states.shape} vs power {power_w.shape}")
-    if min_duration_s is not None:
-        states = apply_min_duration(states, min_duration_s, dt_s)
-
-    time_s: dict[DeviceState, float] = {}
-    energy_j: dict[DeviceState, float] = {}
-    for s in DeviceState:
-        mask = states == int(s)
-        time_s[s] = float(np.sum(mask) * dt_s)
-        energy_j[s] = float(np.sum(power_w[mask]) * dt_s)
-    return EnergyBreakdown(time_s=time_s, energy_j=energy_j)
+    si = StreamingIntegrator(min_duration_s=min_duration_s, dt_s=dt_s)
+    si.update(states, power_w)
+    breakdown, _ = si.finalize()
+    return breakdown
 
 
 def merge(breakdowns: list[EnergyBreakdown]) -> EnergyBreakdown:

@@ -46,6 +46,68 @@ def runs(states: np.ndarray) -> Iterator[Interval]:
         yield Interval(DeviceState(int(states[s])), int(s), int(e))
 
 
+@dataclasses.dataclass
+class RunCarry:
+    """Trailing run of a chunked state stream, not yet known to be maximal.
+
+    Carried across chunk boundaries so that a run spanning two (or more)
+    chunks is seen as ONE maximal run, exactly as the monolithic
+    :func:`runs` would see it on the concatenated series. ``start`` is a
+    global sample index; ``state`` is -1 when no run is pending.
+    """
+
+    state: int = -1
+    start: int = 0
+    length: int = 0
+
+
+def runs_streaming(
+    states: np.ndarray,
+    carry: RunCarry,
+    offset: int,
+) -> tuple[list[tuple[int, int, int]], RunCarry]:
+    """Boundary-aware run decomposition of one chunk.
+
+    Args:
+        states: int array [T] — this chunk's classified states.
+        carry: pending trailing run from the previous chunks.
+        offset: global sample index of this chunk's first sample
+            (must equal ``carry.start + carry.length`` when a run is pending).
+
+    Returns:
+        ``(completed, carry_out)`` where ``completed`` is a list of
+        ``(state, global_start, global_end)`` maximal runs finished within
+        this chunk, in time order, and ``carry_out`` is the new trailing run.
+        Feeding chunks of any size yields the exact same sequence of completed
+        runs (after a final carry flush) as :func:`runs` on the full series.
+    """
+    states = np.asarray(states)
+    n = states.shape[0]
+    if n == 0:
+        return [], carry
+    change = np.flatnonzero(np.diff(states)) + 1
+    starts = np.concatenate([[0], change])
+    ends = np.concatenate([change, [n]])
+
+    completed: list[tuple[int, int, int]] = []
+    first = 0
+    if carry.length:
+        if carry.state == int(states[0]):
+            if starts.size == 1:        # whole chunk continues the carry
+                return [], RunCarry(carry.state, carry.start, carry.length + n)
+            completed.append((carry.state, carry.start, offset + int(ends[0])))
+            first = 1
+        else:                           # carry ended exactly at the boundary
+            completed.append((carry.state, carry.start, carry.start + carry.length))
+    for i in range(first, starts.size - 1):
+        completed.append((int(states[starts[i]]),
+                          offset + int(starts[i]), offset + int(ends[i])))
+    last = starts.size - 1
+    carry_out = RunCarry(int(states[starts[last]]), offset + int(starts[last]),
+                         int(ends[last] - starts[last]))
+    return completed, carry_out
+
+
 def extract_intervals(
     states: np.ndarray,
     state: DeviceState = DeviceState.EXECUTION_IDLE,

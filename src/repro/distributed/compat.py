@@ -1,0 +1,26 @@
+"""JAX version compatibility.
+
+`shard_map` graduated from ``jax.experimental.shard_map`` into the ``jax``
+namespace, renaming ``check_rep`` -> ``check_vma`` and replacing the ``auto``
+set (axes left automatic) with ``axis_names`` (axes made manual). Importing
+from here works on both sides of that move.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, mesh, in_specs, out_specs, check_vma=True, axis_names=None):
+    if hasattr(jax, "shard_map"):
+        kw = {"check_vma": check_vma}
+        if axis_names is not None:
+            kw["axis_names"] = axis_names
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    auto = frozenset()
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _shard_map(f, mesh, in_specs, out_specs,
+                      check_rep=check_vma, auto=auto)

@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.distributed.compat import shard_map
+
 BLOCK = 256
 
 
@@ -83,7 +85,7 @@ def make_compressed_allreduce(mesh, pod_axis: str = "pod"):
             summed = jax.tree.map(lambda x: x / n_pods, summed)  # mean
             return summed, new_e
 
-        return jax.shard_map(
+        return shard_map(
             body, mesh=mesh,
             in_specs=(P(), P()), out_specs=(P(), P()),
             check_vma=False,

@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.distributed.compat import shard_map
+
 from repro.configs.base import ModelConfig
 from repro.distributed.context import DistContext, LOCAL
 from repro.models import common as cm
@@ -197,7 +199,7 @@ def moe_ffn_ep(x, p, cfg: ModelConfig, dist: DistContext,
         P(ep_axis, None, None),
     )
     out_specs = (x_spec, P())
-    out, aux = jax.shard_map(
+    out, aux = shard_map(
         block, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
         check_vma=False,
     )(x, p["router"], p["we_gate"], p["we_up"], p["we_down"])

@@ -66,6 +66,31 @@ class ServingEngine:
             lambda p, t: api.prefill(p, t, cfg))
 
     # ------------------------------------------------------------------ #
+    def _controller_signals(self) -> dict[str, float] | None:
+        """Full scaled signal row for Algorithm 1 (§5.3), or None before the
+        first telemetry row flushes.
+
+        Activity percentages become fractions in [0, 1]; communication stays
+        GB/s. NaN (signal unavailable on this platform) is dropped so the
+        controller omits it rather than treating it as violated — previously
+        only sm/dram were forwarded, so the rule could downscale during
+        active communication (ici/pcie traffic with idle compute).
+        """
+        row = self.sampler.last_row()
+        if row is None:
+            return None
+        signals: dict[str, float] = {}
+        for k in ("sm", "tensor", "fp16", "fp32", "fp64", "dram"):
+            v = float(row[k])
+            if not np.isnan(v):
+                signals[k] = v / 100.0
+        for k in ("pcie_tx", "pcie_rx", "nvlink_tx", "nvlink_rx",
+                  "ici_tx", "ici_rx"):
+            v = float(row[k])
+            if not np.isnan(v):
+                signals[k] = v
+        return signals
+
     def _free_slot(self) -> int | None:
         for i, s in enumerate(self.slots):
             if not s.active:
@@ -125,7 +150,10 @@ class ServingEngine:
         if not active:
             self.sampler.idle(1.0)
             if self.controller is not None:
-                self.controller.step(self.sampler.now, {"sm": 0.0, "dram": 0.0})
+                sig = self._controller_signals()
+                self.controller.step(self.sampler.now,
+                                     sig if sig is not None
+                                     else {"sm": 0.0, "dram": 0.0})
             return 0
         tokens = np.array([[s.last_token] for s in self.slots], np.int32)
         with self.sampler.phase("decode", compute_util=0.5, hbm_util=0.9):
@@ -145,13 +173,12 @@ class ServingEngine:
                 s.active = False
                 s.request = None
         if self.controller is not None:
-            frame = self.sampler.frame()
-            if len(frame):
-                row = frame.row(len(frame) - 1)
-                self.controller.step(self.sampler.now, {
-                    "sm": float(row["sm"]) / 100.0,
-                    "dram": float(row["dram"]) / 100.0,
-                })
+            sig = self._controller_signals()
+            # sig is None before the first row flushes (sub-second warm
+            # decode ticks): skip — fabricated zeros would read as low
+            # activity and downscale clocks mid-decode
+            if sig is not None:
+                self.controller.step(self.sampler.now, sig)
         return len(active)
 
     # ------------------------------------------------------------------ #

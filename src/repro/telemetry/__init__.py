@@ -4,9 +4,11 @@ from repro.telemetry.sampler import RuntimeSampler  # noqa: F401
 from repro.telemetry.pipeline import (  # noqa: F401
     analyze_job,
     analyze_fleet,
+    analyze_store,
     classify_frame,
     per_job_fraction_cdf,
     tail_share,
+    FleetAccumulator,
     JobAnalysis,
     FleetAnalysis,
 )

@@ -4,25 +4,38 @@ Takes raw telemetry frames (from the cluster simulator, the serving DES, or
 live RuntimeSamplers), attributes each sample to a job, classifies states,
 and produces per-job / fleet-level :class:`EnergyBreakdown`s — the exact
 computation behind the paper's headline 19.7% / 10.7% numbers.
+
+Two entry points share one accounting implementation:
+
+* :func:`analyze_fleet` — monolithic: one in-memory frame, analyzed as a
+  single chunk.
+* :func:`analyze_store` / :class:`FleetAccumulator` — streaming: chunks of
+  any size (e.g. one storage shard at a time) fed through ``update``; per-job
+  run state is carried across chunk boundaries, so results are bit-identical
+  to the monolithic path while peak memory stays bounded by one chunk.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable
+import math
+from typing import TYPE_CHECKING, Iterable
 
 import numpy as np
 
-from repro.core.energy import EnergyBreakdown, integrate, merge
+from repro.core.energy import EnergyBreakdown, StreamingIntegrator, integrate, merge
 from repro.core.intervals import Interval, extract_intervals
 from repro.core.states import ClassifierConfig, DEFAULT_CLASSIFIER, DeviceState, classify_series
 from repro.telemetry.records import TelemetryFrame
+
+if TYPE_CHECKING:
+    from repro.telemetry.storage import TelemetryStore
 
 
 @dataclasses.dataclass(frozen=True)
 class JobAnalysis:
     job_id: int
     duration_s: float
-    states: np.ndarray
+    states: np.ndarray | None      # None on the streaming path (out-of-core)
     breakdown: EnergyBreakdown
     intervals: list[Interval]
 
@@ -72,42 +85,182 @@ def analyze_job(frame: TelemetryFrame,
                        states=states, breakdown=breakdown, intervals=intervals)
 
 
+@dataclasses.dataclass
+class _GroupState:
+    """Per-(job, host, device) partial state carried across chunks."""
+
+    integrator: StreamingIntegrator
+    n_rows: int = 0
+    ts_first: float = math.inf
+    ts_last: float = -math.inf
+    state_pieces: list[np.ndarray] | None = None
+
+
+class FleetAccumulator:
+    """Out-of-core fleet analysis: feed chunks, finalize once.
+
+    Chunks may hold any mix of jobs/hosts/devices and any number of rows;
+    the only requirement is that, per (job, host, device) stream, chunks
+    arrive in time order (each chunk is internally time-sorted by
+    ``TelemetryFrame.group_streams``). Per-job partial state is O(1) per
+    group plus the pending power samples of each group's unfinished trailing
+    run, so peak memory is bounded by one chunk — never the whole dataset.
+
+    ``finalize`` yields the exact :class:`FleetAnalysis` the monolithic
+    :func:`analyze_fleet` computes on the concatenated data (see
+    :class:`repro.core.energy.StreamingIntegrator` for why this is
+    bit-identical); only ``unattributed_energy_j`` may differ in the last
+    ulp, since its partial sums follow the chunk partition.
+    """
+
+    def __init__(
+        self,
+        min_job_duration_s: float = 2 * 3600.0,
+        min_interval_s: float = 5.0,
+        config: ClassifierConfig = DEFAULT_CLASSIFIER,
+        dt_s: float = 1.0,
+        keep_states: bool = False,
+    ):
+        self.min_job_duration_s = min_job_duration_s
+        self.min_interval_s = min_interval_s
+        self.config = config
+        self.dt_s = dt_s
+        self.keep_states = keep_states
+        self._groups: dict[tuple[int, int, int], _GroupState] = {}
+        self._unattributed_pieces: list[float] = []
+        self.n_rows = 0
+        self.n_chunks = 0
+
+    def update(self, chunk: TelemetryFrame) -> None:
+        """Fold one chunk of telemetry into the running analysis."""
+        if len(chunk) == 0:
+            return
+        self.n_chunks += 1
+        self.n_rows += len(chunk)
+
+        job_ids = chunk["job_id"]
+        neg = job_ids < 0
+        if np.any(neg):
+            self._unattributed_pieces.append(float(np.sum(chunk["power"][neg])))
+
+        for key, seg in chunk.group_streams():
+            if key[0] < 0:
+                continue
+            g = self._groups.get(key)
+            if g is None:
+                g = self._groups[key] = _GroupState(
+                    integrator=StreamingIntegrator(
+                        min_duration_s=self.min_interval_s, dt_s=self.dt_s),
+                    state_pieces=[] if self.keep_states else None,
+                )
+            ts = seg["timestamp"]
+            # `<` (not `<=`): the monolithic path's stable sort accepts
+            # duplicate timestamps, and the any-chunking equivalence contract
+            # must hold wherever the boundary falls — so an exactly re-fed
+            # abutting shard is NOT detectable here; genuine reordering is
+            if float(ts[0]) < g.ts_last:
+                raise ValueError(
+                    f"chunks for stream {key} are not time-ordered: got "
+                    f"t={float(ts[0])} after t={g.ts_last}")
+            g.ts_first = min(g.ts_first, float(ts[0]))
+            g.ts_last = float(ts[-1])
+            g.n_rows += len(seg)
+
+            states = classify_series(
+                seg["program_resident"].astype(bool),
+                seg.activity_pct(),
+                seg.comm_gbs(),
+                self.config,
+            )
+            if g.state_pieces is not None:
+                g.state_pieces.append(states)
+            g.integrator.update(states, seg["power"])
+
+    def finalize(self) -> FleetAnalysis:
+        """Flush carried run state and assemble the :class:`FleetAnalysis`."""
+        jobs: list[JobAnalysis] = []
+        for key in sorted(self._groups):
+            g = self._groups[key]
+            breakdown, intervals = g.integrator.finalize()
+            # duration by timestamp span (+dt for the last sample), NOT row
+            # count — row count only equals seconds at exactly 1 Hz
+            span_s = g.ts_last - g.ts_first + self.dt_s
+            if span_s < self.min_job_duration_s:
+                continue
+            states = (np.concatenate(g.state_pieces)
+                      if g.state_pieces is not None else None)
+            jobs.append(JobAnalysis(
+                job_id=key[0],
+                duration_s=float(span_s),
+                states=states,
+                breakdown=breakdown,
+                intervals=intervals,
+            ))
+        unattributed = math.fsum(self._unattributed_pieces)
+        # clear ALL accumulated state, not just groups — a reused accumulator
+        # must start from zero, never mix epochs
+        self._groups.clear()
+        self._unattributed_pieces.clear()
+        self.n_rows = 0
+        self.n_chunks = 0
+        fleet = merge([j.breakdown for j in jobs])
+        return FleetAnalysis(
+            jobs=jobs,
+            fleet=fleet,
+            unattributed_energy_j=unattributed,
+            n_intervals=sum(len(j.intervals) for j in jobs),
+        )
+
+
 def analyze_fleet(
     frame: TelemetryFrame,
     min_job_duration_s: float = 2 * 3600.0,
     min_interval_s: float = 5.0,
     config: ClassifierConfig = DEFAULT_CLASSIFIER,
+    dt_s: float = 1.0,
 ) -> FleetAnalysis:
-    """Group samples by (job, device) stream and analyze each (paper §2.1).
+    """Group samples by (job, host, device) stream and analyze each (§2.1).
 
-    Jobs shorter than ``min_job_duration_s`` are excluded (the paper's ≥2 h
-    long-job filter); samples with job_id < 0 count as unattributed.
+    Monolithic entry point: the whole frame as one chunk through
+    :class:`FleetAccumulator` (single lexsort-based grouping pass — not a
+    boolean mask per group). Jobs whose timestamp span is shorter than
+    ``min_job_duration_s`` are excluded (the paper's ≥2 h long-job filter);
+    samples with job_id < 0 count as unattributed.
     """
-    job_ids = frame["job_id"]
-    device_ids = frame["device_id"]
-    hostnames = frame["hostname"]
+    acc = FleetAccumulator(
+        min_job_duration_s=min_job_duration_s,
+        min_interval_s=min_interval_s,
+        config=config,
+        dt_s=dt_s,
+        keep_states=True,
+    )
+    acc.update(frame)
+    return acc.finalize()
 
-    unattributed = float(np.sum(frame["power"][job_ids < 0]))
 
-    jobs: list[JobAnalysis] = []
-    keys = np.stack([job_ids, hostnames, device_ids], axis=1)
-    attributed = keys[job_ids >= 0]
-    if attributed.size:
-        uniq = np.unique(attributed, axis=0)
-        for jid, host, dev in uniq:
-            mask = (job_ids == jid) & (hostnames == host) & (device_ids == dev)
-            sub = frame.select(mask)
-            order = np.argsort(sub["timestamp"], kind="stable")
-            sub = sub.select(order)
-            if len(sub) < min_job_duration_s:
-                continue
-            jobs.append(analyze_job(sub, int(jid), min_interval_s, config))
+def analyze_store(
+    store: "TelemetryStore",
+    hosts: Iterable[str] | None = None,
+    min_job_duration_s: float = 2 * 3600.0,
+    min_interval_s: float = 5.0,
+    config: ClassifierConfig = DEFAULT_CLASSIFIER,
+    dt_s: float = 1.0,
+) -> FleetAnalysis:
+    """Streaming fleet analysis: one shard in memory at a time.
 
-    fleet = merge([j.breakdown for j in jobs]) if jobs else merge([])
-    n_intervals = sum(len(j.intervals) for j in jobs)
-    return FleetAnalysis(jobs=jobs, fleet=fleet,
-                         unattributed_energy_j=unattributed,
-                         n_intervals=n_intervals)
+    Bit-identical to ``analyze_fleet(store.read_all(hosts))`` (modulo the
+    last ulp of ``unattributed_energy_j``) with peak memory bounded by the
+    largest shard, so 162 GB-scale datasets analyze on a laptop.
+    """
+    acc = FleetAccumulator(
+        min_job_duration_s=min_job_duration_s,
+        min_interval_s=min_interval_s,
+        config=config,
+        dt_s=dt_s,
+    )
+    for shard in store.iter_shards(hosts):
+        acc.update(shard)
+    return acc.finalize()
 
 
 def per_job_fraction_cdf(jobs: Iterable[JobAnalysis]) -> dict[str, np.ndarray]:

@@ -161,6 +161,14 @@ class RuntimeSampler:
                   hbm_util=hbm_util, ici_gbs=ici_gbs)
 
     # ------------------------------------------------------------------ #
+    def last_row(self) -> dict[str, object] | None:
+        """Most recent emitted Table-1 row, or None before the first flush.
+
+        O(1) — controllers polling every tick must not rebuild the whole
+        frame just to read the newest sample.
+        """
+        return dict(self._rows[-1]) if self._rows else None
+
     def frame(self) -> TelemetryFrame:
         return TelemetryFrame.from_rows(self._rows)
 

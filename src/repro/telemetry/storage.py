@@ -1,13 +1,15 @@
 """Compressed telemetry log storage (paper §2.1: 20–100 MB/server/day).
 
 Columnar `.npz` (zip-deflate) with a JSON sidecar manifest. Append-oriented:
-one shard per (host, day); a reader concatenates shards.
+writers append shards labelled (host, day) — possibly several per label,
+e.g. one per device or per flush — and a reader concatenates (or streams)
+shards in manifest order.
 """
 from __future__ import annotations
 
 import json
 import pathlib
-from typing import Iterable
+from typing import Iterable, Iterator
 
 import numpy as np
 
@@ -26,31 +28,44 @@ class TelemetryStore:
         else:
             self.manifest = {"shards": []}
 
-    def _save_manifest(self) -> None:
+    def save_manifest(self) -> None:
         self._manifest_path.write_text(json.dumps(self.manifest, indent=1))
 
     def write_shard(self, frame: TelemetryFrame, host: str = "host0",
-                    day: int = 0) -> pathlib.Path:
+                    day: int = 0, flush_manifest: bool = True) -> pathlib.Path:
+        """Append one shard. Bulk writers (e.g. the cluster simulator's
+        chunked emission) pass ``flush_manifest=False`` and call
+        :meth:`save_manifest` once at the end — rewriting the growing JSON
+        manifest per shard is O(shards^2)."""
         name = f"telemetry_{host}_d{day:03d}_{len(self.manifest['shards']):05d}.npz"
         path = self.root / name
         np.savez_compressed(path, **frame.columns)
         self.manifest["shards"].append(
             {"file": name, "host": host, "day": day, "rows": len(frame)})
-        self._save_manifest()
+        if flush_manifest:
+            self.save_manifest()
         return path
 
     def read_shard(self, name: str) -> TelemetryFrame:
         with np.load(self.root / name) as z:
             return TelemetryFrame({f: z[f] for f in FIELDS if f in z})
 
-    def read_all(self, hosts: Iterable[str] | None = None) -> TelemetryFrame:
+    def iter_shards(self, hosts: Iterable[str] | None = None
+                    ) -> Iterator[TelemetryFrame]:
+        """Yield shard frames one at a time, in manifest (append) order.
+
+        The streaming analysis path (``telemetry.pipeline.analyze_store``)
+        consumes this so that at most one shard is materialized; writers
+        append each stream's shards in time order, which is exactly the
+        per-stream ordering :class:`FleetAccumulator` requires.
+        """
         hosts = set(hosts) if hosts is not None else None
-        frames = [
-            self.read_shard(s["file"])
-            for s in self.manifest["shards"]
-            if hosts is None or s["host"] in hosts
-        ]
-        return TelemetryFrame.concat(frames)
+        for s in self.manifest["shards"]:
+            if hosts is None or s["host"] in hosts:
+                yield self.read_shard(s["file"])
+
+    def read_all(self, hosts: Iterable[str] | None = None) -> TelemetryFrame:
+        return TelemetryFrame.concat(list(self.iter_shards(hosts)))
 
     @property
     def total_rows(self) -> int:

@@ -1,0 +1,70 @@
+"""Offline fallback for `hypothesis`.
+
+CI containers have no network, so `hypothesis` may be absent. Property-test
+modules import `given`/`settings`/`st` from here: when the real library is
+installed it is re-exported unchanged; otherwise `@given` degrades to a small
+fixed set of seeded pseudo-random examples — far less search power, but the
+properties still execute and the suite collects offline.
+"""
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    st = strategies
+except ModuleNotFoundError:
+    import random
+
+    _N_EXAMPLES = 5
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng):
+            return self._draw(rng)
+
+    class strategies:  # noqa: N801 - mirrors the hypothesis module name
+        @staticmethod
+        def integers(min_value=0, max_value=2**31 - 1):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(rng):
+                n = rng.randint(min_size, max_size)
+                return [elements.example(rng) for _ in range(n)]
+
+            return _Strategy(draw)
+
+    st = strategies
+
+    def given(*arg_strats, **kw_strats):
+        def deco(fn):
+            # deliberately zero-arg (no functools.wraps): pytest must not see
+            # the strategy parameters of `fn` and mistake them for fixtures
+            def wrapper():
+                # seed on the test name so examples are stable across runs
+                rng = random.Random(f"hypshim:{fn.__name__}")
+                for _ in range(_N_EXAMPLES):
+                    drawn = [s.example(rng) for s in arg_strats]
+                    kw = {name: s.example(rng) for name, s in kw_strats.items()}
+                    fn(*drawn, **kw)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+
+        return deco
+
+    def settings(**_kw):
+        def deco(fn):
+            return fn
+
+        return deco

@@ -1,7 +1,7 @@
 """Algorithm 1 controller + power model + imbalance scheduler tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.controller import (ControllerConfig, DownscaleMode,
                                    ExecutionIdleController)

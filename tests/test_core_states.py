@@ -1,7 +1,7 @@
 """Unit + property tests for the paper's core: states, intervals, energy."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.energy import integrate, merge
 from repro.core.intervals import (apply_min_duration, duration_percentiles,

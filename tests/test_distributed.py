@@ -8,6 +8,8 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
+from repro.distributed.compat import shard_map
+
 from repro.configs import ASSIGNED_ARCHS, get_config, get_smoke_config
 from repro.distributed import sharding as shd
 from repro.distributed.compression import (compressed_psum, dequantize_int8,
@@ -50,7 +52,7 @@ def test_compressed_psum_matches_exact_sum():
         s, new_e = compressed_psum({"g": x}, "pod", {"g": e})
         return s["g"], new_e["g"]
 
-    out, err = jax.jit(jax.shard_map(
+    out, err = jax.jit(shard_map(
         body, mesh=mesh, in_specs=(P("pod"), P("pod")), out_specs=P("pod"),
         check_vma=False))(g, jnp.zeros_like(g))
     exact = jnp.sum(g, axis=0)

@@ -4,7 +4,7 @@ import dataclasses
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.configs import get_smoke_config
 from repro.core.controller import ControllerConfig, DownscaleMode

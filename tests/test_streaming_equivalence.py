@@ -1,0 +1,204 @@
+"""Chunked/streaming fleet analysis must equal the monolithic path exactly.
+
+The tentpole guarantee of the streaming engine: any chunking of the same
+telemetry — 1-row chunks, prime-sized chunks, shard-aligned chunks, or a
+:class:`TelemetryStore` on disk — produces a bit-identical
+:class:`FleetAnalysis` (fractions, interval counts, per-job CDFs), including
+execution-idle runs deliberately split across chunk boundaries.
+"""
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.cluster import generate_cluster
+from repro.core.states import DeviceState
+from repro.telemetry import (FleetAccumulator, TelemetryFrame, TelemetryStore,
+                             analyze_fleet, analyze_store)
+from repro.telemetry.pipeline import per_job_fraction_cdf
+
+
+def assert_fleet_equal(a, b, unattributed_exact=True):
+    assert [j.job_id for j in a.jobs] == [j.job_id for j in b.jobs]
+    assert a.n_intervals == b.n_intervals
+    assert a.fleet.time_s == b.fleet.time_s
+    assert a.fleet.energy_j == b.fleet.energy_j
+    for ja, jb in zip(a.jobs, b.jobs):
+        assert ja.duration_s == jb.duration_s
+        assert ja.breakdown.time_s == jb.breakdown.time_s
+        assert ja.breakdown.energy_j == jb.breakdown.energy_j
+        assert [(i.start, i.end) for i in ja.intervals] == \
+            [(i.start, i.end) for i in jb.intervals]
+    ca, cb = per_job_fraction_cdf(a.jobs), per_job_fraction_cdf(b.jobs)
+    assert np.array_equal(ca["time_fraction"], cb["time_fraction"])
+    assert np.array_equal(ca["energy_fraction"], cb["energy_fraction"])
+    if unattributed_exact:
+        assert a.unattributed_energy_j == b.unattributed_energy_j
+    else:
+        # partial sums follow the chunk partition -> last-ulp differences
+        assert a.unattributed_energy_j == pytest.approx(
+            b.unattributed_energy_j, rel=1e-12)
+
+
+def streamed(frame, chunk_rows, **kw):
+    acc = FleetAccumulator(**kw)
+    for chunk in frame.iter_chunks(chunk_rows):
+        acc.update(chunk)
+    return acc.finalize()
+
+
+# --------------------------------------------------------------------------- #
+# seeded cluster, awkward chunk sizes
+# --------------------------------------------------------------------------- #
+def test_cluster_chunked_equals_monolithic():
+    cs = generate_cluster(n_devices=4, horizon_s=2700, seed=13)
+    mono = analyze_fleet(cs.frame, min_job_duration_s=600)
+    assert mono.jobs, "fixture must contain analyzable jobs"
+    for chunk_rows in (997, 2700, len(cs.frame)):   # prime, shard-ish, whole
+        fa = streamed(cs.frame, chunk_rows, min_job_duration_s=600)
+        assert_fleet_equal(fa, mono, unattributed_exact=False)
+
+
+def test_one_row_chunks_equal_monolithic():
+    # 1 s chunks: every sample is its own update; carry logic does all work
+    rows = []
+    rng = np.random.default_rng(4)
+    for t in range(240):
+        active = (t // 17) % 3 != 1      # alternating active / idle blocks
+        rows.append({
+            "timestamp": float(t), "job_id": 7, "device_id": 0, "hostname": 0,
+            "program_resident": 1, "sm": 60.0 if active else 1.0,
+            "dram": 40.0 if active else 0.5,
+            "power": float(rng.uniform(80, 300)),
+        })
+    frame = TelemetryFrame.from_rows(rows)
+    mono = analyze_fleet(frame, min_job_duration_s=0.0)
+    fa = streamed(frame, 1, min_job_duration_s=0.0)
+    assert_fleet_equal(fa, mono, unattributed_exact=True)
+    assert fa.n_intervals > 0
+
+
+# --------------------------------------------------------------------------- #
+# execution-idle run split across a chunk boundary
+# --------------------------------------------------------------------------- #
+def _phase_frame(spec):
+    """spec: list of (n_seconds, active?) for one resident job at 1 Hz."""
+    rows, t = [], 0
+    for n, active in spec:
+        for _ in range(n):
+            rows.append({
+                "timestamp": float(t), "job_id": 1, "device_id": 0,
+                "hostname": 0, "program_resident": 1,
+                "sm": 80.0 if active else 1.0,
+                "power": 250.0 if active else 90.0,
+            })
+            t += 1
+    return TelemetryFrame.from_rows(rows)
+
+
+def test_sustained_idle_run_split_across_boundary():
+    # 6 s idle run split 3+3 by the chunk boundary: must still count as ONE
+    # sustained (>=5 s) interval with all 6 samples' energy
+    frame = _phase_frame([(10, True), (6, False), (10, True)])
+    mono = analyze_fleet(frame, min_job_duration_s=0.0)
+    assert mono.n_intervals == 1
+    assert mono.fleet.time_s[DeviceState.EXECUTION_IDLE] == 6.0
+    assert mono.fleet.energy_j[DeviceState.EXECUTION_IDLE] == 6 * 90.0
+    for chunk_rows in (13, 1, 5):        # 13 splits the idle run at 3+3
+        fa = streamed(frame, chunk_rows, min_job_duration_s=0.0)
+        assert_fleet_equal(fa, mono)
+        assert fa.jobs[0].intervals[0].start == 10
+        assert fa.jobs[0].intervals[0].end == 16
+
+
+def test_short_idle_run_split_across_boundary_relabelled():
+    # 3 s idle run split 2+1: shorter than the 5 s sustain rule, so both
+    # paths must relabel it ACTIVE — no interval, no exec-idle energy
+    frame = _phase_frame([(6, True), (3, False), (6, True)])
+    mono = analyze_fleet(frame, min_job_duration_s=0.0)
+    fa = streamed(frame, 8, min_job_duration_s=0.0)   # boundary inside the run
+    assert mono.n_intervals == fa.n_intervals == 0
+    assert fa.fleet.time_s[DeviceState.EXECUTION_IDLE] == 0.0
+    assert fa.fleet.energy_j[DeviceState.ACTIVE] == \
+        mono.fleet.energy_j[DeviceState.ACTIVE]
+    assert_fleet_equal(fa, mono)
+
+
+# --------------------------------------------------------------------------- #
+# storage path: generate into a store, analyze out-of-core
+# --------------------------------------------------------------------------- #
+def test_analyze_store_equals_monolithic():
+    mono_cs = generate_cluster(n_devices=4, horizon_s=1800, seed=21)
+    with tempfile.TemporaryDirectory() as d:
+        store = TelemetryStore(d)
+        s_cs = generate_cluster(n_devices=4, horizon_s=1800, seed=21,
+                                store=store, shard_s=600)
+        assert len(s_cs.frame) == 0                  # nothing materialized
+        assert store.total_rows == len(mono_cs.frame)
+        assert len(store.manifest["shards"]) >= 4 * 3  # chunked emission
+        mono = analyze_fleet(mono_cs.frame, min_job_duration_s=600)
+        fa = analyze_store(store, min_job_duration_s=600)
+        assert_fleet_equal(fa, mono, unattributed_exact=False)
+
+
+# --------------------------------------------------------------------------- #
+# grouping + ordering contracts
+# --------------------------------------------------------------------------- #
+def test_group_streams_zero_copy_and_sorted():
+    cs = generate_cluster(n_devices=2, horizon_s=900, seed=2)
+    seen = []
+    for key, seg in cs.frame.group_streams():
+        seen.append(key)
+        ts = seg["timestamp"]
+        assert np.all(np.diff(ts) >= 0)
+        assert seg["timestamp"].base is not None    # slice view, not a copy
+        assert np.all(seg["job_id"] == key[0])
+    assert seen == sorted(seen)
+    assert sum(len(seg) for _, seg in cs.frame.group_streams()) == len(cs.frame)
+
+
+def test_out_of_order_chunks_rejected():
+    frame = _phase_frame([(10, True)])
+    acc = FleetAccumulator(min_job_duration_s=0.0)
+    chunks = list(frame.iter_chunks(5))
+    acc.update(chunks[1])
+    with pytest.raises(ValueError, match="not time-ordered"):
+        acc.update(chunks[0])
+
+
+def test_duplicate_boundary_timestamp_accepted():
+    # the monolithic path's stable sort tolerates duplicate timestamps, so
+    # the streaming path must too — wherever the chunk boundary falls
+    rows = [{"timestamp": float(min(t, 5)), "job_id": 1, "device_id": 0,
+             "hostname": 0, "program_resident": 1, "sm": 50.0, "power": 100.0}
+            for t in range(12)]                      # ts: 0..5,5,5,...
+    frame = TelemetryFrame.from_rows(rows)
+    mono = analyze_fleet(frame, min_job_duration_s=0.0)
+    for chunk_rows in (4, 7, 1):                     # boundaries inside dups
+        fa = streamed(frame, chunk_rows, min_job_duration_s=0.0)
+        assert_fleet_equal(fa, mono)
+
+
+def test_dt_s_plumbs_through_entry_points():
+    # 2 s sampling: 150 rows = 300 s of telemetry; with dt_s=2 both time and
+    # energy integrate per-sample x dt, and the sustain rule counts seconds
+    rows = [{"timestamp": float(2 * t), "job_id": 5, "device_id": 0,
+             "hostname": 0, "program_resident": 1, "sm": 50.0, "power": 200.0}
+            for t in range(150)]
+    frame = TelemetryFrame.from_rows(rows)
+    fa = analyze_fleet(frame, min_job_duration_s=200, dt_s=2.0)
+    assert [j.job_id for j in fa.jobs] == [5]
+    assert fa.fleet.time_s[DeviceState.ACTIVE] == 300.0
+    assert fa.fleet.energy_j[DeviceState.ACTIVE] == 150 * 200.0 * 2.0
+    fa1 = streamed(frame, 37, min_job_duration_s=200, dt_s=2.0)
+    assert_fleet_equal(fa1, fa)
+
+
+def test_min_job_duration_filters_on_span_not_row_count():
+    # 2 s sampling: 150 rows span 299 s. The seed compared ROW COUNT against
+    # seconds, which would wrongly drop this job for min_job_duration_s=200.
+    rows = [{"timestamp": float(2 * t), "job_id": 5, "device_id": 0,
+             "hostname": 0, "program_resident": 1, "sm": 50.0, "power": 200.0}
+            for t in range(150)]
+    fa = analyze_fleet(TelemetryFrame.from_rows(rows), min_job_duration_s=200)
+    assert [j.job_id for j in fa.jobs] == [5]

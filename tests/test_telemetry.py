@@ -3,7 +3,7 @@ import tempfile
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.attribution import attribute_causes, extract_pre_idle_windows
 from repro.core.clustering import density_cluster
