@@ -52,7 +52,9 @@ def main() -> None:
 
     from benchmarks.fleet_bench import bench_fleet_analyze
     from benchmarks.paper_benches import ALL_BENCHES
-    benches = list(ALL_BENCHES) + [bench_roofline, bench_fleet_analyze]
+    from benchmarks.whatif_bench import bench_whatif_sweep
+    benches = list(ALL_BENCHES) + [bench_roofline, bench_fleet_analyze,
+                                   bench_whatif_sweep]
     if args.only:
         keys = args.only.split(",")
         benches = [fn for fn in benches

@@ -1,0 +1,68 @@
+"""What-if sweep throughput benchmark (counterfactual policy engine).
+
+Generates the 96-group bench corpus (64 devices x 3 h, the fleet_bench
+deployment) straight into a shard store, then sweeps the default 48-config
+policy grid twice — serial and process-pool — and reports configs/s plus
+the bit-identity check between the two.
+
+Acceptance: the sweep streams shard-by-shard (peak memory ~ one shard),
+``workers=2`` matches ``workers=1`` exactly, and the no-op config anchors
+the frontier at zero saving / zero penalty.
+
+Run:  PYTHONPATH=src python -m benchmarks.run --only whatif \
+          [--json BENCH_whatif_sweep.json]
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+from benchmarks.common import Bench
+
+#: same deployment as fleet_bench, emitted chunked: 96 analyzable groups
+N_DEVICES = 64
+HORIZON_S = 3 * 3600
+SEED = 3
+SHARD_S = 3600
+
+
+def bench_whatif_sweep() -> Bench:
+    from repro.cluster import generate_cluster
+    from repro.telemetry import TelemetryStore
+    from repro.whatif import default_policy_grid, frontier_to_dict, run_sweep
+
+    b = Bench("whatif_sweep")
+    grid = default_policy_grid()
+    with tempfile.TemporaryDirectory() as d:
+        store = TelemetryStore(d)
+        generate_cluster(n_devices=N_DEVICES, horizon_s=HORIZON_S, seed=SEED,
+                         store=store, shard_s=SHARD_S)
+        rows = store.total_rows
+
+        t0 = time.perf_counter()
+        serial = run_sweep(store, grid, workers=1, min_job_duration_s=0.0)
+        t_serial = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        pooled = run_sweep(store, grid, workers=2, min_job_duration_s=0.0)
+        t_pooled = time.perf_counter() - t0
+
+    n_cfg = len(grid)
+    b.add("rows", float(rows))
+    b.add("n_configs", float(n_cfg), (48.0, 0.01))
+    b.add("n_groups", float(serial.n_jobs))
+    b.add("groups_target_96", float(serial.n_jobs >= 96), (1.0, 0.01))
+    b.add("configs_per_s_serial", n_cfg / t_serial)
+    b.add("configs_per_s_workers2", n_cfg / t_pooled)
+    b.add("row_configs_per_s_serial", rows * n_cfg / t_serial)
+
+    identical = frontier_to_dict(serial) == frontier_to_dict(pooled)
+    b.add("workers_bit_identical", float(identical), (1.0, 0.01))
+
+    noop = next(o for o in serial.outcomes if o.name == "noop")
+    anchored = noop.energy_saved_j == 0.0 and noop.penalty_s == 0.0
+    b.add("noop_anchors_frontier", float(anchored), (1.0, 0.01))
+    b.add("pareto_set_size", float(len(serial.pareto_set())))
+    best = max(serial.outcomes, key=lambda o: o.energy_saved_j)
+    b.add("best_saved_fraction", best.saved_fraction)
+    return b

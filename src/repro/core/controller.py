@@ -21,6 +21,12 @@ Faithful transcription of the paper's controller:
 
 Paper defaults: X = 3 s trigger, Y = 5 s cooldown, eps = 1 s.
 Two downscale modes per §5.3: compute clock only, or compute + memory clocks.
+
+For counterfactual what-if sweeps over *recorded* telemetry, use the
+vectorized re-derivation :class:`repro.whatif.policies.DownscalePolicy`
+(:func:`repro.whatif.policies.downscale_decisions`): same decision sequence,
+verified sample-exact against this controller, but O(runs) instead of a
+Python call per second.
 """
 from __future__ import annotations
 
@@ -29,6 +35,7 @@ import enum
 from typing import Mapping
 
 from repro.core.power_model import ClockActuator, ClockLevel
+from repro.core.states import COMMUNICATION_SIGNALS, COMPUTE_SIGNALS
 
 
 class DownscaleMode(enum.Enum):
@@ -72,11 +79,11 @@ class ExecutionIdleController:
 
     def _low_activity(self, sample: Mapping[str, float]) -> bool:
         cfg = self.config
-        comp_keys = ("sm", "tensor", "fp16", "fp32", "fp64")
-        a_comp = max((float(sample.get(k, 0.0) or 0.0) for k in comp_keys), default=0.0)
+        a_comp = max((float(sample.get(k, 0.0) or 0.0)
+                      for k in COMPUTE_SIGNALS), default=0.0)
         a_mem = float(sample.get("dram", 0.0) or 0.0)
-        comm_keys = ("pcie_tx", "pcie_rx", "nvlink_tx", "nvlink_rx", "ici_tx", "ici_rx")
-        a_comm = max((float(sample.get(k, 0.0) or 0.0) for k in comm_keys), default=0.0)
+        a_comm = max((float(sample.get(k, 0.0) or 0.0)
+                      for k in COMMUNICATION_SIGNALS), default=0.0)
         # activity signals here are fractions in [0,1] to match Algorithm 1's
         # "< 0.05"; telemetry records store percent, callers divide by 100.
         return (

@@ -6,6 +6,12 @@ active devices so the remaining n-k sit in *deep idle* (or downscaled
 residency). Energy falls because fewer devices pay the execution-idle floor;
 latency rises because the active devices queue more work — the paper's
 cautionary trade-off (energy → 56%, p95 +80%/+93% for k = 4/2 of 8).
+
+The live scheduler below routes requests; to evaluate k-of-n consolidation
+*counterfactually* on recorded fleet telemetry (parked idle at deep-idle
+power, a model-reload tax per wake), sweep
+:class:`repro.whatif.policies.ParkingPolicy`, which reuses
+:meth:`PoolConfig.active_set` for the k-of-n membership.
 """
 from __future__ import annotations
 

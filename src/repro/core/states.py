@@ -41,6 +41,14 @@ COMPUTE_MEMORY_SIGNALS: tuple[str, ...] = (
     "dram",      # memory-subsystem activity
 )
 
+#: Algorithm 1's split of the activity signals: ``a_comp`` is the max over
+#: the compute counters, ``a_mem`` is dram. Derived from
+#: COMPUTE_MEMORY_SIGNALS so the classifier, the step controller
+#: (core.controller) and its vectorized re-derivation (repro.whatif)
+#: can never drift apart when the Table-1 schema grows.
+COMPUTE_SIGNALS: tuple[str, ...] = tuple(
+    s for s in COMPUTE_MEMORY_SIGNALS if s != "dram")
+
 #: Signals treated as "communication", in GB/s.
 COMMUNICATION_SIGNALS: tuple[str, ...] = (
     "pcie_tx",

@@ -176,6 +176,34 @@ class FleetAccumulator:
                 g.state_pieces.append(states)
             g.integrator.update(states, seg["power"])
 
+    def merge(self, other: "FleetAccumulator") -> "FleetAccumulator":
+        """Absorb an accumulator that processed a *disjoint* set of streams.
+
+        This is the reduction step of process-pool shard analysis
+        (``analyze_store(workers=N)``): each worker accumulates a
+        host-label partition, the main process merges. Overlapping stream
+        keys raise — per-stream run carry is sequential and cannot be
+        joined after the fact. ``finalize`` after merging is bit-identical
+        to the serial pass: per-stream results are computed identically,
+        streams are re-sorted globally, and the unattributed total is
+        ``math.fsum`` (exact, hence order-independent) over the same
+        per-chunk partial sums.
+        """
+        overlap = self._groups.keys() & other._groups.keys()
+        if overlap:
+            raise ValueError(
+                "cannot merge accumulators with overlapping streams: "
+                f"{sorted(overlap)[:3]}...")
+        if (other.min_job_duration_s, other.min_interval_s, other.config,
+                other.dt_s) != (self.min_job_duration_s, self.min_interval_s,
+                                self.config, self.dt_s):
+            raise ValueError("cannot merge accumulators with different configs")
+        self._groups.update(other._groups)
+        self._unattributed_pieces.extend(other._unattributed_pieces)
+        self.n_rows += other.n_rows
+        self.n_chunks += other.n_chunks
+        return self
+
     def finalize(self) -> FleetAnalysis:
         """Flush carried run state and assemble the :class:`FleetAnalysis`."""
         jobs: list[JobAnalysis] = []
@@ -238,6 +266,67 @@ def analyze_fleet(
     return acc.finalize()
 
 
+def _pool_context():
+    """forkserver where available, spawn elsewhere — never plain fork, so a
+    parent with live JAX/XLA threads is safe. Both start methods re-execute
+    the caller's main module in each worker, so scripts calling
+    ``workers > 1`` entry points at top level need the standard
+    ``if __name__ == "__main__":`` guard (as in examples/whatif_sweep.py)."""
+    import multiprocessing
+    try:
+        return multiprocessing.get_context("forkserver")
+    except ValueError:
+        return multiprocessing.get_context("spawn")
+
+
+def map_shard_partitions(store, hosts, workers, worker, extra_args, merge):
+    """Run ``worker(root, shard_files, *extra_args)`` over host-label
+    partitions of a store and fold the results with ``merge(acc, part)``.
+
+    The shared scaffold of ``analyze_store(workers=N)`` and
+    ``repro.whatif.sweep.run_sweep``. Determinism contract: partitions are
+    disjoint in streams (see :meth:`TelemetryStore.partition_hosts`) and
+    results are merged **in submit order**, so for order-exact reductions
+    (``math.fsum`` pieces, sorted stream keys) any worker count is
+    bit-identical to the serial pass. With one partition or ``workers <= 1``
+    the worker runs in-process.
+    """
+    # materialize: `hosts` may be a one-shot iterable, and it is consumed
+    # both by partition_hosts and by the serial fallback below
+    hosts = list(hosts) if hosts is not None else None
+    partitions = store.partition_hosts(workers, hosts) if workers > 1 else []
+    if len(partitions) <= 1:
+        return worker(str(store.root), store.shard_files(hosts), *extra_args)
+    from concurrent.futures import ProcessPoolExecutor
+    ctx = _pool_context()   # forkserver/spawn; never forks the JAX parent
+    result = None
+    with ProcessPoolExecutor(max_workers=len(partitions),
+                             mp_context=ctx) as pool:
+        futures = [pool.submit(worker, str(store.root),
+                               store.shard_files(part), *extra_args)
+                   for part in partitions]
+        for fut in futures:
+            part = fut.result()
+            result = part if result is None else merge(result, part)
+    return result
+
+
+def _accumulate_shards(
+    root: str,
+    shard_files: list[str],
+    mmap: bool,
+    acc_kwargs: dict,
+) -> FleetAccumulator:
+    """Process-pool worker body: accumulate one shard subset (must stay
+    module-level picklable)."""
+    from repro.telemetry.storage import TelemetryStore
+    store = TelemetryStore(root)
+    acc = FleetAccumulator(**acc_kwargs)
+    for name in shard_files:
+        acc.update(store.read_shard(name, mmap=mmap))
+    return acc
+
+
 def analyze_store(
     store: "TelemetryStore",
     hosts: Iterable[str] | None = None,
@@ -245,21 +334,31 @@ def analyze_store(
     min_interval_s: float = 5.0,
     config: ClassifierConfig = DEFAULT_CLASSIFIER,
     dt_s: float = 1.0,
+    workers: int = 1,
+    mmap: bool = False,
 ) -> FleetAnalysis:
     """Streaming fleet analysis: one shard in memory at a time.
 
     Bit-identical to ``analyze_fleet(store.read_all(hosts))`` (modulo the
     last ulp of ``unattributed_energy_j``) with peak memory bounded by the
     largest shard, so 162 GB-scale datasets analyze on a laptop.
+
+    ``workers > 1`` spreads host-label partitions over a process pool
+    (streams never span host labels, so partitions are disjoint) and merges
+    the partial accumulators — bit-identical to the serial pass, including
+    ``unattributed_energy_j`` (see :meth:`FleetAccumulator.merge`).
+    ``mmap=True`` memory-maps ``npy_dir`` shards (zero-copy reads; see
+    :meth:`TelemetryStore.iter_shards`).
     """
-    acc = FleetAccumulator(
+    acc_kwargs = dict(
         min_job_duration_s=min_job_duration_s,
         min_interval_s=min_interval_s,
         config=config,
         dt_s=dt_s,
     )
-    for shard in store.iter_shards(hosts):
-        acc.update(shard)
+    acc = map_shard_partitions(
+        store, hosts, workers, _accumulate_shards, (mmap, acc_kwargs),
+        merge=lambda a, b: a.merge(b))
     return acc.finalize()
 
 

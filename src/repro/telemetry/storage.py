@@ -1,9 +1,16 @@
 """Compressed telemetry log storage (paper §2.1: 20–100 MB/server/day).
 
-Columnar `.npz` (zip-deflate) with a JSON sidecar manifest. Append-oriented:
-writers append shards labelled (host, day) — possibly several per label,
-e.g. one per device or per flush — and a reader concatenates (or streams)
-shards in manifest order.
+Two shard formats behind one manifest:
+
+* ``npz`` (default) — columnar zip-deflate ``.npz``, smallest on disk;
+* ``npy_dir`` — one raw ``.npy`` per column in a shard directory, readable
+  with ``np.load(mmap_mode="r")`` so ``iter_shards(mmap=True)`` is
+  zero-copy: columns a pass never touches (e.g. host counters during a
+  what-if sweep) are never faulted into memory.
+
+Append-oriented: writers append shards labelled (host, day) — possibly
+several per label, e.g. one per device or per flush — and a reader
+concatenates (or streams) shards in manifest order.
 """
 from __future__ import annotations
 
@@ -16,10 +23,19 @@ import numpy as np
 from repro.telemetry.records import FIELDS, TelemetryFrame
 
 MANIFEST_NAME = "manifest.json"
+SHARD_FORMATS = ("npz", "npy_dir")
 
 
 class TelemetryStore:
-    def __init__(self, root: str | pathlib.Path):
+    def __init__(self, root: str | pathlib.Path,
+                 shard_format: str | None = None):
+        """``shard_format=None`` adopts an existing store's persisted format
+        (so reopening an ``npy_dir`` store for append keeps appending
+        ``npy_dir`` shards), defaulting to ``npz`` for new stores; passing a
+        format that contradicts the persisted one raises."""
+        if shard_format is not None and shard_format not in SHARD_FORMATS:
+            raise ValueError(
+                f"unknown shard_format {shard_format!r}; known: {SHARD_FORMATS}")
         self.root = pathlib.Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
         self._manifest_path = self.root / MANIFEST_NAME
@@ -27,45 +43,117 @@ class TelemetryStore:
             self.manifest = json.loads(self._manifest_path.read_text())
         else:
             self.manifest = {"shards": []}
+        persisted = self.manifest.get("shard_format")
+        if shard_format is None:
+            self.shard_format = persisted or "npz"
+        else:
+            if persisted is not None and persisted != shard_format:
+                raise ValueError(
+                    f"store at {self.root} persists shard_format "
+                    f"{persisted!r}; cannot reopen as {shard_format!r}")
+            self.shard_format = shard_format
+        self.manifest["shard_format"] = self.shard_format
 
     def save_manifest(self) -> None:
         self._manifest_path.write_text(json.dumps(self.manifest, indent=1))
 
     def write_shard(self, frame: TelemetryFrame, host: str = "host0",
                     day: int = 0, flush_manifest: bool = True) -> pathlib.Path:
-        """Append one shard. Bulk writers (e.g. the cluster simulator's
-        chunked emission) pass ``flush_manifest=False`` and call
-        :meth:`save_manifest` once at the end — rewriting the growing JSON
-        manifest per shard is O(shards^2)."""
-        name = f"telemetry_{host}_d{day:03d}_{len(self.manifest['shards']):05d}.npz"
-        path = self.root / name
-        np.savez_compressed(path, **frame.columns)
+        """Append one shard (format = the store's ``shard_format``). Bulk
+        writers (e.g. the cluster simulator's chunked emission) pass
+        ``flush_manifest=False`` and call :meth:`save_manifest` once at the
+        end — rewriting the growing JSON manifest per shard is O(shards^2)."""
+        stem = f"telemetry_{host}_d{day:03d}_{len(self.manifest['shards']):05d}"
+        if self.shard_format == "npy_dir":
+            path = self.root / stem
+            # overwrite semantics matching the npz branch: a leftover shard
+            # dir (e.g. from a crashed bulk write that never flushed its
+            # manifest) is replaced, stale columns included
+            path.mkdir(exist_ok=True)
+            for stale in path.glob("*.npy"):
+                stale.unlink()
+            for f, col in frame.columns.items():
+                np.save(path / f"{f}.npy", col)
+            name = stem
+        else:
+            name = f"{stem}.npz"
+            path = self.root / name
+            np.savez_compressed(path, **frame.columns)
         self.manifest["shards"].append(
-            {"file": name, "host": host, "day": day, "rows": len(frame)})
+            {"file": name, "host": host, "day": day, "rows": len(frame),
+             "format": self.shard_format})
         if flush_manifest:
             self.save_manifest()
         return path
 
-    def read_shard(self, name: str) -> TelemetryFrame:
-        with np.load(self.root / name) as z:
+    def read_shard(self, name: str, mmap: bool = False) -> TelemetryFrame:
+        """Read one shard by manifest name.
+
+        ``mmap=True`` memory-maps ``npy_dir`` columns (zero-copy until a
+        column is actually gathered); ``npz`` shards are deflate-compressed,
+        which cannot be mapped, so they fall back to a normal load.
+        """
+        path = self.root / name
+        if path.is_dir():
+            mode = "r" if mmap else None
+            return TelemetryFrame({
+                f: np.load(path / f"{f}.npy", mmap_mode=mode)
+                for f in FIELDS if (path / f"{f}.npy").exists()})
+        with np.load(path) as z:
             return TelemetryFrame({f: z[f] for f in FIELDS if f in z})
 
-    def iter_shards(self, hosts: Iterable[str] | None = None
-                    ) -> Iterator[TelemetryFrame]:
+    def iter_shards(self, hosts: Iterable[str] | None = None,
+                    mmap: bool = False) -> Iterator[TelemetryFrame]:
         """Yield shard frames one at a time, in manifest (append) order.
 
         The streaming analysis path (``telemetry.pipeline.analyze_store``)
-        consumes this so that at most one shard is materialized; writers
-        append each stream's shards in time order, which is exactly the
-        per-stream ordering :class:`FleetAccumulator` requires.
+        and the what-if sweep consume this so that at most one shard is
+        materialized; writers append each stream's shards in time order,
+        which is exactly the per-stream ordering :class:`FleetAccumulator`
+        requires. With ``mmap=True``, ``npy_dir`` shards arrive as
+        ``np.memmap``-backed columns — cold columns are never read off disk
+        (note ``TelemetryFrame.group_streams`` gathers every column it
+        sorts, so the win is for passes that slice or subset columns).
         """
         hosts = set(hosts) if hosts is not None else None
         for s in self.manifest["shards"]:
             if hosts is None or s["host"] in hosts:
-                yield self.read_shard(s["file"])
+                yield self.read_shard(s["file"], mmap=mmap)
 
     def read_all(self, hosts: Iterable[str] | None = None) -> TelemetryFrame:
         return TelemetryFrame.concat(list(self.iter_shards(hosts)))
+
+    def partition_hosts(self, workers: int,
+                        hosts: Iterable[str] | None = None) -> list[list[str]]:
+        """Split host labels into at most ``workers`` row-balanced partitions
+        (greedy, heaviest host first — deterministic).
+
+        Host labels are the parallelism unit for process-pool analysis:
+        every (job, host, device) stream lives entirely under one host
+        label, so partitions hold disjoint streams and per-stream carry
+        state never crosses workers.
+        """
+        host_filter = set(hosts) if hosts is not None else None
+        rows_per_host: dict[str, int] = {}
+        for s in self.manifest["shards"]:
+            if host_filter is None or s["host"] in host_filter:
+                rows_per_host[s["host"]] = (
+                    rows_per_host.get(s["host"], 0) + s["rows"])
+        ordered = sorted(rows_per_host, key=lambda h: (-rows_per_host[h], h))
+        n_parts = max(1, min(workers, len(ordered)))
+        parts: list[list[str]] = [[] for _ in range(n_parts)]
+        loads = [0] * n_parts
+        for h in ordered:
+            i = loads.index(min(loads))
+            parts[i].append(h)
+            loads[i] += rows_per_host[h]
+        return parts
+
+    def shard_files(self, hosts: Iterable[str] | None = None) -> list[str]:
+        """Manifest-ordered shard file names, optionally host-filtered."""
+        host_filter = set(hosts) if hosts is not None else None
+        return [s["file"] for s in self.manifest["shards"]
+                if host_filter is None or s["host"] in host_filter]
 
     @property
     def total_rows(self) -> int:

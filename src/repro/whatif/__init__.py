@@ -1,0 +1,42 @@
+"""What-if policy engine: counterfactual mitigation sweeps over stored
+fleet telemetry.
+
+Replays any :class:`~repro.telemetry.storage.TelemetryStore` (cluster
+simulator output, DES/serving traces) under a grid of execution-idle
+mitigation policies — Algorithm-1 downscaling, k-of-n consolidation
+parking, power capping — fully out-of-core, and reports the energy/perf
+trade-off :class:`~repro.whatif.sweep.Frontier`. Turns the repro from
+"measure execution-idle" into "choose a mitigation".
+"""
+from repro.whatif.policies import (  # noqa: F401
+    DownscaleCarry,
+    DownscalePolicy,
+    NoOpPolicy,
+    ParkingPolicy,
+    Policy,
+    PowerCapPolicy,
+    SegmentEffect,
+    downscale_decisions,
+    low_activity_series,
+)
+from repro.whatif.replay import (  # noqa: F401
+    JobReplay,
+    PolicyReplayer,
+    ReplayResult,
+    replay_chunk,
+    replay_store,
+)
+from repro.whatif.sweep import (  # noqa: F401
+    Frontier,
+    PolicyOutcome,
+    default_policy_grid,
+    run_sweep,
+    sweep_frame,
+)
+from repro.whatif.report import (  # noqa: F401
+    format_frontier,
+    frontier_from_dict,
+    frontier_to_dict,
+    load_frontier,
+    save_frontier,
+)

@@ -1,0 +1,412 @@
+"""Candidate execution-idle mitigation policies for counterfactual replay.
+
+Each policy answers, per telemetry sample of one (job, host, device) stream:
+*what would the device have done under this mitigation*, expressed as a
+counterfactual board power (and optionally residency) series plus a modeled
+performance penalty. Policies are **vectorized** and **streaming**: ``apply``
+consumes time-ordered segments of any size and carries state across segment
+boundaries, so a replay over 1-row chunks, storage shards, or the whole
+stream produces the exact same decision sequence.
+
+The policy set mirrors the paper's mitigation space:
+
+* :class:`DownscalePolicy` — Algorithm 1 (§5.3) frequency control, a
+  vectorized re-derivation of
+  :class:`repro.core.controller.ExecutionIdleController` whose decision
+  sequence is verified identical to the step-by-step controller
+  (tests/test_whatif.py);
+* :class:`ParkingPolicy` — §5.1 consolidation: k-of-n devices serve, the
+  rest park their execution-idle time at deep-idle power, paying a
+  model-reload tax per wake (the "Model Parking Tax" trade-off);
+* :class:`PowerCapPolicy` — board power capping with a cube-law slowdown on
+  capped active samples (deadline-aware frequency-scaling baseline);
+* :class:`NoOpPolicy` — the recorded fleet, unchanged (frontier origin).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.core.controller import ControllerConfig, DownscaleMode
+from repro.core.imbalance import PoolConfig
+from repro.core.power_model import ClockLevel, PlatformSpec
+from repro.core.states import COMMUNICATION_SIGNALS, COMPUTE_SIGNALS
+from repro.telemetry.records import TelemetryFrame
+
+
+def _threshold_params(config: ControllerConfig) -> dict:
+    """Signal-threshold knobs shared by every policy's ``describe()`` —
+    ``describe()`` doubles as the merge-compatibility key, so every knob
+    that changes decisions must appear in it."""
+    return {
+        "interval_eps_s": config.interval_eps_s,
+        "activity_threshold": config.activity_threshold,
+        "comm_threshold_gbs": config.comm_threshold_gbs,
+    }
+
+
+def low_activity_series(seg: TelemetryFrame, config: ControllerConfig) -> np.ndarray:
+    """Vectorized Algorithm-1 low-activity predicate over one segment.
+
+    Matches :meth:`ExecutionIdleController._low_activity` exactly when the
+    controller is fed the same samples with activity as fractions
+    (percent / 100) and NaN (signal unavailable) replaced by 0.0.
+
+    Memoized per segment object and threshold pair: a sweep feeds the same
+    segment to every grid config (``replay_chunk``), and most configs share
+    thresholds, so the ~12 full-array passes run once, not once per config.
+    """
+    key = (config.activity_threshold, config.comm_threshold_gbs)
+    cache = getattr(seg, "_low_cache", None)
+    if cache is None:
+        cache = seg._low_cache = {}
+    cached = cache.get(key)
+    if cached is not None:
+        return cached
+    n = len(seg)
+    comp = np.zeros(n)
+    for k in COMPUTE_SIGNALS:
+        comp = np.maximum(comp, np.nan_to_num(seg[k], nan=0.0))
+    mem = np.nan_to_num(seg["dram"], nan=0.0)
+    comm = np.zeros(n)
+    for k in COMMUNICATION_SIGNALS:
+        comm = np.maximum(comm, np.nan_to_num(seg[k], nan=0.0))
+    low = ((comp / 100.0 < config.activity_threshold)
+           & (mem / 100.0 < config.activity_threshold)
+           & (comm < config.comm_threshold_gbs))
+    cache[key] = low
+    return low
+
+
+@dataclasses.dataclass
+class SegmentEffect:
+    """One policy's counterfactual for one time-ordered segment."""
+
+    #: counterfactual board power per sample (W)
+    power_w: np.ndarray
+    #: counterfactual residency, or None when unchanged from the recording
+    resident: np.ndarray | None
+    #: samples the policy affected (downscaled / parked / capped)
+    throttled: np.ndarray
+    #: penalty partial-sum for sample-proportional penalty models; partials
+    #: are fsum'd at finalize so totals are chunking-invariant
+    penalty_partial_s: float = 0.0
+    #: events priced at finalize via ``Policy.event_penalty_s`` (restores,
+    #: wake-ups); integer counts keep the pricing chunking-invariant
+    wake_events: int = 0
+    downscale_events: int = 0
+
+
+@runtime_checkable
+class Policy(Protocol):
+    """What the replayer needs from a mitigation policy."""
+
+    @property
+    def name(self) -> str: ...
+    def describe(self) -> dict: ...
+    def init_carry(self) -> Any: ...
+    def apply(self, seg: TelemetryFrame, plat: PlatformSpec, carry: Any,
+              dt_s: float = 1.0) -> tuple[SegmentEffect, Any]: ...
+    def event_penalty_s(self, plat: PlatformSpec) -> float: ...
+
+
+# --------------------------------------------------------------------------- #
+# No-op baseline
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class NoOpPolicy:
+    """The recorded fleet, unchanged — anchors the frontier at (0, 0)."""
+
+    @property
+    def name(self) -> str:
+        return "noop"
+
+    def describe(self) -> dict:
+        return {"policy": self.name}
+
+    def init_carry(self) -> None:
+        return None
+
+    def apply(self, seg: TelemetryFrame, plat: PlatformSpec, carry: None,
+              dt_s: float = 1.0) -> tuple[SegmentEffect, None]:
+        n = len(seg)
+        return SegmentEffect(
+            power_w=np.asarray(seg["power"], dtype=np.float64),
+            resident=None,
+            throttled=np.zeros(n, dtype=bool),
+        ), None
+
+    def event_penalty_s(self, plat: PlatformSpec) -> float:
+        return 0.0
+
+
+# --------------------------------------------------------------------------- #
+# Algorithm-1 downscaling, vectorized
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass
+class DownscaleCarry:
+    """Controller state carried across segment boundaries.
+
+    ``c`` is the consecutive low-activity accumulator *as the step controller
+    would hold it* (left-fold float additions of ``interval_eps_s``), so the
+    trigger comparison ``c > X`` lands on the same sample for every chunking.
+    """
+
+    c: float = 0.0
+    t_cooldown: float = 0.0
+    downscaled: bool = False
+
+
+def downscale_decisions(
+    ts: np.ndarray,
+    low: np.ndarray,
+    config: ControllerConfig,
+    carry: DownscaleCarry,
+) -> tuple[np.ndarray, DownscaleCarry, int, int]:
+    """Vectorized Algorithm-1 decision sequence over one segment.
+
+    Returns ``(downscaled_after_step, carry_out, n_downscales, n_restores)``
+    where ``downscaled_after_step[i]`` equals the return value of
+    :meth:`ExecutionIdleController.step` at sample ``i`` — verified exactly
+    in tests/test_whatif.py over simulator and DES telemetry.
+
+    The recurrence is vectorized by low/busy *runs*: within a low run the
+    accumulator ``c`` is a strict left-fold (``np.add.accumulate``) matching
+    the controller's repeated float addition, and the trigger index is the
+    max of the first ``c > X`` sample and the first ``t >= t_cooldown``
+    sample (both thresholds are monotone within a run). The Python loop is
+    O(runs), not O(samples).
+    """
+    low = np.asarray(low, dtype=bool)
+    ts = np.asarray(ts, dtype=np.float64)
+    n = low.shape[0]
+    out = np.zeros(n, dtype=bool)
+    if n == 0:
+        return out, carry, 0, 0
+    c, t_cd, ds = carry.c, carry.t_cooldown, carry.downscaled
+    eps, x, y = config.interval_eps_s, config.threshold_x_s, config.cooldown_y_s
+
+    change = np.flatnonzero(np.diff(low)) + 1
+    starts = np.concatenate([[0], change])
+    ends = np.concatenate([change, [n]])
+    n_down = n_rest = 0
+
+    for s, e in zip(starts, ends):
+        if not low[s]:
+            # activity: c resets; restore (and start the cooldown clock) if
+            # the device was downscaled — both happen at the run's first step
+            if ds:
+                ds = False
+                n_rest += 1
+                t_cd = float(ts[s]) + y
+            c = 0.0
+        elif ds:
+            # already downscaled: stays downscaled for the whole low run.
+            # c keeps accumulating in the controller but is unobservable
+            # until the next activity resets it, so its value is dead here.
+            out[s:e] = True
+        else:
+            m = e - s
+            buf = np.empty(m + 1)
+            buf[0] = c
+            buf[1:] = eps
+            cs = np.add.accumulate(buf)[1:]        # strict left-fold, as step()
+            if cs[-1] > x:                          # cs is strictly increasing
+                i_c = int(np.argmax(cs > x))
+                i_t = int(np.searchsorted(ts[s:e], t_cd, side="left"))
+                i = max(i_c, i_t)
+                if i < m:
+                    out[s + i:e] = True
+                    ds = True
+                    n_down += 1
+            c = float(cs[-1])
+    return out, DownscaleCarry(c=c, t_cooldown=t_cd, downscaled=ds), n_down, n_rest
+
+
+@dataclasses.dataclass(frozen=True)
+class DownscalePolicy:
+    """Algorithm-1 frequency control replayed counterfactually (§5.3).
+
+    Energy model: while downscaled (and the program is resident) the board
+    power drops by the residency-floor gap
+    ``exec_idle_w - residency_floor_w(f_min clocks)`` — downscaling attacks
+    the floor, not the activity term — clipped below at deep-idle power.
+
+    Penalty model: each downscale episode stalls the device for two clock
+    switches (down + up, Velicka et al. [52]) plus one control interval of
+    ramp at ``perf_scale(f_min)``; priced per *restore* event so totals are
+    chunking-invariant.
+    """
+
+    config: ControllerConfig = ControllerConfig()
+    switch_latency_s: float = 0.2
+    compute_bound_fraction: float = 0.7
+
+    @property
+    def name(self) -> str:
+        return "downscale"
+
+    def describe(self) -> dict:
+        return {
+            "policy": self.name,
+            "threshold_x_s": self.config.threshold_x_s,
+            "cooldown_y_s": self.config.cooldown_y_s,
+            "mode": self.config.mode.value,
+            "switch_latency_s": self.switch_latency_s,
+            "compute_bound_fraction": self.compute_bound_fraction,
+            **_threshold_params(self.config),
+        }
+
+    def init_carry(self) -> DownscaleCarry:
+        return DownscaleCarry()
+
+    def _min_clocks(self) -> tuple[ClockLevel, ClockLevel]:
+        if self.config.mode == DownscaleMode.SM_AND_MEM:
+            return ClockLevel.MIN, ClockLevel.MIN
+        return ClockLevel.MIN, ClockLevel.MAX
+
+    def apply(self, seg: TelemetryFrame, plat: PlatformSpec,
+              carry: DownscaleCarry,
+              dt_s: float = 1.0) -> tuple[SegmentEffect, DownscaleCarry]:
+        low = low_activity_series(seg, self.config)
+        decisions, carry, n_down, n_rest = downscale_decisions(
+            seg["timestamp"], low, self.config, carry)
+        sm, mem = self._min_clocks()
+        delta = plat.exec_idle_w - plat.residency_floor_w(sm, mem)
+        resident = seg["program_resident"].astype(bool)
+        throttled = decisions & resident
+        power = np.asarray(seg["power"], dtype=np.float64)
+        cf = np.where(throttled, np.maximum(power - delta, plat.deep_idle_w), power)
+        return SegmentEffect(
+            power_w=cf,
+            resident=None,
+            throttled=throttled,
+            wake_events=n_rest,
+            downscale_events=n_down,
+        ), carry
+
+    def event_penalty_s(self, plat: PlatformSpec) -> float:
+        sm, mem = self._min_clocks()
+        r = plat.perf_scale(sm, mem, self.compute_bound_fraction)
+        return 2.0 * self.switch_latency_s + self.config.interval_eps_s * (1.0 - r)
+
+
+# --------------------------------------------------------------------------- #
+# Consolidation / parking (§5.1, k-of-n via core.imbalance)
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass
+class ParkCarry:
+    prev_idle: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class ParkingPolicy:
+    """Deliberate-imbalance consolidation: park the n-k inactive devices.
+
+    Device membership follows :meth:`repro.core.imbalance.PoolConfig
+    .active_set` applied to consecutive blocks of ``pool.n_devices`` device
+    ids (``device_id % n_devices``); parked devices drop their
+    execution-idle samples to deep-idle power and residency (the program is
+    evicted). Recorded active work on a parked device stays in place —
+    a conservative counterfactual, since real consolidation migrates it —
+    but each idle-to-active transition pays ``resume_latency_s`` of model
+    reload (the Model Parking Tax).
+    """
+
+    pool: PoolConfig
+    resume_latency_s: float = 10.0
+    config: ControllerConfig = ControllerConfig()
+
+    @property
+    def name(self) -> str:
+        return "parking"
+
+    def describe(self) -> dict:
+        return {
+            "policy": self.name,
+            "n_devices": self.pool.n_devices,
+            "n_active": len(self.pool.active_set()),
+            "resume_latency_s": self.resume_latency_s,
+            **_threshold_params(self.config),
+        }
+
+    def init_carry(self) -> ParkCarry:
+        return ParkCarry()
+
+    def apply(self, seg: TelemetryFrame, plat: PlatformSpec, carry: ParkCarry,
+              dt_s: float = 1.0) -> tuple[SegmentEffect, ParkCarry]:
+        n = len(seg)
+        power = np.asarray(seg["power"], dtype=np.float64)
+        dev = int(seg["device_id"][0])
+        if dev % self.pool.n_devices in self.pool.active_set():
+            return SegmentEffect(
+                power_w=power, resident=None, throttled=np.zeros(n, bool),
+            ), carry
+        low = low_activity_series(seg, self.config)
+        resident = seg["program_resident"].astype(bool)
+        idle = resident & low
+        active = resident & ~low
+        prev_idle = np.empty(n, dtype=bool)
+        prev_idle[0] = carry.prev_idle
+        prev_idle[1:] = idle[:-1]
+        wakes = int(np.sum(active & prev_idle))
+        return SegmentEffect(
+            power_w=np.where(idle, plat.deep_idle_w, power),
+            resident=resident & ~idle,
+            throttled=idle,
+            wake_events=wakes,
+        ), ParkCarry(prev_idle=bool(idle[-1]))
+
+    def event_penalty_s(self, plat: PlatformSpec) -> float:
+        return self.resume_latency_s
+
+
+# --------------------------------------------------------------------------- #
+# Power capping
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class PowerCapPolicy:
+    """Cap board power at ``cap_fraction * tdp_w``.
+
+    Capped *active* samples slow down by the cube-law frequency/power
+    relation (perf ∝ f, power ∝ f³): each such sample loses
+    ``dt_s * ((power/cap)^(1/3) - 1)`` seconds of progress, priced at the
+    replayer's sampling interval. Penalty partials are fsum'd at finalize:
+    identical for any fixed chunking (hence across worker counts), within
+    one ulp across different chunkings (per-chunk ``np.sum`` rounding).
+    """
+
+    cap_fraction: float = 0.6
+    config: ControllerConfig = ControllerConfig()
+
+    @property
+    def name(self) -> str:
+        return "powercap"
+
+    def describe(self) -> dict:
+        return {"policy": self.name, "cap_fraction": self.cap_fraction,
+                **_threshold_params(self.config)}
+
+    def init_carry(self) -> None:
+        return None
+
+    def apply(self, seg: TelemetryFrame, plat: PlatformSpec, carry: None,
+              dt_s: float = 1.0) -> tuple[SegmentEffect, None]:
+        power = np.asarray(seg["power"], dtype=np.float64)
+        cap_w = self.cap_fraction * plat.tdp_w
+        over = power > cap_w
+        low = low_activity_series(seg, self.config)
+        resident = seg["program_resident"].astype(bool)
+        capped_active = over & resident & ~low
+        slow = np.cbrt(power[capped_active] / cap_w) - 1.0
+        return SegmentEffect(
+            power_w=np.minimum(power, cap_w),
+            resident=None,
+            throttled=over,
+            penalty_partial_s=dt_s * float(np.sum(slow)),
+        ), None
+
+    def event_penalty_s(self, plat: PlatformSpec) -> float:
+        return 0.0

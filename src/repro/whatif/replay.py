@@ -1,0 +1,331 @@
+"""Streaming counterfactual replay of one policy over stored telemetry.
+
+:class:`PolicyReplayer` is the what-if analogue of
+:class:`repro.telemetry.pipeline.FleetAccumulator`: feed time-ordered chunks
+(storage shards, simulator chunks, DES frames) of any size, finalize once.
+Per (job, host, device) stream it runs the policy's vectorized decision
+kernel (carrying policy state across chunk boundaries), re-prices power via
+the platform's :class:`repro.core.power_model.PlatformSpec`, and
+re-integrates both the recorded and the counterfactual series through
+:class:`repro.core.energy.StreamingIntegrator` — so baseline and
+counterfactual energy are **bit-identical under any chunking**, and peak
+memory stays bounded by one chunk.
+
+Penalties: event-priced penalties (downscale restores, parking wakes) are
+integer counts priced once at finalize, so they are chunking-invariant too.
+Sample-proportional penalties (power capping) are per-chunk ``np.sum``
+partials ``math.fsum``'d at finalize: exact for any *fixed* chunking —
+``workers=N`` matches ``workers=1`` bit-for-bit since the shard partition
+is the same — but, like ``FleetAccumulator.unattributed_energy_j``, they
+may differ in the last ulp between *different* chunkings of one stream.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import TYPE_CHECKING, Any, Iterable, Mapping
+
+import numpy as np
+
+from repro.core.energy import EnergyBreakdown, StreamingIntegrator, merge
+from repro.core.power_model import PlatformSpec, get_platform
+from repro.core.states import (ClassifierConfig, DEFAULT_CLASSIFIER,
+                               DeviceState, classify_series)
+from repro.telemetry.records import TelemetryFrame
+from repro.whatif.policies import Policy
+
+if TYPE_CHECKING:
+    from repro.telemetry.storage import TelemetryStore
+
+
+def _default_platform_ids() -> dict[int, str]:
+    from repro.cluster.simulator import PLATFORM_IDS
+    return {i: name for name, i in PLATFORM_IDS.items()}
+
+
+@dataclasses.dataclass
+class _WhatIfGroup:
+    """Per-(job, host, device) partial replay state carried across chunks."""
+
+    carry: Any
+    base: StreamingIntegrator
+    cf: StreamingIntegrator
+    platform_id: int
+    n_rows: int = 0
+    ts_first: float = math.inf
+    ts_last: float = -math.inf
+    penalty_partials: list[float] = dataclasses.field(default_factory=list)
+    wake_events: int = 0
+    downscale_events: int = 0
+    throttled_samples: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class JobReplay:
+    """One stream's recorded vs counterfactual accounting."""
+
+    job_id: int
+    platform: str
+    duration_s: float
+    baseline: EnergyBreakdown
+    counterfactual: EnergyBreakdown
+    penalty_s: float
+    wake_events: int
+    downscale_events: int
+    throttled_time_s: float
+
+    @property
+    def energy_saved_j(self) -> float:
+        return self.baseline.total_energy_j - self.counterfactual.total_energy_j
+
+    @property
+    def saved_fraction(self) -> float:
+        base = self.baseline.total_energy_j
+        return self.energy_saved_j / base if base else 0.0
+
+    @property
+    def penalty_fraction(self) -> float:
+        """Perf penalty relative to the job's recorded active time."""
+        active = self.baseline.time_s[DeviceState.ACTIVE]
+        return self.penalty_s / active if active else 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplayResult:
+    """Fleet-level outcome of replaying one policy config."""
+
+    policy_name: str
+    policy_params: dict
+    jobs: list[JobReplay]
+    baseline: EnergyBreakdown
+    counterfactual: EnergyBreakdown
+    penalty_s: float
+    wake_events: int
+    downscale_events: int
+    throttled_time_s: float
+    n_rows: int
+
+    @property
+    def energy_saved_j(self) -> float:
+        return self.baseline.total_energy_j - self.counterfactual.total_energy_j
+
+    @property
+    def saved_fraction(self) -> float:
+        base = self.baseline.total_energy_j
+        return self.energy_saved_j / base if base else 0.0
+
+    @property
+    def penalty_fraction(self) -> float:
+        active = self.baseline.time_s[DeviceState.ACTIVE]
+        return self.penalty_s / active if active else 0.0
+
+
+class PolicyReplayer:
+    """Out-of-core what-if replay: feed chunks, finalize once.
+
+    Same streaming contract as :class:`FleetAccumulator`: chunks may mix
+    streams freely, but per stream they must arrive in time order. Samples
+    with ``job_id < 0`` (unallocated deep idle) pass through untouched —
+    policies mitigate *jobs*; the unattributed floor is out of scope here.
+
+    ``platform_of`` resolves the ``platform`` column to a
+    :class:`PlatformSpec`: None uses the cluster simulator's interning, a
+    str forces one platform for every stream (e.g. DES output), a mapping
+    gives explicit id -> name.
+    """
+
+    def __init__(
+        self,
+        policy: Policy,
+        platform_of: str | Mapping[int, str] | None = None,
+        min_job_duration_s: float = 2 * 3600.0,
+        min_interval_s: float = 5.0,
+        classifier: ClassifierConfig = DEFAULT_CLASSIFIER,
+        dt_s: float = 1.0,
+    ):
+        self.policy = policy
+        self.platform_of = platform_of
+        self.min_job_duration_s = min_job_duration_s
+        self.min_interval_s = min_interval_s
+        self.classifier = classifier
+        self.dt_s = dt_s
+        self._groups: dict[tuple[int, int, int], _WhatIfGroup] = {}
+        self._plat_cache: dict[int, PlatformSpec] = {}
+        self.n_rows = 0
+
+    def _platform(self, platform_id: int) -> PlatformSpec:
+        plat = self._plat_cache.get(platform_id)
+        if plat is None:
+            if isinstance(self.platform_of, str):
+                plat = get_platform(self.platform_of)
+            else:
+                table = (self.platform_of if self.platform_of is not None
+                         else _default_platform_ids())
+                plat = get_platform(table[platform_id])
+            self._plat_cache[platform_id] = plat
+        return plat
+
+    # ------------------------------------------------------------------ #
+    def update(self, chunk: TelemetryFrame) -> None:
+        """Fold one chunk of telemetry into the running replay."""
+        replay_chunk([self], chunk)
+
+    def _update_segment(
+        self,
+        key: tuple[int, int, int],
+        seg: TelemetryFrame,
+        states: np.ndarray | None = None,
+    ) -> None:
+        """One time-sorted segment of one stream. ``states`` lets a sweep
+        share the baseline classification across replayers with the same
+        classifier config (see :func:`replay_chunk`)."""
+        g = self._groups.get(key)
+        if g is None:
+            g = self._groups[key] = _WhatIfGroup(
+                carry=self.policy.init_carry(),
+                base=StreamingIntegrator(
+                    min_duration_s=self.min_interval_s, dt_s=self.dt_s),
+                cf=StreamingIntegrator(
+                    min_duration_s=self.min_interval_s, dt_s=self.dt_s),
+                platform_id=int(seg["platform"][0]),
+            )
+        ts = seg["timestamp"]
+        if float(ts[0]) < g.ts_last:
+            raise ValueError(
+                f"chunks for stream {key} are not time-ordered: got "
+                f"t={float(ts[0])} after t={g.ts_last}")
+        g.ts_first = min(g.ts_first, float(ts[0]))
+        g.ts_last = float(ts[-1])
+        g.n_rows += len(seg)
+        self.n_rows += len(seg)
+
+        if states is None:
+            states = classify_series(
+                seg["program_resident"].astype(bool),
+                seg.activity_pct(),
+                seg.comm_gbs(),
+                self.classifier,
+            )
+        effect, g.carry = self.policy.apply(seg, self._platform(g.platform_id),
+                                            g.carry, dt_s=self.dt_s)
+        if effect.resident is None:
+            cf_states = states
+        else:
+            cf_states = classify_series(
+                effect.resident, seg.activity_pct(), seg.comm_gbs(),
+                self.classifier)
+        g.base.update(states, seg["power"])
+        g.cf.update(cf_states, effect.power_w)
+        if effect.penalty_partial_s:
+            g.penalty_partials.append(effect.penalty_partial_s)
+        g.wake_events += effect.wake_events
+        g.downscale_events += effect.downscale_events
+        g.throttled_samples += int(np.sum(effect.throttled))
+
+    # ------------------------------------------------------------------ #
+    def merge(self, other: "PolicyReplayer") -> "PolicyReplayer":
+        """Absorb a replayer that processed a *disjoint* set of streams —
+        the reduction step of the process-pool sweep. Raises on overlap
+        (per-stream carry state cannot be joined after the fact)."""
+        overlap = self._groups.keys() & other._groups.keys()
+        if overlap:
+            raise ValueError(
+                f"cannot merge replayers with overlapping streams: "
+                f"{sorted(overlap)[:3]}...")
+        if (other.policy.describe(), other.min_job_duration_s,
+                other.min_interval_s, other.classifier, other.dt_s,
+                other.platform_of) != (
+                self.policy.describe(), self.min_job_duration_s,
+                self.min_interval_s, self.classifier, self.dt_s,
+                self.platform_of):
+            raise ValueError("cannot merge replayers with different configs")
+        self._groups.update(other._groups)
+        self.n_rows += other.n_rows
+        return self
+
+    def finalize(self) -> ReplayResult:
+        """Flush carried state and price the policy fleet-wide."""
+        jobs: list[JobReplay] = []
+        penalty_total = 0.0
+        wake_total = down_total = 0
+        throttled_total = 0
+        for key in sorted(self._groups):
+            g = self._groups[key]
+            base, _ = g.base.finalize()
+            cf, _ = g.cf.finalize()
+            span_s = g.ts_last - g.ts_first + self.dt_s
+            if span_s < self.min_job_duration_s:
+                continue
+            plat = self._platform(g.platform_id)
+            penalty = (math.fsum(g.penalty_partials)
+                       + g.wake_events * self.policy.event_penalty_s(plat))
+            jobs.append(JobReplay(
+                job_id=key[0],
+                platform=plat.name,
+                duration_s=float(span_s),
+                baseline=base,
+                counterfactual=cf,
+                penalty_s=penalty,
+                wake_events=g.wake_events,
+                downscale_events=g.downscale_events,
+                throttled_time_s=float(g.throttled_samples * self.dt_s),
+            ))
+            penalty_total += penalty
+            wake_total += g.wake_events
+            down_total += g.downscale_events
+            throttled_total += g.throttled_samples
+        n_rows = self.n_rows
+        self._groups.clear()
+        self.n_rows = 0
+        return ReplayResult(
+            policy_name=self.policy.name,
+            policy_params=self.policy.describe(),
+            jobs=jobs,
+            baseline=merge([j.baseline for j in jobs]),
+            counterfactual=merge([j.counterfactual for j in jobs]),
+            penalty_s=penalty_total,
+            wake_events=wake_total,
+            downscale_events=down_total,
+            throttled_time_s=float(throttled_total * self.dt_s),
+            n_rows=n_rows,
+        )
+
+
+def replay_chunk(replayers: Iterable[PolicyReplayer],
+                 chunk: TelemetryFrame) -> None:
+    """Feed one chunk to many replayers, sharing the grouping pass and the
+    baseline classification (per distinct classifier config) — the sweep's
+    inner loop, so a 48-config sweep lexsorts and classifies each shard once,
+    not 48 times."""
+    replayers = list(replayers)
+    if len(chunk) == 0 or not replayers:
+        return
+    for key, seg in chunk.group_streams():
+        if key[0] < 0:
+            continue
+        states_cache: dict[ClassifierConfig, np.ndarray] = {}
+        for r in replayers:
+            states = states_cache.get(r.classifier)
+            if states is None:
+                states = classify_series(
+                    seg["program_resident"].astype(bool),
+                    seg.activity_pct(),
+                    seg.comm_gbs(),
+                    r.classifier,
+                )
+                states_cache[r.classifier] = states
+            r._update_segment(key, seg, states=states)
+
+
+def replay_store(
+    store: "TelemetryStore",
+    policy: Policy,
+    hosts: Iterable[str] | None = None,
+    mmap: bool = False,
+    **kwargs,
+) -> ReplayResult:
+    """Replay one policy over a whole store, one shard in memory at a time."""
+    replayer = PolicyReplayer(policy, **kwargs)
+    for shard in store.iter_shards(hosts, mmap=mmap):
+        replayer.update(shard)
+    return replayer.finalize()

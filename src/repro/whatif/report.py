@@ -1,0 +1,80 @@
+"""Frontier serialization and human-readable reporting.
+
+JSON schema is flat and stable: one object with sweep metadata plus a list
+of per-config outcomes (params, energy saved, modeled penalty, Pareto flag,
+per-job CDFs), so downstream dashboards can diff sweeps across fleet
+snapshots.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+
+from repro.core.energy import energy_kwh
+from repro.whatif.sweep import Frontier, PolicyOutcome
+
+SCHEMA_VERSION = 1
+
+
+def frontier_to_dict(frontier: Frontier) -> dict:
+    return {
+        "schema_version": SCHEMA_VERSION,
+        "n_rows": frontier.n_rows,
+        "n_jobs": frontier.n_jobs,
+        "outcomes": [dataclasses.asdict(o) for o in frontier.outcomes],
+    }
+
+
+def frontier_from_dict(payload: dict) -> Frontier:
+    outcomes = []
+    for o in payload["outcomes"]:
+        o = dict(o)
+        o["per_job_saved_fraction"] = tuple(o["per_job_saved_fraction"])
+        o["per_job_penalty_s"] = tuple(o["per_job_penalty_s"])
+        outcomes.append(PolicyOutcome(**o))
+    return Frontier(outcomes=tuple(outcomes),
+                    n_rows=payload["n_rows"], n_jobs=payload["n_jobs"])
+
+
+def save_frontier(frontier: Frontier, path: str | pathlib.Path) -> pathlib.Path:
+    path = pathlib.Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(frontier_to_dict(frontier), indent=1) + "\n")
+    return path
+
+
+def load_frontier(path: str | pathlib.Path) -> Frontier:
+    return frontier_from_dict(json.loads(pathlib.Path(path).read_text()))
+
+
+def _label(outcome: PolicyOutcome) -> str:
+    p = outcome.params
+    if outcome.name == "downscale":
+        return (f"downscale X={p['threshold_x_s']:g} Y={p['cooldown_y_s']:g} "
+                f"{p['mode']}")
+    if outcome.name == "parking":
+        return f"parking {p['n_active']}-of-{p['n_devices']} resume={p['resume_latency_s']:g}s"
+    if outcome.name == "powercap":
+        return f"powercap {p['cap_fraction']:.0%} TDP"
+    return outcome.name
+
+
+def format_frontier(frontier: Frontier, top: int | None = None) -> str:
+    """Text table of the sweep, best energy saving first; ``*`` marks the
+    Pareto set."""
+    rows = sorted(frontier.outcomes, key=lambda o: -o.energy_saved_j)
+    if top is not None:
+        rows = rows[:top]
+    lines = [
+        f"what-if frontier: {len(frontier.outcomes)} configs, "
+        f"{frontier.n_jobs} jobs, {frontier.n_rows:,} samples",
+        f"{'':2}{'policy':44} {'saved kWh':>10} {'saved %':>8} "
+        f"{'penalty s':>10} {'wakes':>7}",
+    ]
+    for o in rows:
+        mark = "* " if o.pareto else "  "
+        lines.append(
+            f"{mark}{_label(o):44} {energy_kwh(o.energy_saved_j):10.2f} "
+            f"{o.saved_fraction:8.1%} {o.penalty_s:10.1f} {o.wake_events:7d}")
+    return "\n".join(lines)

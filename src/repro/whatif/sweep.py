@@ -1,0 +1,217 @@
+"""Policy-grid sweep runner: policies x shards, process-pool parallel.
+
+``run_sweep`` replays every policy config of a grid over one
+:class:`TelemetryStore` and assembles a :class:`Frontier` — energy saved vs
+performance penalty per config, with the Pareto-optimal subset flagged and
+per-job CDFs attached.
+
+Execution model: the store's shards are partitioned by host label (each
+(job, host, device) stream lives entirely under one host label, so
+partitions hold disjoint streams); each partition streams its shards once,
+feeding ALL policy replayers per shard (:func:`repro.whatif.replay
+.replay_chunk` shares the lexsort grouping and classification), so peak
+memory is one shard + per-stream carry state regardless of grid size.
+With ``workers > 1`` partitions run in a process pool and the per-policy
+replayers are merged (disjoint-stream merge); every per-stream computation
+is identical and the cross-stream reductions are exact (``math.fsum``) or
+order-fixed (sorted stream keys), so ``workers=N`` is **bit-identical** to
+``workers=1``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING, Iterable, Sequence
+
+import numpy as np
+
+from repro.core.controller import ControllerConfig, DownscaleMode
+from repro.core.imbalance import PoolConfig, PoolPolicy
+from repro.telemetry.pipeline import map_shard_partitions
+from repro.whatif.policies import (DownscalePolicy, NoOpPolicy, ParkingPolicy,
+                                   Policy, PowerCapPolicy)
+from repro.whatif.replay import PolicyReplayer, ReplayResult, replay_chunk
+
+if TYPE_CHECKING:
+    from repro.telemetry.storage import TelemetryStore
+
+
+# --------------------------------------------------------------------------- #
+# Default policy grid
+# --------------------------------------------------------------------------- #
+def default_policy_grid() -> list[Policy]:
+    """48 policy configs spanning the paper's mitigation space:
+
+    1 no-op + 24 Algorithm-1 downscale (X x Y x mode) + 6 consolidation
+    (k-of-4 x resume latency) + 17 power caps.
+    """
+    grid: list[Policy] = [NoOpPolicy()]
+    for x in (1.0, 2.0, 3.0, 5.0, 8.0, 10.0):
+        for y in (2.0, 5.0):
+            for mode in (DownscaleMode.SM_ONLY, DownscaleMode.SM_AND_MEM):
+                grid.append(DownscalePolicy(config=ControllerConfig(
+                    threshold_x_s=x, cooldown_y_s=y, mode=mode)))
+    for k in (1, 2, 3):
+        for resume_s in (5.0, 30.0):
+            grid.append(ParkingPolicy(
+                pool=PoolConfig(n_devices=4, policy=PoolPolicy.CONSOLIDATED,
+                                n_active=k),
+                resume_latency_s=resume_s))
+    for frac in np.linspace(0.25, 0.95, 17):
+        grid.append(PowerCapPolicy(cap_fraction=round(float(frac), 4)))
+    return grid
+
+
+# --------------------------------------------------------------------------- #
+# Frontier report
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class PolicyOutcome:
+    """One grid point on the energy/perf trade-off frontier."""
+
+    name: str
+    params: dict
+    n_jobs: int
+    baseline_energy_j: float
+    counterfactual_energy_j: float
+    energy_saved_j: float
+    saved_fraction: float
+    penalty_s: float
+    penalty_fraction: float
+    wake_events: int
+    downscale_events: int
+    throttled_time_s: float
+    exec_idle_energy_fraction_baseline: float
+    exec_idle_energy_fraction_cf: float
+    #: sorted per-job CDFs (x-axes of the Fig-7-style what-if plots)
+    per_job_saved_fraction: tuple[float, ...]
+    per_job_penalty_s: tuple[float, ...]
+    pareto: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class Frontier:
+    """Sweep result: one outcome per policy config, Pareto subset flagged."""
+
+    outcomes: tuple[PolicyOutcome, ...]
+    n_rows: int
+    n_jobs: int
+
+    def pareto_set(self) -> list[PolicyOutcome]:
+        return [o for o in self.outcomes if o.pareto]
+
+    def best_within_penalty(self, max_penalty_s: float) -> PolicyOutcome | None:
+        """Highest-saving config whose modeled penalty fits the budget."""
+        ok = [o for o in self.outcomes if o.penalty_s <= max_penalty_s]
+        return max(ok, key=lambda o: o.energy_saved_j) if ok else None
+
+
+def _pareto_flags(saved: Sequence[float], penalty: Sequence[float]) -> list[bool]:
+    """Non-dominated points for (maximize saved, minimize penalty)."""
+    flags = []
+    for i, (s_i, p_i) in enumerate(zip(saved, penalty)):
+        dominated = any(
+            (s_j >= s_i and p_j <= p_i) and (s_j > s_i or p_j < p_i)
+            for j, (s_j, p_j) in enumerate(zip(saved, penalty)) if j != i)
+        flags.append(not dominated)
+    return flags
+
+
+def _outcome(result: ReplayResult) -> PolicyOutcome:
+    saved_cdf = tuple(sorted(float(j.saved_fraction) for j in result.jobs))
+    penalty_cdf = tuple(sorted(float(j.penalty_s) for j in result.jobs))
+    return PolicyOutcome(
+        name=result.policy_name,
+        params=result.policy_params,
+        n_jobs=len(result.jobs),
+        baseline_energy_j=result.baseline.total_energy_j,
+        counterfactual_energy_j=result.counterfactual.total_energy_j,
+        energy_saved_j=result.energy_saved_j,
+        saved_fraction=result.saved_fraction,
+        penalty_s=result.penalty_s,
+        penalty_fraction=result.penalty_fraction,
+        wake_events=result.wake_events,
+        downscale_events=result.downscale_events,
+        throttled_time_s=result.throttled_time_s,
+        exec_idle_energy_fraction_baseline=result.baseline.exec_idle_energy_fraction,
+        exec_idle_energy_fraction_cf=result.counterfactual.exec_idle_energy_fraction,
+        per_job_saved_fraction=saved_cdf,
+        per_job_penalty_s=penalty_cdf,
+    )
+
+
+def _assemble(results: list[ReplayResult], n_rows: int) -> Frontier:
+    outcomes = [_outcome(r) for r in results]
+    flags = _pareto_flags([o.energy_saved_j for o in outcomes],
+                          [o.penalty_s for o in outcomes])
+    outcomes = [dataclasses.replace(o, pareto=f)
+                for o, f in zip(outcomes, flags)]
+    n_jobs = max((o.n_jobs for o in outcomes), default=0)
+    return Frontier(outcomes=tuple(outcomes), n_rows=n_rows, n_jobs=n_jobs)
+
+
+# --------------------------------------------------------------------------- #
+# Sweep execution
+# --------------------------------------------------------------------------- #
+def _replay_partition(
+    root: str,
+    shard_files: list[str],
+    policies: Sequence[Policy],
+    mmap: bool,
+    replayer_kwargs: dict,
+) -> list[PolicyReplayer]:
+    """Stream one shard subset through every policy's replayer (worker body;
+    must stay module-level picklable)."""
+    from repro.telemetry.storage import TelemetryStore
+    store = TelemetryStore(root)
+    replayers = [PolicyReplayer(p, **replayer_kwargs) for p in policies]
+    for name in shard_files:
+        replay_chunk(replayers, store.read_shard(name, mmap=mmap))
+    return replayers
+
+
+def run_sweep(
+    store: "TelemetryStore",
+    policies: Sequence[Policy] | None = None,
+    workers: int = 1,
+    hosts: Iterable[str] | None = None,
+    mmap: bool = False,
+    **replayer_kwargs,
+) -> Frontier:
+    """Replay a policy grid over a store and report the trade-off frontier.
+
+    Args:
+        store: shard store to replay (simulator output or DES/serving traces).
+        policies: grid to sweep; defaults to :func:`default_policy_grid` (48).
+        workers: process-pool width. Partitions are host-label-disjoint, so
+            results are bit-identical for every worker count. Scripts calling
+            this with ``workers > 1`` at top level need the standard
+            ``if __name__ == "__main__":`` guard (workers re-import main).
+        hosts: optional host-label filter.
+        mmap: pass ``mmap=True`` to shard reads (zero-copy for ``npy_dir``
+            shards; see :meth:`TelemetryStore.iter_shards`).
+        **replayer_kwargs: forwarded to :class:`PolicyReplayer`
+            (``min_job_duration_s``, ``platform_of``, ``classifier``, ...).
+    """
+    policies = list(default_policy_grid() if policies is None else policies)
+
+    def merge_lists(a: list[PolicyReplayer], b: list[PolicyReplayer]):
+        for dst, src in zip(a, b):
+            dst.merge(src)
+        return a
+
+    replayers = map_shard_partitions(
+        store, hosts, workers, _replay_partition,
+        (policies, mmap, replayer_kwargs), merge=merge_lists)
+    n_rows = replayers[0].n_rows if replayers else 0
+    return _assemble([r.finalize() for r in replayers], n_rows)
+
+
+def sweep_frame(frame, policies: Sequence[Policy] | None = None,
+                **replayer_kwargs) -> Frontier:
+    """In-memory convenience: sweep a single :class:`TelemetryFrame`
+    (e.g. a DES :class:`PoolResult` telemetry) without a store."""
+    policies = list(default_policy_grid() if policies is None else policies)
+    replayers = [PolicyReplayer(p, **replayer_kwargs) for p in policies]
+    replay_chunk(replayers, frame)
+    n_rows = replayers[0].n_rows if replayers else 0
+    return _assemble([r.finalize() for r in replayers], n_rows)

@@ -82,6 +82,56 @@ def test_controller_invariants(seed, x, y):
             assert not ctl.downscaled             # activity restores
 
 
+def test_cooldown_boundary_t_equals_t_cooldown_downscales():
+    """Algorithm 1 uses `t >= t_cooldown`: the boundary step itself may
+    downscale — one step earlier must not."""
+    dev, ctl = make(x=1.0, y=5.0)
+    for t in range(3):
+        ctl.step(float(t), IDLE)
+    assert ctl.downscaled
+    ctl.step(3.0, BUSY)                    # restore -> t_cooldown = 8.0
+    assert not ctl.downscaled
+    # idle from t=4: c exceeds X at t=5 but the cooldown gates until t=8
+    for t in range(4, 8):
+        ctl.step(float(t), IDLE)
+        assert not ctl.downscaled, f"t={t} is inside the cooldown window"
+    ctl.step(8.0, IDLE)                    # t == t_cooldown exactly
+    assert ctl.downscaled
+    assert ctl.stats.downscale_events == 2
+
+
+def test_sm_and_mem_mode_sets_and_restores_both_clocks():
+    dev, ctl = make(mode=DownscaleMode.SM_AND_MEM)
+    for t in range(5):
+        ctl.step(float(t), IDLE)
+    assert dev.clocks() == (ClockLevel.MIN, ClockLevel.MIN)
+    ctl.step(5.0, BUSY)
+    assert dev.clocks() == (ClockLevel.MAX, ClockLevel.MAX)
+    # sm-only mode must leave the memory clock alone
+    dev2, ctl2 = make(mode=DownscaleMode.SM_ONLY)
+    for t in range(5):
+        ctl2.step(float(t), IDLE)
+    assert dev2.clocks() == (ClockLevel.MIN, ClockLevel.MAX)
+
+
+def test_retrigger_immediately_after_upscale():
+    """A single busy second after restore: c resets, and once the cooldown
+    passes the controller must re-downscale after X fresh idle seconds."""
+    dev, ctl = make(x=2.0, y=1.0)
+    for t in range(4):
+        ctl.step(float(t), IDLE)
+    assert ctl.downscaled
+    ctl.step(4.0, BUSY)                    # restore; t_cooldown = 5.0
+    assert not ctl.downscaled
+    assert ctl.stats.restore_events == 1
+    # idle again immediately: c=1,2 at t=5,6; c>X at t=7 >= cooldown
+    for t, expect in ((5.0, False), (6.0, False), (7.0, True)):
+        ctl.step(t, IDLE)
+        assert ctl.downscaled is expect, f"t={t}"
+    assert ctl.stats.downscale_events == 2
+    assert dev.switch_count == 3           # down, up, down
+
+
 # --------------------------------------------------------------------------- #
 # power model
 # --------------------------------------------------------------------------- #

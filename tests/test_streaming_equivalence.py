@@ -194,6 +194,114 @@ def test_dt_s_plumbs_through_entry_points():
     assert_fleet_equal(fa1, fa)
 
 
+# --------------------------------------------------------------------------- #
+# process-pool parallel shard analysis + accumulator merge
+# --------------------------------------------------------------------------- #
+def test_analyze_store_workers_bit_identical_to_serial():
+    with tempfile.TemporaryDirectory() as d:
+        store = TelemetryStore(d)
+        generate_cluster(n_devices=6, horizon_s=1800, seed=33,
+                         store=store, shard_s=600)
+        assert len({s["host"] for s in store.manifest["shards"]}) > 1
+        serial = analyze_store(store, min_job_duration_s=600)
+        parallel = analyze_store(store, min_job_duration_s=600, workers=2)
+    # fully exact, including unattributed (fsum over identical partials)
+    assert_fleet_equal(parallel, serial, unattributed_exact=True)
+
+
+def test_analyze_store_accepts_one_shot_hosts_iterable():
+    # `hosts` may be a generator; it is consumed by both the partitioner and
+    # the serial fallback, which must not silently yield an empty analysis
+    with tempfile.TemporaryDirectory() as d:
+        store = TelemetryStore(d)
+        generate_cluster(n_devices=4, horizon_s=1200, seed=34,
+                         store=store, shard_s=600)
+        expected = analyze_store(store, hosts=["h0"], min_job_duration_s=300)
+        assert expected.jobs
+        got = analyze_store(store, hosts=(h for h in ["h0"]),
+                            min_job_duration_s=300, workers=4)
+        assert_fleet_equal(got, expected, unattributed_exact=True)
+
+
+def test_accumulator_merge_disjoint_streams():
+    cs = generate_cluster(n_devices=4, horizon_s=1200, seed=35)
+    mono = FleetAccumulator(min_job_duration_s=300)
+    mono.update(cs.frame)
+    expected = mono.finalize()
+
+    devs = cs.frame["device_id"]
+    a = FleetAccumulator(min_job_duration_s=300)
+    b = FleetAccumulator(min_job_duration_s=300)
+    a.update(cs.frame.select(devs < 2))
+    b.update(cs.frame.select(devs >= 2))
+    merged = a.merge(b).finalize()
+    assert_fleet_equal(merged, expected, unattributed_exact=False)
+
+
+def test_accumulator_merge_rejects_overlap_and_config_mismatch():
+    cs = generate_cluster(n_devices=2, horizon_s=900, seed=36)
+    a = FleetAccumulator(min_job_duration_s=0.0)
+    b = FleetAccumulator(min_job_duration_s=0.0)
+    a.update(cs.frame)
+    b.update(cs.frame)
+    with pytest.raises(ValueError, match="overlapping"):
+        a.merge(b)
+    c = FleetAccumulator(min_job_duration_s=123.0)
+    with pytest.raises(ValueError, match="configs"):
+        a.merge(c)
+
+
+# --------------------------------------------------------------------------- #
+# storage: npy_dir shard format + mmap reads
+# --------------------------------------------------------------------------- #
+def test_npy_dir_store_roundtrip_and_mmap_zero_copy():
+    cs = generate_cluster(n_devices=2, horizon_s=900, seed=37)
+    with tempfile.TemporaryDirectory() as d:
+        store = TelemetryStore(d, shard_format="npy_dir")
+        store.write_shard(cs.frame, host="h0")
+        plain = store.read_shard(store.manifest["shards"][0]["file"])
+        for f in plain.columns:
+            assert np.array_equal(plain[f], cs.frame[f], equal_nan=True)
+        mapped = next(store.iter_shards(mmap=True))
+        assert isinstance(mapped["power"], np.memmap)   # zero-copy column
+        assert np.array_equal(np.asarray(mapped["power"]), cs.frame["power"])
+        mono = analyze_fleet(cs.frame, min_job_duration_s=300)
+        fa = analyze_store(store, min_job_duration_s=300, mmap=True)
+        assert_fleet_equal(fa, mono, unattributed_exact=False)
+
+
+def test_npz_store_mmap_falls_back_to_load():
+    cs = generate_cluster(n_devices=1, horizon_s=600, seed=38)
+    with tempfile.TemporaryDirectory() as d:
+        store = TelemetryStore(d)                       # default npz
+        store.write_shard(cs.frame, host="h0")
+        frame = next(store.iter_shards(mmap=True))      # no error, plain load
+        assert np.array_equal(frame["power"], cs.frame["power"])
+
+
+def test_unknown_shard_format_rejected():
+    with tempfile.TemporaryDirectory() as d:
+        with pytest.raises(ValueError, match="shard_format"):
+            TelemetryStore(d, shard_format="parquet")
+
+
+def test_shard_format_persisted_across_reopen():
+    cs = generate_cluster(n_devices=1, horizon_s=300, seed=39)
+    with tempfile.TemporaryDirectory() as d:
+        store = TelemetryStore(d, shard_format="npy_dir")
+        store.write_shard(cs.frame, host="h0")
+        reopened = TelemetryStore(d)            # append keeps the format
+        assert reopened.shard_format == "npy_dir"
+        with pytest.raises(ValueError, match="persists"):
+            TelemetryStore(d, shard_format="npz")
+        # leftover shard dir from a crashed bulk write: overwrite, not crash
+        fresh = TelemetryStore(d + "/sub", shard_format="npy_dir")
+        fresh.write_shard(cs.frame, host="h0", flush_manifest=False)
+        fresh2 = TelemetryStore(d + "/sub", shard_format="npy_dir")
+        fresh2.write_shard(cs.frame, host="h0")
+        assert fresh2.total_rows == len(cs.frame)
+
+
 def test_min_job_duration_filters_on_span_not_row_count():
     # 2 s sampling: 150 rows span 299 s. The seed compared ROW COUNT against
     # seconds, which would wrongly drop this job for min_job_duration_s=200.

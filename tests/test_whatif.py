@@ -1,0 +1,313 @@
+"""What-if policy engine tests.
+
+The load-bearing guarantee: the vectorized downscale policy reproduces the
+step-by-step :class:`ExecutionIdleController` decision sequence *exactly* on
+recorded signal streams — simulator and DES telemetry, any chunking — and
+the replayer/sweep are bit-identical under chunking and process-pool width.
+"""
+import tempfile
+
+import numpy as np
+import pytest
+from _hyp import given, settings, st
+
+from repro.cluster import generate_cluster
+from repro.core.controller import (ControllerConfig, DownscaleMode,
+                                   ExecutionIdleController)
+from repro.core.imbalance import PoolConfig, PoolPolicy
+from repro.core.power_model import SimulatedDevice, get_platform
+from repro.core.states import DeviceState
+from repro.serving.des import simulate_pool
+from repro.serving.latency import Request
+from repro.serving.perf_model import LLAMA13B_L40S
+from repro.telemetry import TelemetryStore
+from repro.whatif import (DownscalePolicy, NoOpPolicy, ParkingPolicy,
+                          PolicyReplayer, PowerCapPolicy, downscale_decisions,
+                          default_policy_grid, format_frontier,
+                          frontier_from_dict, frontier_to_dict,
+                          low_activity_series, replay_store, run_sweep,
+                          sweep_frame)
+
+_COMP = ("sm", "tensor", "fp16", "fp32", "fp64", "dram")
+_COMM = ("pcie_tx", "pcie_rx", "nvlink_tx", "nvlink_rx", "ici_tx", "ici_rx")
+
+
+def step_controller_decisions(seg, cfg: ControllerConfig) -> np.ndarray:
+    """Reference: the stateful controller stepped sample by sample, fed the
+    same cleaned signals the vectorized policy reads (activity as fractions,
+    NaN -> 0.0 for unavailable)."""
+    ctl = ExecutionIdleController(SimulatedDevice(get_platform("l40s")), cfg)
+    cols = {k: np.nan_to_num(seg[k], nan=0.0) for k in _COMP + _COMM}
+    ts = seg["timestamp"]
+    out = np.empty(len(seg), dtype=bool)
+    for i in range(len(seg)):
+        sample = {k: cols[k][i] / 100.0 for k in _COMP}
+        sample.update({k: cols[k][i] for k in _COMM})
+        out[i] = ctl.step(float(ts[i]), sample)
+    return out
+
+
+def vectorized_decisions(seg, cfg: ControllerConfig, chunk: int) -> np.ndarray:
+    low = low_activity_series(seg, cfg)
+    ts = seg["timestamp"]
+    carry = DownscalePolicy(config=cfg).init_carry()
+    outs = []
+    for s in range(0, len(seg), chunk):
+        o, carry, _, _ = downscale_decisions(ts[s:s + chunk], low[s:s + chunk],
+                                             cfg, carry)
+        outs.append(o)
+    return np.concatenate(outs)
+
+
+def job_streams(frame, limit=None):
+    segs = [(k, seg) for k, seg in frame.group_streams() if k[0] >= 0]
+    return segs[:limit] if limit else segs
+
+
+# --------------------------------------------------------------------------- #
+# decision-sequence equivalence (acceptance criterion)
+# --------------------------------------------------------------------------- #
+@given(st.integers(0, 2**31 - 1), st.floats(1.0, 6.0), st.floats(1.0, 8.0))
+@settings(max_examples=5, deadline=None)
+def test_downscale_matches_controller_on_simulator_streams(seed, x, y):
+    cs = generate_cluster(n_devices=2, horizon_s=1500, seed=seed % 1000)
+    cfg = ControllerConfig(threshold_x_s=x, cooldown_y_s=y)
+    checked = 0
+    for _, seg in job_streams(cs.frame, limit=3):
+        ref = step_controller_decisions(seg, cfg)
+        for chunk in (len(seg), 97):
+            assert np.array_equal(vectorized_decisions(seg, cfg, chunk), ref)
+        checked += 1
+    assert checked > 0
+
+
+def test_downscale_matches_controller_modes_and_one_row_chunks():
+    cs = generate_cluster(n_devices=2, horizon_s=1200, seed=11)
+    for cfg in (ControllerConfig(),
+                ControllerConfig(threshold_x_s=1.0, cooldown_y_s=2.0,
+                                 mode=DownscaleMode.SM_AND_MEM),
+                ControllerConfig(threshold_x_s=5.5, cooldown_y_s=7.0)):
+        for _, seg in job_streams(cs.frame, limit=2):
+            ref = step_controller_decisions(seg, cfg)
+            for chunk in (len(seg), 1, 13):
+                assert np.array_equal(vectorized_decisions(seg, cfg, chunk),
+                                      ref)
+
+
+def test_downscale_matches_controller_on_des_telemetry():
+    rng = np.random.default_rng(3)
+    trace = [Request(req_id=i, arrival_s=float(rng.uniform(0, 100)),
+                     prompt_tokens=200, output_tokens=30)
+             for i in range(25)]
+    res = simulate_pool(trace, get_platform("l40s"), LLAMA13B_L40S,
+                        PoolConfig(n_devices=2), duration_s=140.0)
+    cfg = ControllerConfig()
+    segs = job_streams(res.telemetry)
+    assert segs, "DES must emit job-attributed telemetry"
+    for _, seg in segs:
+        ref = step_controller_decisions(seg, cfg)
+        for chunk in (len(seg), 7):
+            assert np.array_equal(vectorized_decisions(seg, cfg, chunk), ref)
+
+
+# --------------------------------------------------------------------------- #
+# replayer semantics
+# --------------------------------------------------------------------------- #
+def test_noop_policy_is_the_identity():
+    cs = generate_cluster(n_devices=2, horizon_s=1800, seed=4)
+    rep = PolicyReplayer(NoOpPolicy(), min_job_duration_s=300)
+    rep.update(cs.frame)
+    res = rep.finalize()
+    assert res.energy_saved_j == 0.0
+    assert res.penalty_s == 0.0
+    assert res.baseline.energy_j == res.counterfactual.energy_j
+    assert res.baseline.time_s == res.counterfactual.time_s
+
+
+def test_downscale_replay_saves_energy_not_time():
+    cs = generate_cluster(n_devices=3, horizon_s=2700, seed=9)
+    pol = DownscalePolicy(config=ControllerConfig(threshold_x_s=1.0,
+                                                  cooldown_y_s=2.0,
+                                                  mode=DownscaleMode.SM_AND_MEM))
+    rep = PolicyReplayer(pol, min_job_duration_s=300)
+    rep.update(cs.frame)
+    res = rep.finalize()
+    assert res.energy_saved_j > 0.0
+    assert res.downscale_events > 0
+    assert res.penalty_s > 0.0
+    # downscaling re-prices power; it never reclassifies time
+    assert res.baseline.time_s == res.counterfactual.time_s
+
+
+def test_replayer_chunking_bit_identical():
+    cs = generate_cluster(n_devices=3, horizon_s=2700, seed=21)
+    pol = DownscalePolicy()
+    mono = PolicyReplayer(pol, min_job_duration_s=600)
+    mono.update(cs.frame)
+    a = mono.finalize()
+    for chunk_rows in (997, 1800):
+        rep = PolicyReplayer(pol, min_job_duration_s=600)
+        for chunk in cs.frame.iter_chunks(chunk_rows):
+            rep.update(chunk)
+        b = rep.finalize()
+        assert [j.job_id for j in a.jobs] == [j.job_id for j in b.jobs]
+        for ja, jb in zip(a.jobs, b.jobs):
+            assert ja.baseline.energy_j == jb.baseline.energy_j
+            assert ja.counterfactual.energy_j == jb.counterfactual.energy_j
+            assert ja.counterfactual.time_s == jb.counterfactual.time_s
+            assert ja.penalty_s == jb.penalty_s
+            assert ja.wake_events == jb.wake_events
+        assert a.counterfactual.energy_j == b.counterfactual.energy_j
+        assert a.penalty_s == b.penalty_s
+
+
+def test_parking_policy_parks_idle_and_prices_wakes():
+    # one parked device (k=1 of 2 -> device_id 1 parks), alternating blocks
+    rows = []
+    for t in range(60):
+        active = (t // 10) % 2 == 0
+        rows.append({
+            "timestamp": float(t), "job_id": 3, "device_id": 1, "hostname": 0,
+            "program_resident": 1, "sm": 80.0 if active else 1.0,
+            "power": 250.0 if active else 105.0, "platform": 0,
+        })
+    from repro.telemetry.records import TelemetryFrame
+    frame = TelemetryFrame.from_rows(rows)
+    pool = PoolConfig(n_devices=2, policy=PoolPolicy.CONSOLIDATED, n_active=1)
+    pol = ParkingPolicy(pool=pool, resume_latency_s=7.0)
+    rep = PolicyReplayer(pol, min_job_duration_s=0.0)
+    rep.update(frame)
+    res = rep.finalize()
+    # 3 idle decades -> 30 parked seconds at deep-idle (35 W on l40s),
+    # 2 idle->active wake-ups (t=20 and t=40 boundaries)
+    assert res.counterfactual.time_s[DeviceState.DEEP_IDLE] == 30.0
+    assert res.counterfactual.energy_j[DeviceState.DEEP_IDLE] == 30 * 35.0
+    assert res.wake_events == 2
+    assert res.penalty_s == 2 * 7.0
+    assert res.energy_saved_j == pytest.approx(30 * (105.0 - 35.0))
+    # an active device under the same pool is untouched
+    rows2 = [dict(r, device_id=0) for r in rows]
+    rep2 = PolicyReplayer(pol, min_job_duration_s=0.0)
+    rep2.update(TelemetryFrame.from_rows(rows2))
+    res2 = rep2.finalize()
+    assert res2.energy_saved_j == 0.0 and res2.penalty_s == 0.0
+
+
+def test_power_cap_policy_caps_and_slows():
+    from repro.telemetry.records import TelemetryFrame
+    rows = [{"timestamp": float(t), "job_id": 1, "device_id": 0, "hostname": 0,
+             "program_resident": 1, "sm": 90.0, "power": 380.0, "platform": 0}
+            for t in range(20)]
+    frame = TelemetryFrame.from_rows(rows)
+    pol = PowerCapPolicy(cap_fraction=0.5)          # 200 W on the 400 W l40s
+    rep = PolicyReplayer(pol, min_job_duration_s=0.0)
+    rep.update(frame)
+    res = rep.finalize()
+    assert res.counterfactual.energy_j[DeviceState.ACTIVE] == 20 * 200.0
+    expected_penalty = 20 * ((380.0 / 200.0) ** (1 / 3) - 1.0)
+    assert res.penalty_s == pytest.approx(expected_penalty)
+
+
+# --------------------------------------------------------------------------- #
+# sweep: workers parity, frontier structure, serialization
+# --------------------------------------------------------------------------- #
+def small_grid():
+    return [
+        NoOpPolicy(),
+        DownscalePolicy(),
+        DownscalePolicy(config=ControllerConfig(
+            threshold_x_s=1.0, cooldown_y_s=2.0, mode=DownscaleMode.SM_AND_MEM)),
+        ParkingPolicy(pool=PoolConfig(n_devices=4,
+                                      policy=PoolPolicy.CONSOLIDATED,
+                                      n_active=2)),
+        PowerCapPolicy(cap_fraction=0.5),
+    ]
+
+
+def test_sweep_workers_bit_identical_and_pareto_sound():
+    with tempfile.TemporaryDirectory() as d:
+        store = TelemetryStore(d)
+        generate_cluster(n_devices=6, horizon_s=2400, seed=17,
+                         store=store, shard_s=600)
+        assert len({s["host"] for s in store.manifest["shards"]}) > 1
+        f1 = run_sweep(store, small_grid(), workers=1, min_job_duration_s=600)
+        f2 = run_sweep(store, small_grid(), workers=2, min_job_duration_s=600)
+        assert frontier_to_dict(f1) == frontier_to_dict(f2)
+    assert len(f1.outcomes) == 5
+    assert f1.n_jobs > 0 and f1.n_rows > 0
+    pareto = f1.pareto_set()
+    assert pareto
+    for o in pareto:       # no pareto member may be dominated
+        assert not any(
+            p.energy_saved_j >= o.energy_saved_j and p.penalty_s <= o.penalty_s
+            and (p.energy_saved_j > o.energy_saved_j or p.penalty_s < o.penalty_s)
+            for p in f1.outcomes)
+    noop = next(o for o in f1.outcomes if o.name == "noop")
+    assert noop.energy_saved_j == 0.0 and noop.penalty_s == 0.0
+
+
+def test_sweep_frame_and_report_roundtrip():
+    cs = generate_cluster(n_devices=2, horizon_s=1500, seed=23)
+    frontier = sweep_frame(cs.frame, small_grid(), min_job_duration_s=300)
+    payload = frontier_to_dict(frontier)
+    assert frontier_from_dict(payload) == frontier
+    text = format_frontier(frontier)
+    assert "what-if frontier" in text and "noop" in text
+    # per-job CDFs are sorted and sized to the job count
+    for o in frontier.outcomes:
+        cdf = o.per_job_saved_fraction
+        assert len(cdf) == o.n_jobs
+        assert list(cdf) == sorted(cdf)
+
+
+def test_replay_store_matches_in_memory_replayer():
+    with tempfile.TemporaryDirectory() as d:
+        store = TelemetryStore(d)
+        generate_cluster(n_devices=3, horizon_s=1800, seed=29,
+                         store=store, shard_s=450)
+        streamed = replay_store(store, DownscalePolicy(),
+                                min_job_duration_s=600)
+        mono_cs = generate_cluster(n_devices=3, horizon_s=1800, seed=29)
+        rep = PolicyReplayer(DownscalePolicy(), min_job_duration_s=600)
+        rep.update(mono_cs.frame)
+        mono = rep.finalize()
+    assert [j.job_id for j in streamed.jobs] == [j.job_id for j in mono.jobs]
+    assert streamed.counterfactual.energy_j == mono.counterfactual.energy_j
+    assert streamed.penalty_s == mono.penalty_s
+
+
+def test_default_policy_grid_is_48_configs():
+    grid = default_policy_grid()
+    assert len(grid) == 48
+    assert len({tuple(sorted(p.describe().items())) for p in grid}) == 48
+
+
+def test_replayer_merge_rejects_overlap_and_config_mismatch():
+    cs = generate_cluster(n_devices=2, horizon_s=900, seed=31)
+    a = PolicyReplayer(NoOpPolicy(), min_job_duration_s=0.0)
+    b = PolicyReplayer(NoOpPolicy(), min_job_duration_s=0.0)
+    a.update(cs.frame)
+    b.update(cs.frame)
+    with pytest.raises(ValueError, match="overlapping"):
+        a.merge(b)
+    with pytest.raises(ValueError, match="configs"):
+        a.merge(PolicyReplayer(NoOpPolicy(), min_job_duration_s=123.0))
+    with pytest.raises(ValueError, match="configs"):
+        a.merge(PolicyReplayer(PowerCapPolicy(), min_job_duration_s=0.0))
+
+
+def test_power_cap_penalty_prices_at_replayer_dt():
+    from repro.telemetry.records import TelemetryFrame
+    rows = [{"timestamp": float(2 * t), "job_id": 1, "device_id": 0,
+             "hostname": 0, "program_resident": 1, "sm": 90.0, "power": 380.0,
+             "platform": 0}
+            for t in range(20)]
+    frame = TelemetryFrame.from_rows(rows)
+    rep = PolicyReplayer(PowerCapPolicy(cap_fraction=0.5),
+                         min_job_duration_s=0.0, dt_s=2.0)
+    rep.update(frame)
+    res = rep.finalize()
+    # 2 s samples: both the capped energy and the stall time double
+    assert res.counterfactual.energy_j[DeviceState.ACTIVE] == 20 * 200.0 * 2.0
+    assert res.penalty_s == pytest.approx(
+        2.0 * 20 * ((380.0 / 200.0) ** (1 / 3) - 1.0))
