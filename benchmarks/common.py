@@ -5,6 +5,11 @@ import dataclasses
 import functools
 import time
 
+#: set by ``benchmarks.run --quick`` (CI): benches shrink their corpora and
+#: drop timing targets, keeping only correctness targets — the hot paths run
+#: on every PR without the full-size timing burden.
+QUICK = False
+
 
 @dataclasses.dataclass
 class Row:

@@ -48,7 +48,18 @@ def main() -> None:
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write the result rows as JSON (committed "
                          "baselines, e.g. BENCH_fleet_analyze.json)")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI mode for the throughput benches (fleet, "
+                         "whatif): tiny corpora, timing targets disabled, "
+                         "correctness targets kept. Paper-figure benches "
+                         "ignore it (their targets are paper numbers that "
+                         "only hold at full corpus size) — combine with "
+                         "--only fleet,whatif for a fast CI pass")
     args = ap.parse_args()
+
+    if args.quick:
+        from benchmarks import common
+        common.QUICK = True
 
     from benchmarks.fleet_bench import bench_fleet_analyze
     from benchmarks.paper_benches import ALL_BENCHES

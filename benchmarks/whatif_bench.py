@@ -1,29 +1,66 @@
 """What-if sweep throughput benchmark (counterfactual policy engine).
 
 Generates the 96-group bench corpus (64 devices x 3 h, the fleet_bench
-deployment) straight into a shard store, then sweeps the default 48-config
-policy grid twice — serial and process-pool — and reports configs/s plus
-the bit-identity check between the two.
+deployment) straight into a shard store, then sweeps the legacy 48-config
+policy grid three ways — per-policy reference (serial), config-axis batched
+(serial), batched process-pool — plus the dense 200-config default grid
+through the batched path, and reports configs/s for each alongside the
+bit-identity checks.
 
-Acceptance: the sweep streams shard-by-shard (peak memory ~ one shard),
-``workers=2`` matches ``workers=1`` exactly, and the no-op config anchors
-the frontier at zero saving / zero penalty.
+Acceptance: the sweep streams shard-by-shard (peak memory ~ one shard), the
+batched path is bit-identical to the per-policy reference AND to itself
+under ``workers=2``, the no-op config anchors the frontier at zero saving /
+zero penalty, and ``configs_per_s_batched / configs_per_s_serial >= 5`` on
+the 48-config x 691k-row corpus (the committed baseline row). The dense-grid
+row demonstrates the pass is O(rows + configs): throughput in configs/s
+*rises* with grid size as the per-row work amortizes.
 
 Run:  PYTHONPATH=src python -m benchmarks.run --only whatif \
-          [--json BENCH_whatif_sweep.json]
+          [--json BENCH_whatif_sweep.json] [--quick]
+
+``--quick`` (CI) shrinks the corpus and drops the timing targets; the
+correctness targets (bit-identity, frontier anchoring) still validate.
 """
 from __future__ import annotations
 
+import math
 import tempfile
 import time
 
+from benchmarks import common
 from benchmarks.common import Bench
 
-#: same deployment as fleet_bench, emitted chunked: 96 analyzable groups
+#: same deployment as fleet_bench, emitted chunked: 96 analyzable groups.
+#: One shard per device stream (npy_dir): shard reads cost one open per
+#: column instead of a deflate pass, so the timings measure the replay
+#: engines, not decompression.
 N_DEVICES = 64
 HORIZON_S = 3 * 3600
 SEED = 3
-SHARD_S = 3600
+SHARD_S = HORIZON_S
+
+#: min-of-N timing — container timing noise is multi-second, so single-shot
+#: ratios are unstable; the minimum is the standard de-noised estimate
+REPS_BATCHED = 3
+REPS_SERIAL = 2
+
+#: --quick (CI): tiny store, timing targets disabled. The horizon must
+#: clear the jobs' deep-idle setup phase (~24% of duration) so policies
+#: actually have execution-idle time to mitigate.
+QUICK_N_DEVICES = 8
+QUICK_HORIZON_S = 2700
+QUICK_SHARD_S = 900
+
+
+def _timed(fn, reps):
+    """(min wall seconds over ``reps`` runs, last result)."""
+    best = math.inf
+    result = None
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        result = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best, result
 
 
 def bench_whatif_sweep() -> Bench:
@@ -31,33 +68,60 @@ def bench_whatif_sweep() -> Bench:
     from repro.telemetry import TelemetryStore
     from repro.whatif import default_policy_grid, frontier_to_dict, run_sweep
 
+    quick = common.QUICK
+    n_devices = QUICK_N_DEVICES if quick else N_DEVICES
+    horizon_s = QUICK_HORIZON_S if quick else HORIZON_S
+    shard_s = QUICK_SHARD_S if quick else SHARD_S
+    reps_b = 1 if quick else REPS_BATCHED
+    reps_s = 1 if quick else REPS_SERIAL
+
     b = Bench("whatif_sweep")
-    grid = default_policy_grid()
+    grid = default_policy_grid(dense=False)
+    dense_grid = default_policy_grid()
     with tempfile.TemporaryDirectory() as d:
-        store = TelemetryStore(d)
-        generate_cluster(n_devices=N_DEVICES, horizon_s=HORIZON_S, seed=SEED,
-                         store=store, shard_s=SHARD_S)
+        store = TelemetryStore(d, shard_format="npy_dir")
+        generate_cluster(n_devices=n_devices, horizon_s=horizon_s, seed=SEED,
+                         store=store, shard_s=shard_s)
         rows = store.total_rows
 
-        t0 = time.perf_counter()
-        serial = run_sweep(store, grid, workers=1, min_job_duration_s=0.0)
-        t_serial = time.perf_counter() - t0
-
-        t0 = time.perf_counter()
-        pooled = run_sweep(store, grid, workers=2, min_job_duration_s=0.0)
-        t_pooled = time.perf_counter() - t0
+        t_serial, serial = _timed(
+            lambda: run_sweep(store, grid, workers=1, min_job_duration_s=0.0,
+                              batched=False), reps_s)
+        t_batched, batched = _timed(
+            lambda: run_sweep(store, grid, workers=1, min_job_duration_s=0.0,
+                              batched=True), reps_b)
+        t_pooled, pooled = _timed(
+            lambda: run_sweep(store, grid, workers=2, min_job_duration_s=0.0,
+                              batched=True), 1)
+        t_dense, _ = _timed(
+            lambda: run_sweep(store, dense_grid, workers=1,
+                              min_job_duration_s=0.0, batched=True), reps_b)
 
     n_cfg = len(grid)
     b.add("rows", float(rows))
     b.add("n_configs", float(n_cfg), (48.0, 0.01))
     b.add("n_groups", float(serial.n_jobs))
-    b.add("groups_target_96", float(serial.n_jobs >= 96), (1.0, 0.01))
+    if not quick:
+        b.add("groups_target_96", float(serial.n_jobs >= 96), (1.0, 0.01))
     b.add("configs_per_s_serial", n_cfg / t_serial)
+    b.add("configs_per_s_batched", n_cfg / t_batched)
     b.add("configs_per_s_workers2", n_cfg / t_pooled)
-    b.add("row_configs_per_s_serial", rows * n_cfg / t_serial)
+    b.add("row_configs_per_s_batched", rows * n_cfg / t_batched)
 
-    identical = frontier_to_dict(serial) == frontier_to_dict(pooled)
-    b.add("workers_bit_identical", float(identical), (1.0, 0.01))
+    speedup = t_serial / t_batched
+    b.add("batched_speedup_vs_serial", speedup)
+    b.add("batched_speedup_target_5x", float(speedup >= 5.0),
+          None if quick else (1.0, 0.01))
+
+    b.add("batched_bit_identical",
+          float(frontier_to_dict(batched) == frontier_to_dict(serial)),
+          (1.0, 0.01))
+    b.add("workers_bit_identical",
+          float(frontier_to_dict(pooled) == frontier_to_dict(batched)),
+          (1.0, 0.01))
+
+    b.add("dense_grid_configs", float(len(dense_grid)), (200.0, 0.01))
+    b.add("configs_per_s_batched_dense", len(dense_grid) / t_dense)
 
     noop = next(o for o in serial.outcomes if o.name == "noop")
     anchored = noop.energy_saved_j == 0.0 and noop.penalty_s == 0.0

@@ -2,9 +2,11 @@
 
 1. Simulate a day-scale slice of the academic cluster straight into a
    shard store (nothing fleet-sized is ever materialized).
-2. Replay the stored telemetry under the default 48-config policy grid —
+2. Replay the stored telemetry under the default 200-config policy grid —
    Algorithm-1 downscaling (X x Y x mode), k-of-n consolidation parking,
-   power capping — out-of-core, shard by shard, over a process pool.
+   power capping — out-of-core, shard by shard, over a process pool, with
+   each policy family evaluated as one (configs, samples) batch per
+   stream segment (the config-axis batched replay).
 3. Print the energy/perf trade-off frontier (Pareto set starred) and save
    the JSON report for dashboards.
 

@@ -41,6 +41,20 @@ def _noise(rng, n, scale):
     return rng.normal(0.0, scale, n)
 
 
+def _noise_block(rng, n, scales):
+    """One ``rng.normal`` draw covering several equal-length noise fields.
+
+    ``Generator.normal`` with an array scale consumes the underlying
+    bitstream element by element, exactly like the equivalent sequence of
+    per-field ``normal(0, scale, n)`` calls — so collapsing a phase's
+    per-field draws into one block keeps every seeded output bit-identical
+    (tests/test_telemetry.py) while paying the generator dispatch once per
+    phase instead of once per field.
+    """
+    flat = rng.normal(0.0, np.repeat(scales, n))
+    return [flat[i * n:(i + 1) * n] for i in range(len(scales))]
+
+
 def _phase_signals(rng, phase: jobgen.Phase, plat: PlatformSpec, n: int):
     """Column dict for one phase of n seconds."""
     cols = {f: np.zeros(n) for f in
@@ -51,21 +65,25 @@ def _phase_signals(rng, phase: jobgen.Phase, plat: PlatformSpec, n: int):
         else np.zeros(n)
     if phase.kind == "deep":
         resident[:] = 0
-        cols["power"] = plat.deep_idle_w + _noise(rng, n, 1.0)
-        cols["cpu_util"] = np.clip(5 + _noise(rng, n, 2), 0, 100)
+        power_n, cpu_n = _noise_block(rng, n, (1.0, 2.0))
+        cols["power"] = plat.deep_idle_w + power_n
+        cols["cpu_util"] = np.clip(5 + cpu_n, 0, 100)
     elif phase.kind == "idle":
         cols["sm"] = np.clip(rng.uniform(0, 2.5, n), 0, 4.9)
         cols["dram"] = np.clip(rng.uniform(0, 2.0, n), 0, 4.9)
-        cols["power"] = plat.exec_idle_w + _noise(rng, n, 3.0)
-        cols["cpu_util"] = np.clip(8 + _noise(rng, n, 4), 0, 100)
+        power_n, cpu_n = _noise_block(rng, n, (3.0, 4.0))
+        cols["power"] = plat.exec_idle_w + power_n
+        cols["cpu_util"] = np.clip(8 + cpu_n, 0, 100)
     else:  # active
         util = phase.util
-        cols["sm"] = np.clip(100 * util + _noise(rng, n, 6), 6, 100)
-        cols["tensor"] = np.clip(85 * util + _noise(rng, n, 6), 0, 100)
-        cols["dram"] = np.clip(70 * util + _noise(rng, n, 8), 5.5, 100)
+        sm_n, tensor_n, dram_n, power_n, cpu_n = _noise_block(
+            rng, n, (6.0, 6.0, 8.0, 8.0, 8.0))
+        cols["sm"] = np.clip(100 * util + sm_n, 6, 100)
+        cols["tensor"] = np.clip(85 * util + tensor_n, 0, 100)
+        cols["dram"] = np.clip(70 * util + dram_n, 5.5, 100)
         cols["power"] = np.clip(
-            plat.power_w(util) + _noise(rng, n, 8), plat.exec_idle_w, plat.tdp_w)
-        cols["cpu_util"] = np.clip(30 + _noise(rng, n, 8), 0, 100)
+            plat.power_w(util) + power_n, plat.exec_idle_w, plat.tdp_w)
+        cols["cpu_util"] = np.clip(30 + cpu_n, 0, 100)
         # brief (1-4 s) stalls that the 5 s sustain rule excludes but the
         # permissive 1 s setting counts (Table 2's 19.2% -> 23.8% delta)
         # non-overlapping so adjacent dips can never merge into a >=5 s run

@@ -69,24 +69,31 @@ class EnergyBreakdown:
         return self.energy_j[DeviceState.EXECUTION_IDLE] / e if e else 0.0
 
 
-class StreamingIntegrator:
-    """Boundary-aware ``integrate`` + ``extract_intervals`` over one stream.
+class BatchedStreamingIntegrator:
+    """Boundary-aware energy integration over one stream, with a leading
+    **config axis**: one shared classified-state series, ``n_configs``
+    counterfactual power series integrated in a single pass.
 
-    Feed time-ordered chunks of a single (job, host, device) stream via
-    :meth:`update`; :meth:`finalize` returns the :class:`EnergyBreakdown` and
-    the sustained EXECUTION_IDLE :class:`Interval` list. Results are
-    *bit-identical* for every chunking of the same series, including the
-    monolithic single-chunk case (:func:`integrate` is this class applied
-    once), because:
+    Feed time-ordered chunks via :meth:`update` with ``states [T]`` and
+    ``power_w [n_configs, T]``; :meth:`finalize` returns one
+    :class:`EnergyBreakdown` per config plus the shared sustained
+    EXECUTION_IDLE :class:`Interval` list. Because every config sees the
+    same state series, the run decomposition (the expensive, Python-level
+    part) happens once; each run's energy is one ``np.sum(..., axis=-1)``
+    over the config axis. Results are *bit-identical*, per config, to
+    ``n_configs`` independent :class:`StreamingIntegrator` instances — and
+    to every chunking of the same series — because:
 
     * run decomposition is chunking-invariant (:func:`runs_streaming` carries
       the trailing run across boundaries), so the §2.2 sustain rule sees the
       same maximal runs regardless of where chunks split;
     * each run's energy is ``np.sum`` over the run's full power samples —
       pending samples of an unfinished run are retained until the run closes,
-      so the summation tree only depends on the run itself;
+      so the summation tree only depends on the run itself, and NumPy's
+      pairwise reduction over the (contiguous) last axis applies the same
+      summation tree per row as the 1-D sum of that row;
     * per-state totals accumulate run energies in time order, which is the
-      same sequence of additions under any chunking.
+      same sequence of (elementwise) additions under any chunking.
 
     Retained pending samples are bounded by the longest constant-state run.
     As a safety valve, runs longer than ``max_pending_samples`` collapse their
@@ -94,22 +101,25 @@ class StreamingIntegrator:
     from the monolithic result, in the last ulp).
     """
 
-    def __init__(self, min_duration_s: float | None = 5.0, dt_s: float = 1.0,
-                 max_pending_samples: int = 1 << 22):
+    def __init__(self, n_configs: int = 1, min_duration_s: float | None = 5.0,
+                 dt_s: float = 1.0, max_pending_samples: int = 1 << 22):
+        self.n_configs = n_configs
         self.dt_s = dt_s
         self.min_samples = (0 if min_duration_s is None
                             else int(np.ceil(min_duration_s / dt_s)))
         self.max_pending_samples = max_pending_samples
         self._carry = RunCarry()
-        self._pending: list[np.ndarray] = []   # power of the pending run
+        self._pending: list[np.ndarray] = []   # [C, k] power of the pending run
         self._pending_n = 0
-        self._collapsed = 0.0                  # prefix sum of an over-long run
+        self._collapsed = np.zeros(n_configs)  # prefix sum of an over-long run
         self._time: dict[DeviceState, int] = {s: 0 for s in DeviceState}
-        self._energy: dict[DeviceState, float] = {s: 0.0 for s in DeviceState}
+        self._energy: dict[DeviceState, np.ndarray] = {
+            s: np.zeros(n_configs) for s in DeviceState}
         self._intervals: list[Interval] = []
         self.n_samples = 0
 
-    def _close_run(self, state: int, start: int, end: int, energy: float) -> None:
+    def _close_run(self, state: int, start: int, end: int,
+                   energy: np.ndarray) -> None:
         n = end - start
         final = DeviceState(state)
         if state == int(DeviceState.EXECUTION_IDLE):
@@ -121,57 +131,107 @@ class StreamingIntegrator:
         self._time[final] += n
         self._energy[final] += energy
 
-    def _pending_energy(self, extra: np.ndarray | None) -> float:
-        pieces = self._pending + ([extra] if extra is not None and extra.size else [])
+    def _pending_energy(self, extra: np.ndarray | None) -> np.ndarray:
+        pieces = self._pending + (
+            [extra] if extra is not None and extra.shape[-1] else [])
         if not pieces:
             arr_sum = 0.0
         elif len(pieces) == 1:
-            arr_sum = float(np.sum(pieces[0]))
+            arr_sum = np.sum(pieces[0], axis=-1)
         else:
-            arr_sum = float(np.sum(np.concatenate(pieces)))
+            arr_sum = np.sum(np.concatenate(pieces, axis=-1), axis=-1)
         e = self._collapsed + arr_sum
         self._pending = []
         self._pending_n = 0
-        self._collapsed = 0.0
+        self._collapsed = np.zeros(self.n_configs)
         return e
 
     def update(self, states: np.ndarray, power_w: np.ndarray) -> None:
         states = np.asarray(states)
         power_w = np.asarray(power_w, dtype=np.float64)
-        if states.shape != power_w.shape:
-            raise ValueError(f"states {states.shape} vs power {power_w.shape}")
+        if power_w.ndim == 1:
+            power_w = power_w[None, :]
+        if power_w.shape != (self.n_configs, states.shape[0]):
+            raise ValueError(
+                f"power {power_w.shape} vs expected "
+                f"({self.n_configs}, {states.shape[0]})")
         if states.size == 0:
             return
         offset = self.n_samples
         completed, carry = runs_streaming(states, self._carry, offset)
         for state, start, end in completed:
             if start < offset:          # run includes carried-in samples
-                energy = self._pending_energy(power_w[:max(end - offset, 0)])
+                energy = self._pending_energy(
+                    power_w[:, :max(end - offset, 0)])
             else:
-                energy = float(np.sum(power_w[start - offset:end - offset]))
+                # .sum() is np.sum minus the dispatch wrapper — same ufunc
+                # reduction bit for bit, and this is the hot loop (one call
+                # per maximal run per stream)
+                energy = power_w[:, start - offset:end - offset].sum(axis=-1)
             self._close_run(state, start, end, energy)
         self._carry = carry
         if carry.length:
             # copy (not view) so chunk buffers can be released
-            piece = np.array(power_w[max(carry.start - offset, 0):])
-            if piece.size:
+            piece = np.array(power_w[:, max(carry.start - offset, 0):])
+            if piece.shape[-1]:
                 self._pending.append(piece)
-                self._pending_n += piece.size
-            if self._pending_n > self.max_pending_samples:
-                self._collapsed += float(np.sum(np.concatenate(self._pending)))
+                self._pending_n += piece.shape[-1]
+            # valve on retained ELEMENTS (samples x configs): a [C, k]
+            # pending block costs C times the scalar design's memory, so a
+            # wide config axis must trip the collapse proportionally earlier
+            if self._pending_n * self.n_configs > self.max_pending_samples:
+                self._collapsed += np.sum(
+                    np.concatenate(self._pending, axis=-1), axis=-1)
                 self._pending = []
                 self._pending_n = 0
         self.n_samples += states.size
 
-    def finalize(self) -> tuple[EnergyBreakdown, list[Interval]]:
+    def finalize_batch(self) -> tuple[list[EnergyBreakdown], list[Interval]]:
+        """Flush carried state; one :class:`EnergyBreakdown` per config."""
         if self._carry.length:
             energy = self._pending_energy(None)
             self._close_run(self._carry.state, self._carry.start,
                             self._carry.start + self._carry.length, energy)
             self._carry = RunCarry()
-        time_s = {s: float(self._time[s] * self.dt_s) for s in DeviceState}
-        energy_j = {s: float(self._energy[s] * self.dt_s) for s in DeviceState}
-        return EnergyBreakdown(time_s=time_s, energy_j=energy_j), self._intervals
+        breakdowns = [
+            EnergyBreakdown(
+                time_s={s: float(self._time[s] * self.dt_s)
+                        for s in DeviceState},
+                energy_j={s: float(self._energy[s][c] * self.dt_s)
+                          for s in DeviceState},
+            )
+            for c in range(self.n_configs)
+        ]
+        return breakdowns, self._intervals
+
+
+class StreamingIntegrator(BatchedStreamingIntegrator):
+    """Boundary-aware ``integrate`` + ``extract_intervals`` over one stream.
+
+    The single-config view of :class:`BatchedStreamingIntegrator` (which see
+    for the bit-identity contract): feed time-ordered chunks of a single
+    (job, host, device) stream via :meth:`update` with 1-D ``power_w``;
+    :meth:`finalize` returns the :class:`EnergyBreakdown` and the sustained
+    EXECUTION_IDLE :class:`Interval` list. Results are *bit-identical* for
+    every chunking of the same series, including the monolithic single-chunk
+    case (:func:`integrate` is this class applied once).
+    """
+
+    def __init__(self, min_duration_s: float | None = 5.0, dt_s: float = 1.0,
+                 max_pending_samples: int = 1 << 22):
+        super().__init__(n_configs=1, min_duration_s=min_duration_s,
+                         dt_s=dt_s, max_pending_samples=max_pending_samples)
+
+    def update(self, states: np.ndarray, power_w: np.ndarray) -> None:
+        states = np.asarray(states)
+        power_w = np.asarray(power_w, dtype=np.float64)
+        if states.shape != power_w.shape:
+            raise ValueError(f"states {states.shape} vs power {power_w.shape}")
+        super().update(states, power_w)
+
+    def finalize(self) -> tuple[EnergyBreakdown, list[Interval]]:
+        breakdowns, intervals = self.finalize_batch()
+        return breakdowns[0], intervals
 
 
 def integrate(

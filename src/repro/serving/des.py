@@ -67,8 +67,20 @@ def simulate_pool(
     controller_cfg: ControllerConfig | None = None,
     tick_s: float = 0.1,
     downscale_inactive: bool = False,
+    store=None,
+    host: str = "host0",
+    drain_every_s: float = 3600.0,
 ) -> PoolResult:
-    """Replay ``trace`` on a device pool. Requests must be sorted by arrival."""
+    """Replay ``trace`` on a device pool. Requests must be sorted by arrival.
+
+    With ``store`` (a :class:`~repro.telemetry.storage.TelemetryStore`) the
+    accumulated 1 Hz rows spill into a shard every ``drain_every_s`` of
+    simulated time (plus once at the end), so day-scale replays never
+    materialize the full telemetry frame; ``PoolResult.telemetry`` is then
+    empty — stream the store through ``analyze_store`` / ``run_sweep``
+    instead. Each spill covers a contiguous time window over all devices, so
+    shards arrive in the per-stream time order the streaming readers require.
+    """
     n = pool.n_devices
     devices = [DeviceSim(device=SimulatedDevice(platform, switch_latency_s=0.4))
                for _ in range(n)]
@@ -185,7 +197,16 @@ def simulate_pool(
                                    "pcie_rx": 0.0}
                 dev.busy_acc = 0.0
                 dev.util_acc = 0.0
+            if store is not None and sec % max(int(drain_every_s), 1) == 0:
+                store.append(TelemetryFrame.from_rows(rows), host=host,
+                             flush_manifest=False)
+                rows.clear()
 
+    if store is not None:
+        store.append(TelemetryFrame.from_rows(rows), host=host,
+                     flush_manifest=False)
+        store.save_manifest()
+        rows.clear()
     frame = TelemetryFrame.from_rows(rows)
     in_exec_s = exec_idle_s + active_s
     in_exec_j = exec_idle_j + active_j

@@ -68,6 +68,7 @@ class RuntimeSampler:
         self._sec_start = self._now
         self._accum = _PhaseAccum()
         self._rows: list[dict[str, object]] = []
+        self._last: dict[str, object] | None = None
         self.resident = False
 
     # ------------------------------------------------------------------ #
@@ -107,6 +108,7 @@ class RuntimeSampler:
             "mem_clk": self.device.platform.mem_clk_mhz[int(self.device.clocks()[1])],
         }
         self._rows.append(row)
+        self._last = row
         self._accum = _PhaseAccum()
         self._sec_start += 1.0
 
@@ -165,9 +167,11 @@ class RuntimeSampler:
         """Most recent emitted Table-1 row, or None before the first flush.
 
         O(1) — controllers polling every tick must not rebuild the whole
-        frame just to read the newest sample.
+        frame just to read the newest sample. Survives :meth:`drain`, so a
+        periodically drained engine's controller keeps seeing its last
+        sample.
         """
-        return dict(self._rows[-1]) if self._rows else None
+        return dict(self._last) if self._last is not None else None
 
     def frame(self) -> TelemetryFrame:
         return TelemetryFrame.from_rows(self._rows)
@@ -176,3 +180,17 @@ class RuntimeSampler:
         frame = self.frame()
         self._rows = []
         return frame
+
+    def drain_to(self, store, host: str = "host0",
+                 flush_manifest: bool = True) -> int:
+        """Drain buffered rows into a :class:`TelemetryStore` shard.
+
+        The out-of-core producer hookup: long replays call this periodically
+        so telemetry goes straight to storage shards (in time order, ready
+        for the streaming analysis/what-if paths) instead of accumulating
+        the whole run in memory. Returns the number of rows drained; an
+        empty buffer appends nothing.
+        """
+        n = len(self._rows)
+        store.append(self.drain(), host=host, flush_manifest=flush_manifest)
+        return n

@@ -86,6 +86,20 @@ class TelemetryStore:
             self.save_manifest()
         return path
 
+    def append(self, frame: TelemetryFrame, host: str = "host0",
+               flush_manifest: bool = True) -> pathlib.Path | None:
+        """Append a frame as one shard, deriving the day label from its first
+        timestamp — the drain target for live producers
+        (:meth:`repro.telemetry.sampler.RuntimeSampler.drain_to`, the DES's
+        periodic spill): each drain appends in time order, which is exactly
+        the per-stream ordering the streaming readers require. Empty frames
+        are dropped (a no-op drain must not create empty shards)."""
+        if len(frame) == 0:
+            return None
+        day = int(frame["timestamp"][0]) // 86400
+        return self.write_shard(frame, host=host, day=day,
+                                flush_manifest=flush_manifest)
+
     def read_shard(self, name: str, mmap: bool = False) -> TelemetryFrame:
         """Read one shard by manifest name.
 

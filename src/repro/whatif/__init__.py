@@ -9,17 +9,28 @@ trade-off :class:`~repro.whatif.sweep.Frontier`. Turns the repro from
 "measure execution-idle" into "choose a mitigation".
 """
 from repro.whatif.policies import (  # noqa: F401
+    BatchDownscaleCarry,
+    BatchEffect,
+    DownscaleBatch,
     DownscaleCarry,
     DownscalePolicy,
+    FallbackBatch,
+    NoOpBatch,
     NoOpPolicy,
+    ParkingBatch,
     ParkingPolicy,
     Policy,
+    PolicyBatch,
+    PowerCapBatch,
     PowerCapPolicy,
     SegmentEffect,
+    batched_downscale_decisions,
     downscale_decisions,
     low_activity_series,
+    make_batches,
 )
 from repro.whatif.replay import (  # noqa: F401
+    BatchedPolicyReplayer,
     JobReplay,
     PolicyReplayer,
     ReplayResult,

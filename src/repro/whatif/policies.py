@@ -25,7 +25,7 @@ The policy set mirrors the paper's mitigation space:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Protocol, runtime_checkable
+from typing import Any, Protocol, Sequence, runtime_checkable
 
 import numpy as np
 
@@ -410,3 +410,399 @@ class PowerCapPolicy:
 
     def event_penalty_s(self, plat: PlatformSpec) -> float:
         return 0.0
+
+
+# --------------------------------------------------------------------------- #
+# Family-batched evaluators (config-axis replay)
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass
+class BatchEffect:
+    """One family batch's counterfactual for one segment, row-compressed.
+
+    ``row_of[c]`` maps member config ``c`` to a row of ``power_rows`` /
+    ``throttled_rows`` (and ``resident_rows`` when present); ``-1`` means the
+    config leaves this stream untouched (counterfactual == recorded series,
+    so the replayer aliases it to the shared baseline integration). Distinct
+    configs may share a row — every parking config that parks a device
+    produces the *same* counterfactual series — so integration cost scales
+    with distinct rows, not grid size.
+    """
+
+    #: counterfactual board power rows (W), [R, n]
+    power_rows: np.ndarray
+    #: samples each row's policy affected, [R, n]
+    throttled_rows: np.ndarray
+    #: config -> row index, or -1 for identity (cf == recorded), [C]
+    row_of: np.ndarray
+    #: counterfactual residency rows, or None when unchanged for every row
+    resident_rows: np.ndarray | None
+    #: per-config penalty partial-sums (fsum'd at finalize), [C]
+    penalty_partial_s: np.ndarray
+    #: per-config event counts priced at finalize, [C]
+    wake_events: np.ndarray
+    downscale_events: np.ndarray
+
+
+@runtime_checkable
+class PolicyBatch(Protocol):
+    """A family of policy configs evaluated in one pass per segment.
+
+    The config-axis analogue of :class:`Policy`: ``apply_batch`` consumes the
+    same time-ordered segments, carries one (vectorized) state across segment
+    boundaries for the whole family, and must be **bit-identical**, per
+    member config, to that config's scalar :meth:`Policy.apply` replay.
+    """
+
+    @property
+    def policies(self) -> tuple[Policy, ...]: ...
+    def init_carry(self) -> Any: ...
+    def apply_batch(self, seg: TelemetryFrame, plat: PlatformSpec, carry: Any,
+                    dt_s: float = 1.0) -> tuple[BatchEffect, Any]: ...
+
+
+def _identity_effect(n: int, n_configs: int) -> BatchEffect:
+    return BatchEffect(
+        power_rows=np.empty((0, n)),
+        throttled_rows=np.empty((0, n), dtype=bool),
+        row_of=np.full(n_configs, -1, dtype=np.int64),
+        resident_rows=None,
+        penalty_partial_s=np.zeros(n_configs),
+        wake_events=np.zeros(n_configs, dtype=np.int64),
+        downscale_events=np.zeros(n_configs, dtype=np.int64),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class NoOpBatch:
+    """All members are the recorded fleet: every config aliases baseline."""
+
+    policies: tuple[NoOpPolicy, ...]
+
+    def init_carry(self) -> None:
+        return None
+
+    def apply_batch(self, seg: TelemetryFrame, plat: PlatformSpec, carry: None,
+                    dt_s: float = 1.0) -> tuple[BatchEffect, None]:
+        return _identity_effect(len(seg), len(self.policies)), None
+
+
+@dataclasses.dataclass
+class BatchDownscaleCarry:
+    """Per-config controller state, carried across segment boundaries.
+
+    The vector form of :class:`DownscaleCarry`: element ``c`` of each array
+    is exactly what the scalar carry would hold after the same samples.
+    """
+
+    c: np.ndarray            # [C] consecutive low-activity accumulators
+    t_cooldown: np.ndarray   # [C]
+    downscaled: np.ndarray   # [C] bool
+
+
+def batched_downscale_decisions(
+    ts: np.ndarray,
+    low: np.ndarray,
+    eps: np.ndarray,
+    x: np.ndarray,
+    y: np.ndarray,
+    carry: BatchDownscaleCarry,
+) -> tuple[np.ndarray, BatchDownscaleCarry, np.ndarray, np.ndarray]:
+    """Config-axis Algorithm-1 decision sequences over one segment.
+
+    The same low/busy-run loop as :func:`downscale_decisions`, advanced for
+    every config of the family per run with vector ops over the config axis —
+    O(runs) Python for the *whole grid* instead of per config. Bit-identical
+    per config: the in-run accumulator is the same strict left-fold
+    (``np.add.accumulate`` along the sample axis is sequential per row), the
+    trigger index the same max of first ``c > X`` and first ``t >=
+    t_cooldown`` sample, and the restore/cooldown updates the same elementwise
+    float ops the scalar recurrence performs.
+
+    Returns ``(downscaled_after_step [C, n], carry_out, n_downscales [C],
+    n_restores [C])``.
+    """
+    low = np.asarray(low, dtype=bool)
+    ts = np.asarray(ts, dtype=np.float64)
+    n = low.shape[0]
+    n_cfg = eps.shape[0]
+    out = np.zeros((n_cfg, n), dtype=bool)
+    n_down = np.zeros(n_cfg, dtype=np.int64)
+    n_rest = np.zeros(n_cfg, dtype=np.int64)
+    if n == 0:
+        return out, carry, n_down, n_rest
+    c = carry.c.copy()
+    t_cd = carry.t_cooldown.copy()
+    ds = carry.downscaled.copy()
+
+    change = np.flatnonzero(np.diff(low)) + 1
+    starts = np.concatenate([[0], change])
+    ends = np.concatenate([change, [n]])
+
+    for s, e in zip(starts, ends):
+        if not low[s]:
+            # activity: c resets; configs that were downscaled restore (and
+            # start their cooldown clock) at the run's first step
+            n_rest += ds
+            t_cd[ds] = float(ts[s]) + y[ds]
+            ds[:] = False
+            c[:] = 0.0
+        else:
+            m = e - s
+            # already-downscaled configs stay downscaled for the whole run
+            # (their c is unobservable until the next activity resets it)
+            out[ds, s:e] = True
+            idle = np.flatnonzero(~ds)
+            if idle.size:
+                buf = np.empty((idle.size, m + 1))
+                buf[:, 0] = c[idle]
+                buf[:, 1:] = eps[idle, None]
+                cs = np.add.accumulate(buf, axis=1)[:, 1:]  # left-fold per row
+                trig = cs[:, -1] > x[idle]                  # strictly increasing
+                if np.any(trig):
+                    i_c = np.argmax(cs > x[idle, None], axis=1)
+                    i_t = np.searchsorted(ts[s:e], t_cd[idle], side="left")
+                    i = np.maximum(i_c, i_t)
+                    fire = trig & (i < m)
+                    rows = idle[fire]
+                    if rows.size:
+                        out[rows, s:e] = np.arange(m) >= i[fire][:, None]
+                        ds[rows] = True
+                        n_down[rows] += 1
+                c[idle] = cs[:, -1]
+    return out, BatchDownscaleCarry(c=c, t_cooldown=t_cd, downscaled=ds), \
+        n_down, n_rest
+
+
+@dataclasses.dataclass(frozen=True)
+class DownscaleBatch:
+    """Every downscale config sharing one low-activity series, one pass.
+
+    Members must agree on ``(activity_threshold, comm_threshold_gbs)`` (the
+    low-series key — enforced by :func:`make_batches`); X, Y, eps and the
+    clock mode vary freely along the config axis.
+    """
+
+    policies: tuple[DownscalePolicy, ...]
+
+    def __post_init__(self) -> None:
+        pols = self.policies
+        object.__setattr__(self, "_eps",
+                           np.array([p.config.interval_eps_s for p in pols]))
+        object.__setattr__(self, "_x",
+                           np.array([p.config.threshold_x_s for p in pols]))
+        object.__setattr__(self, "_y",
+                           np.array([p.config.cooldown_y_s for p in pols]))
+        object.__setattr__(self, "_delta_cache", {})
+
+    def init_carry(self) -> BatchDownscaleCarry:
+        n_cfg = len(self.policies)
+        return BatchDownscaleCarry(
+            c=np.zeros(n_cfg),
+            t_cooldown=np.zeros(n_cfg),
+            downscaled=np.zeros(n_cfg, dtype=bool),
+        )
+
+    def _delta(self, plat: PlatformSpec) -> np.ndarray:
+        delta = self._delta_cache.get(plat.name)
+        if delta is None:
+            delta = self._delta_cache[plat.name] = np.array([
+                plat.exec_idle_w - plat.residency_floor_w(*p._min_clocks())
+                for p in self.policies])
+        return delta
+
+    def apply_batch(self, seg: TelemetryFrame, plat: PlatformSpec,
+                    carry: BatchDownscaleCarry,
+                    dt_s: float = 1.0) -> tuple[BatchEffect, BatchDownscaleCarry]:
+        pols = self.policies
+        low = low_activity_series(seg, pols[0].config)
+        decisions, carry, n_down, n_rest = batched_downscale_decisions(
+            seg["timestamp"], low, self._eps, self._x, self._y, carry)
+        delta = self._delta(plat)
+        resident = seg["program_resident"].astype(bool)
+        throttled = decisions & resident[None, :]
+        power = np.asarray(seg["power"], dtype=np.float64)
+        cf = np.where(throttled,
+                      np.maximum(power[None, :] - delta[:, None],
+                                 plat.deep_idle_w),
+                      power[None, :])
+        n_cfg = len(pols)
+        return BatchEffect(
+            power_rows=cf,
+            throttled_rows=throttled,
+            row_of=np.arange(n_cfg, dtype=np.int64),
+            resident_rows=None,
+            penalty_partial_s=np.zeros(n_cfg),
+            wake_events=n_rest,
+            downscale_events=n_down,
+        ), carry
+
+
+@dataclasses.dataclass(frozen=True)
+class ParkingBatch:
+    """Every parking config, one pass: a device stream is either parked or
+    untouched, and *all* parked configs share one counterfactual row — the
+    parked power/residency series is independent of the pool shape and the
+    resume latency (which only prices the shared wake count at finalize).
+    Members must agree on the low-series thresholds (:func:`make_batches`).
+    """
+
+    policies: tuple[ParkingPolicy, ...]
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "_pools", tuple(
+            (p.pool.n_devices, frozenset(p.pool.active_set()))
+            for p in self.policies))
+
+    def init_carry(self) -> ParkCarry:
+        return ParkCarry()
+
+    def apply_batch(self, seg: TelemetryFrame, plat: PlatformSpec,
+                    carry: ParkCarry,
+                    dt_s: float = 1.0) -> tuple[BatchEffect, ParkCarry]:
+        n = len(seg)
+        n_cfg = len(self.policies)
+        dev = int(seg["device_id"][0])
+        parked = np.array([dev % nd not in act for nd, act in self._pools],
+                          dtype=bool)
+        if not parked.any():
+            return _identity_effect(n, n_cfg), carry
+        low = low_activity_series(seg, self.policies[0].config)
+        resident = seg["program_resident"].astype(bool)
+        idle = resident & low
+        active = resident & ~low
+        prev_idle = np.empty(n, dtype=bool)
+        prev_idle[0] = carry.prev_idle
+        prev_idle[1:] = idle[:-1]
+        wakes = int(np.sum(active & prev_idle))
+        power = np.asarray(seg["power"], dtype=np.float64)
+        return BatchEffect(
+            power_rows=np.where(idle, plat.deep_idle_w, power)[None, :],
+            throttled_rows=idle[None, :],
+            row_of=np.where(parked, 0, -1).astype(np.int64),
+            resident_rows=(resident & ~idle)[None, :],
+            penalty_partial_s=np.zeros(n_cfg),
+            wake_events=np.where(parked, wakes, 0).astype(np.int64),
+            downscale_events=np.zeros(n_cfg, dtype=np.int64),
+        ), ParkCarry(prev_idle=bool(idle[-1]))
+
+
+@dataclasses.dataclass(frozen=True)
+class PowerCapBatch:
+    """Every cap fraction in one pass: the [C, n] capped power grid is two
+    broadcast ops; the per-config cube-law penalty gathers the shared
+    active-sample power once and masks it per cap (the one O(configs) loop,
+    kept scalar so each config's ``np.sum`` reduces exactly the array the
+    scalar policy reduces). Members must agree on the low-series thresholds.
+    """
+
+    policies: tuple[PowerCapPolicy, ...]
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "_fracs", np.array(
+            [p.cap_fraction for p in self.policies]))
+
+    def init_carry(self) -> None:
+        return None
+
+    def apply_batch(self, seg: TelemetryFrame, plat: PlatformSpec, carry: None,
+                    dt_s: float = 1.0) -> tuple[BatchEffect, None]:
+        pols = self.policies
+        n_cfg = len(pols)
+        power = np.asarray(seg["power"], dtype=np.float64)
+        cap_w = self._fracs * plat.tdp_w
+        over = power[None, :] > cap_w[:, None]
+        cf = np.minimum(power[None, :], cap_w[:, None])
+        low = low_activity_series(seg, pols[0].config)
+        resident = seg["program_resident"].astype(bool)
+        pw_active = power[resident & ~low]
+        penalty = np.empty(n_cfg)
+        for i in range(n_cfg):
+            slow = np.cbrt(pw_active[pw_active > cap_w[i]] / cap_w[i]) - 1.0
+            penalty[i] = dt_s * float(np.sum(slow))
+        return BatchEffect(
+            power_rows=cf,
+            throttled_rows=over,
+            row_of=np.arange(n_cfg, dtype=np.int64),
+            resident_rows=None,
+            penalty_partial_s=penalty,
+            wake_events=np.zeros(n_cfg, dtype=np.int64),
+            downscale_events=np.zeros(n_cfg, dtype=np.int64),
+        ), None
+
+
+@dataclasses.dataclass(frozen=True)
+class FallbackBatch:
+    """Config axis of one: any :class:`Policy` implementation, replayed via
+    its own scalar ``apply``. Keeps the batched replayer total over arbitrary
+    grids — unknown policy types lose the sharing, not correctness.
+    """
+
+    policies: tuple[Policy, ...]     # always length 1
+
+    def init_carry(self) -> Any:
+        return self.policies[0].init_carry()
+
+    def apply_batch(self, seg: TelemetryFrame, plat: PlatformSpec, carry: Any,
+                    dt_s: float = 1.0) -> tuple[BatchEffect, Any]:
+        effect, carry = self.policies[0].apply(seg, plat, carry, dt_s=dt_s)
+        # always report a residency row (recorded residency when the policy
+        # leaves it unchanged): a custom policy may alternate between None
+        # and an override across segments, and the replayer requires a
+        # stream-stable row structure. Classifying the recorded residency
+        # reproduces the baseline states exactly, so this costs one extra
+        # classification, never correctness.
+        resident = (seg["program_resident"].astype(bool)
+                    if effect.resident is None else effect.resident)
+        return BatchEffect(
+            power_rows=np.asarray(effect.power_w, dtype=np.float64)[None, :],
+            throttled_rows=np.asarray(effect.throttled, dtype=bool)[None, :],
+            row_of=np.zeros(1, dtype=np.int64),
+            resident_rows=np.asarray(resident, dtype=bool)[None, :],
+            penalty_partial_s=np.array([effect.penalty_partial_s]),
+            wake_events=np.array([effect.wake_events], dtype=np.int64),
+            downscale_events=np.array([effect.downscale_events],
+                                      dtype=np.int64),
+        ), carry
+
+
+def _batch_key(policy: Policy, index: int) -> tuple:
+    """Family grouping key: policies sharing a key batch together. Downscale /
+    parking / powercap group by their low-activity thresholds (the shared
+    per-segment precompute); anything else stays a singleton."""
+    if isinstance(policy, DownscalePolicy):
+        cfg = policy.config
+        return ("downscale", cfg.activity_threshold, cfg.comm_threshold_gbs)
+    if isinstance(policy, ParkingPolicy):
+        cfg = policy.config
+        return ("parking", cfg.activity_threshold, cfg.comm_threshold_gbs)
+    if isinstance(policy, PowerCapPolicy):
+        cfg = policy.config
+        return ("powercap", cfg.activity_threshold, cfg.comm_threshold_gbs)
+    if isinstance(policy, NoOpPolicy):
+        return ("noop",)
+    return ("other", index)
+
+
+_BATCH_TYPES = {"downscale": DownscaleBatch, "parking": ParkingBatch,
+                "powercap": PowerCapBatch, "noop": NoOpBatch,
+                "other": FallbackBatch}
+
+
+def make_batches(
+    policies: Sequence[Policy],
+) -> list[tuple[PolicyBatch, list[int]]]:
+    """Group a policy grid into family batches for the config-axis replay.
+
+    Returns ``(batch, grid_indices)`` pairs in first-occurrence order;
+    ``grid_indices`` maps each batch member back to its position in the
+    input grid (order-preserving within a batch), so sweep results can be
+    reassembled in grid order.
+    """
+    grouped: dict[tuple, list[int]] = {}
+    for i, p in enumerate(policies):
+        grouped.setdefault(_batch_key(p, i), []).append(i)
+    out: list[tuple[PolicyBatch, list[int]]] = []
+    for key, idxs in grouped.items():
+        batch_cls = _BATCH_TYPES[key[0]]
+        out.append((batch_cls(tuple(policies[i] for i in idxs)), idxs))
+    return out

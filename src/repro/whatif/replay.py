@@ -1,4 +1,4 @@
-"""Streaming counterfactual replay of one policy over stored telemetry.
+"""Streaming counterfactual replay of policies over stored telemetry.
 
 :class:`PolicyReplayer` is the what-if analogue of
 :class:`repro.telemetry.pipeline.FleetAccumulator`: feed time-ordered chunks
@@ -10,6 +10,12 @@ re-integrates both the recorded and the counterfactual series through
 :class:`repro.core.energy.StreamingIntegrator` — so baseline and
 counterfactual energy are **bit-identical under any chunking**, and peak
 memory stays bounded by one chunk.
+
+:class:`BatchedPolicyReplayer` replays a whole policy *grid* the same way
+but along a config axis: one shared classification / run-length encoding /
+baseline integration per stream segment, each policy family evaluated as a
+``(n_configs, n_samples)`` block. It is the sweep's fast path and is
+verified bit-identical to per-config :class:`PolicyReplayer` replays.
 
 Penalties: event-priced penalties (downscale restores, parking wakes) are
 integer counts priced once at finalize, so they are chunking-invariant too.
@@ -23,16 +29,17 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import TYPE_CHECKING, Any, Iterable, Mapping
+from typing import TYPE_CHECKING, Any, Iterable, Mapping, Sequence
 
 import numpy as np
 
-from repro.core.energy import EnergyBreakdown, StreamingIntegrator, merge
+from repro.core.energy import (BatchedStreamingIntegrator, EnergyBreakdown,
+                               StreamingIntegrator, merge)
 from repro.core.power_model import PlatformSpec, get_platform
 from repro.core.states import (ClassifierConfig, DEFAULT_CLASSIFIER,
                                DeviceState, classify_series)
 from repro.telemetry.records import TelemetryFrame
-from repro.whatif.policies import Policy
+from repro.whatif.policies import Policy, PolicyBatch, make_batches
 
 if TYPE_CHECKING:
     from repro.telemetry.storage import TelemetryStore
@@ -41,6 +48,24 @@ if TYPE_CHECKING:
 def _default_platform_ids() -> dict[int, str]:
     from repro.cluster.simulator import PLATFORM_IDS
     return {i: name for name, i in PLATFORM_IDS.items()}
+
+
+def _resolve_platform(
+    platform_of: str | Mapping[int, str] | None,
+    cache: dict[int, PlatformSpec],
+    platform_id: int,
+) -> PlatformSpec:
+    """Shared ``platform`` column resolution (see :class:`PolicyReplayer`)."""
+    plat = cache.get(platform_id)
+    if plat is None:
+        if isinstance(platform_of, str):
+            plat = get_platform(platform_of)
+        else:
+            table = (platform_of if platform_of is not None
+                     else _default_platform_ids())
+            plat = get_platform(table[platform_id])
+        cache[platform_id] = plat
+    return plat
 
 
 @dataclasses.dataclass
@@ -154,16 +179,8 @@ class PolicyReplayer:
         self.n_rows = 0
 
     def _platform(self, platform_id: int) -> PlatformSpec:
-        plat = self._plat_cache.get(platform_id)
-        if plat is None:
-            if isinstance(self.platform_of, str):
-                plat = get_platform(self.platform_of)
-            else:
-                table = (self.platform_of if self.platform_of is not None
-                         else _default_platform_ids())
-                plat = get_platform(table[platform_id])
-            self._plat_cache[platform_id] = plat
-        return plat
+        return _resolve_platform(self.platform_of, self._plat_cache,
+                                 platform_id)
 
     # ------------------------------------------------------------------ #
     def update(self, chunk: TelemetryFrame) -> None:
@@ -289,6 +306,263 @@ class PolicyReplayer:
             throttled_time_s=float(throttled_total * self.dt_s),
             n_rows=n_rows,
         )
+
+
+# --------------------------------------------------------------------------- #
+# Config-axis batched replay
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass
+class _BatchState:
+    """Per-(stream, batch) partial replay state carried across chunks.
+
+    ``row_of`` (config -> counterfactual row, -1 = identity) is fixed by the
+    stream's first segment and must stay stable — it only depends on
+    stream-constant inputs (device id, thresholds), which is validated on
+    every subsequent segment.
+    """
+
+    carry: Any
+    row_of: np.ndarray | None = None
+    cf: BatchedStreamingIntegrator | None = None       # rows on baseline states
+    cf_rows: list[StreamingIntegrator] | None = None   # rows with own residency
+    penalty_partials: list[np.ndarray] = dataclasses.field(default_factory=list)
+    wake_events: np.ndarray | None = None              # [C_b] int
+    downscale_events: np.ndarray | None = None         # [C_b] int
+    throttled_counts: np.ndarray | None = None         # [R] int, per row
+
+
+@dataclasses.dataclass
+class _BatchedGroup:
+    """Per-(job, host, device) partial state for the whole grid: ONE baseline
+    integration shared by every config, plus one :class:`_BatchState` per
+    family batch."""
+
+    base: StreamingIntegrator
+    batch_states: list[_BatchState]
+    platform_id: int
+    n_rows: int = 0
+    ts_first: float = math.inf
+    ts_last: float = -math.inf
+
+
+class BatchedPolicyReplayer:
+    """Replay an entire policy grid in one pass per stream segment.
+
+    The config-axis counterpart of running one :class:`PolicyReplayer` per
+    grid point: the grid is grouped into family batches
+    (:func:`repro.whatif.policies.make_batches`), and each stream segment is
+    processed once — one lexsort grouping (in :meth:`update`), one baseline
+    classification, one idle run-length encoding / low-activity series (the
+    segment-level cache in :func:`~repro.whatif.policies.low_activity_series`),
+    and one baseline power integration — with every family evaluated as a
+    ``(n_configs, n_samples)`` block. Per-config carry state crosses chunk
+    boundaries exactly as the scalar replayers' does, so results are
+    **bit-identical** to the per-policy reference path for any chunking and
+    any process-pool width (tests/test_whatif_batched.py).
+
+    ``finalize`` returns one :class:`ReplayResult` per policy, in grid order.
+    """
+
+    def __init__(
+        self,
+        policies: Sequence[Policy],
+        platform_of: str | Mapping[int, str] | None = None,
+        min_job_duration_s: float = 2 * 3600.0,
+        min_interval_s: float = 5.0,
+        classifier: ClassifierConfig = DEFAULT_CLASSIFIER,
+        dt_s: float = 1.0,
+    ):
+        self.policies = list(policies)
+        self.platform_of = platform_of
+        self.min_job_duration_s = min_job_duration_s
+        self.min_interval_s = min_interval_s
+        self.classifier = classifier
+        self.dt_s = dt_s
+        self._batches: list[tuple[PolicyBatch, list[int]]] = make_batches(
+            self.policies)
+        self._groups: dict[tuple[int, int, int], _BatchedGroup] = {}
+        self._plat_cache: dict[int, PlatformSpec] = {}
+        self.n_rows = 0
+
+    def _platform(self, platform_id: int) -> PlatformSpec:
+        return _resolve_platform(self.platform_of, self._plat_cache,
+                                 platform_id)
+
+    # ------------------------------------------------------------------ #
+    def update(self, chunk: TelemetryFrame) -> None:
+        """Fold one chunk of telemetry into the running grid replay."""
+        if len(chunk) == 0:
+            return
+        for key, seg in chunk.group_streams():
+            if key[0] < 0:
+                continue
+            self._update_segment(key, seg)
+
+    def _new_integrator(self, n_configs: int | None = None):
+        """Scalar integrator (1-D power) by default; a config-axis one for
+        row blocks when ``n_configs`` is given (even ``n_configs=1`` — row
+        blocks are always 2-D)."""
+        if n_configs is None:
+            return StreamingIntegrator(
+                min_duration_s=self.min_interval_s, dt_s=self.dt_s)
+        return BatchedStreamingIntegrator(
+            n_configs=n_configs, min_duration_s=self.min_interval_s,
+            dt_s=self.dt_s)
+
+    def _update_segment(self, key: tuple[int, int, int],
+                        seg: TelemetryFrame) -> None:
+        g = self._groups.get(key)
+        if g is None:
+            g = self._groups[key] = _BatchedGroup(
+                base=self._new_integrator(),
+                batch_states=[_BatchState(carry=batch.init_carry())
+                              for batch, _ in self._batches],
+                platform_id=int(seg["platform"][0]),
+            )
+        ts = seg["timestamp"]
+        if float(ts[0]) < g.ts_last:
+            raise ValueError(
+                f"chunks for stream {key} are not time-ordered: got "
+                f"t={float(ts[0])} after t={g.ts_last}")
+        g.ts_first = min(g.ts_first, float(ts[0]))
+        g.ts_last = float(ts[-1])
+        g.n_rows += len(seg)
+        self.n_rows += len(seg)
+
+        states = classify_series(
+            seg["program_resident"].astype(bool),
+            seg.activity_pct(),
+            seg.comm_gbs(),
+            self.classifier,
+        )
+        plat = self._platform(g.platform_id)
+        g.base.update(states, seg["power"])
+        for (batch, idxs), bs in zip(self._batches, g.batch_states):
+            effect, bs.carry = batch.apply_batch(seg, plat, bs.carry,
+                                                 dt_s=self.dt_s)
+            n_rows_cf = effect.power_rows.shape[0]
+            if bs.row_of is None:
+                bs.row_of = effect.row_of
+                bs.wake_events = np.zeros(len(idxs), dtype=np.int64)
+                bs.downscale_events = np.zeros(len(idxs), dtype=np.int64)
+                bs.throttled_counts = np.zeros(n_rows_cf, dtype=np.int64)
+                if n_rows_cf:
+                    if effect.resident_rows is None:
+                        bs.cf = self._new_integrator(n_rows_cf)
+                    else:
+                        bs.cf_rows = [self._new_integrator()
+                                      for _ in range(n_rows_cf)]
+            elif not np.array_equal(bs.row_of, effect.row_of):
+                raise ValueError(
+                    f"batch {type(batch).__name__} changed its config->row "
+                    f"mapping mid-stream for {key}")
+            if n_rows_cf:
+                if effect.resident_rows is None:
+                    if bs.cf_rows is not None:
+                        raise ValueError(
+                            f"batch {type(batch).__name__} changed residency "
+                            f"structure mid-stream for {key}")
+                    bs.cf.update(states, effect.power_rows)
+                else:
+                    if bs.cf is not None:
+                        raise ValueError(
+                            f"batch {type(batch).__name__} changed residency "
+                            f"structure mid-stream for {key}")
+                    for r in range(n_rows_cf):
+                        cf_states = classify_series(
+                            effect.resident_rows[r], seg.activity_pct(),
+                            seg.comm_gbs(), self.classifier)
+                        bs.cf_rows[r].update(cf_states, effect.power_rows[r])
+                bs.throttled_counts += effect.throttled_rows.sum(axis=1)
+            bs.penalty_partials.append(effect.penalty_partial_s)
+            bs.wake_events += effect.wake_events
+            bs.downscale_events += effect.downscale_events
+
+    # ------------------------------------------------------------------ #
+    def merge(self, other: "BatchedPolicyReplayer") -> "BatchedPolicyReplayer":
+        """Absorb a replayer that processed a *disjoint* set of streams —
+        the reduction step of the process-pool sweep."""
+        overlap = self._groups.keys() & other._groups.keys()
+        if overlap:
+            raise ValueError(
+                f"cannot merge replayers with overlapping streams: "
+                f"{sorted(overlap)[:3]}...")
+        if ([p.describe() for p in other.policies], other.min_job_duration_s,
+                other.min_interval_s, other.classifier, other.dt_s,
+                other.platform_of) != (
+                [p.describe() for p in self.policies],
+                self.min_job_duration_s, self.min_interval_s, self.classifier,
+                self.dt_s, self.platform_of):
+            raise ValueError("cannot merge replayers with different configs")
+        self._groups.update(other._groups)
+        self.n_rows += other.n_rows
+        return self
+
+    def finalize(self) -> list[ReplayResult]:
+        """Flush carried state; one :class:`ReplayResult` per grid config,
+        field-for-field identical to the scalar reference path's."""
+        n_cfg = len(self.policies)
+        jobs: list[list[JobReplay]] = [[] for _ in range(n_cfg)]
+        penalty_tot = [0.0] * n_cfg
+        wake_tot = [0] * n_cfg
+        down_tot = [0] * n_cfg
+        throttled_tot = [0] * n_cfg
+        for key in sorted(self._groups):
+            g = self._groups[key]
+            base_bd, _ = g.base.finalize()
+            span_s = g.ts_last - g.ts_first + self.dt_s
+            plat = self._platform(g.platform_id)
+            for (batch, idxs), bs in zip(self._batches, g.batch_states):
+                if bs.cf is not None:
+                    row_bds, _ = bs.cf.finalize_batch()
+                elif bs.cf_rows is not None:
+                    row_bds = [r.finalize()[0] for r in bs.cf_rows]
+                else:
+                    row_bds = []
+                if span_s < self.min_job_duration_s:
+                    continue
+                for j, gi in enumerate(idxs):
+                    pol = self.policies[gi]
+                    row = int(bs.row_of[j]) if bs.row_of is not None else -1
+                    cf_bd = base_bd if row < 0 else row_bds[row]
+                    wakes = int(bs.wake_events[j])
+                    penalty = (math.fsum(p[j] for p in bs.penalty_partials)
+                               + wakes * pol.event_penalty_s(plat))
+                    throttled = (0 if row < 0
+                                 else int(bs.throttled_counts[row]))
+                    jobs[gi].append(JobReplay(
+                        job_id=key[0],
+                        platform=plat.name,
+                        duration_s=float(span_s),
+                        baseline=base_bd,
+                        counterfactual=cf_bd,
+                        penalty_s=penalty,
+                        wake_events=wakes,
+                        downscale_events=int(bs.downscale_events[j]),
+                        throttled_time_s=float(throttled * self.dt_s),
+                    ))
+                    penalty_tot[gi] += penalty
+                    wake_tot[gi] += wakes
+                    down_tot[gi] += int(bs.downscale_events[j])
+                    throttled_tot[gi] += throttled
+        n_rows = self.n_rows
+        self._groups.clear()
+        self.n_rows = 0
+        return [
+            ReplayResult(
+                policy_name=pol.name,
+                policy_params=pol.describe(),
+                jobs=jobs[gi],
+                baseline=merge([j.baseline for j in jobs[gi]]),
+                counterfactual=merge([j.counterfactual for j in jobs[gi]]),
+                penalty_s=penalty_tot[gi],
+                wake_events=wake_tot[gi],
+                downscale_events=down_tot[gi],
+                throttled_time_s=float(throttled_tot[gi] * self.dt_s),
+                n_rows=n_rows,
+            )
+            for gi, pol in enumerate(self.policies)
+        ]
 
 
 def replay_chunk(replayers: Iterable[PolicyReplayer],

@@ -7,14 +7,21 @@ per-job CDFs attached.
 
 Execution model: the store's shards are partitioned by host label (each
 (job, host, device) stream lives entirely under one host label, so
-partitions hold disjoint streams); each partition streams its shards once,
-feeding ALL policy replayers per shard (:func:`repro.whatif.replay
-.replay_chunk` shares the lexsort grouping and classification), so peak
-memory is one shard + per-stream carry state regardless of grid size.
-With ``workers > 1`` partitions run in a process pool and the per-policy
-replayers are merged (disjoint-stream merge); every per-stream computation
-is identical and the cross-stream reductions are exact (``math.fsum``) or
-order-fixed (sorted stream keys), so ``workers=N`` is **bit-identical** to
+partitions hold disjoint streams); each partition streams its shards once.
+By default (``batched=True``) the whole grid rides one
+:class:`~repro.whatif.replay.BatchedPolicyReplayer` per partition: the grid
+is grouped into family batches and every stream segment is classified,
+run-length-encoded and baseline-integrated ONCE for all configs, each
+family evaluated as a ``(n_configs, n_samples)`` block — the sweep is
+O(rows + configs), not O(rows x configs). ``batched=False`` keeps one
+:class:`~repro.whatif.replay.PolicyReplayer` per config (sharing only
+grouping + classification via :func:`repro.whatif.replay.replay_chunk`);
+it is the reference oracle the batched path is verified bit-identical
+against. Either way peak memory is one shard + per-stream carry state.
+With ``workers > 1`` partitions run in a process pool and the replayers are
+merged (disjoint-stream merge); every per-stream computation is identical
+and the cross-stream reductions are exact (``math.fsum``) or order-fixed
+(sorted stream keys), so ``workers=N`` is **bit-identical** to
 ``workers=1``.
 """
 from __future__ import annotations
@@ -29,7 +36,8 @@ from repro.core.imbalance import PoolConfig, PoolPolicy
 from repro.telemetry.pipeline import map_shard_partitions
 from repro.whatif.policies import (DownscalePolicy, NoOpPolicy, ParkingPolicy,
                                    Policy, PowerCapPolicy)
-from repro.whatif.replay import PolicyReplayer, ReplayResult, replay_chunk
+from repro.whatif.replay import (BatchedPolicyReplayer, PolicyReplayer,
+                                 ReplayResult, replay_chunk)
 
 if TYPE_CHECKING:
     from repro.telemetry.storage import TelemetryStore
@@ -38,25 +46,44 @@ if TYPE_CHECKING:
 # --------------------------------------------------------------------------- #
 # Default policy grid
 # --------------------------------------------------------------------------- #
-def default_policy_grid() -> list[Policy]:
-    """48 policy configs spanning the paper's mitigation space:
+def default_policy_grid(dense: bool = True) -> list[Policy]:
+    """Policy configs spanning the paper's mitigation space.
 
-    1 no-op + 24 Algorithm-1 downscale (X x Y x mode) + 6 consolidation
-    (k-of-4 x resume latency) + 17 power caps.
+    ``dense=True`` (default): 200 configs — 1 no-op + 64 Algorithm-1
+    downscale (X x Y x mode) + 21 consolidation (k-of-n x resume latency)
+    + 114 power caps. The dense parking/cap axes follow the "Model Parking
+    Tax" trade-off study; a grid this size is only affordable because the
+    config-axis batched replay makes the sweep O(rows + configs).
+
+    ``dense=False``: the legacy 48-config grid (1 + 24 + 6 + 17) that the
+    committed ``BENCH_whatif_sweep.json`` baseline measures.
     """
     grid: list[Policy] = [NoOpPolicy()]
-    for x in (1.0, 2.0, 3.0, 5.0, 8.0, 10.0):
-        for y in (2.0, 5.0):
+    xs = ((0.5, 1.0, 2.0, 3.0, 5.0, 8.0, 10.0, 15.0) if dense
+          else (1.0, 2.0, 3.0, 5.0, 8.0, 10.0))
+    ys = (1.0, 2.0, 5.0, 10.0) if dense else (2.0, 5.0)
+    for x in xs:
+        for y in ys:
             for mode in (DownscaleMode.SM_ONLY, DownscaleMode.SM_AND_MEM):
                 grid.append(DownscalePolicy(config=ControllerConfig(
                     threshold_x_s=x, cooldown_y_s=y, mode=mode)))
+    resumes = (2.0, 5.0, 10.0, 30.0, 60.0) if dense else (5.0, 30.0)
     for k in (1, 2, 3):
-        for resume_s in (5.0, 30.0):
+        for resume_s in resumes:
             grid.append(ParkingPolicy(
                 pool=PoolConfig(n_devices=4, policy=PoolPolicy.CONSOLIDATED,
                                 n_active=k),
                 resume_latency_s=resume_s))
-    for frac in np.linspace(0.25, 0.95, 17):
+    if dense:
+        for k in (2, 4, 6):
+            for resume_s in (5.0, 30.0):
+                grid.append(ParkingPolicy(
+                    pool=PoolConfig(n_devices=8,
+                                    policy=PoolPolicy.CONSOLIDATED,
+                                    n_active=k),
+                    resume_latency_s=resume_s))
+    n_caps = 114 if dense else 17
+    for frac in np.linspace(0.25, 0.95, n_caps):
         grid.append(PowerCapPolicy(cap_fraction=round(float(frac), 4)))
     return grid
 
@@ -160,7 +187,7 @@ def _replay_partition(
     replayer_kwargs: dict,
 ) -> list[PolicyReplayer]:
     """Stream one shard subset through every policy's replayer (worker body;
-    must stay module-level picklable)."""
+    must stay module-level picklable). The reference oracle path."""
     from repro.telemetry.storage import TelemetryStore
     store = TelemetryStore(root)
     replayers = [PolicyReplayer(p, **replayer_kwargs) for p in policies]
@@ -169,19 +196,37 @@ def _replay_partition(
     return replayers
 
 
+def _replay_partition_batched(
+    root: str,
+    shard_files: list[str],
+    policies: Sequence[Policy],
+    mmap: bool,
+    replayer_kwargs: dict,
+) -> BatchedPolicyReplayer:
+    """Stream one shard subset through the config-axis batched replayer
+    (worker body; must stay module-level picklable)."""
+    from repro.telemetry.storage import TelemetryStore
+    store = TelemetryStore(root)
+    replayer = BatchedPolicyReplayer(policies, **replayer_kwargs)
+    for name in shard_files:
+        replayer.update(store.read_shard(name, mmap=mmap))
+    return replayer
+
+
 def run_sweep(
     store: "TelemetryStore",
     policies: Sequence[Policy] | None = None,
     workers: int = 1,
     hosts: Iterable[str] | None = None,
     mmap: bool = False,
+    batched: bool = True,
     **replayer_kwargs,
 ) -> Frontier:
     """Replay a policy grid over a store and report the trade-off frontier.
 
     Args:
         store: shard store to replay (simulator output or DES/serving traces).
-        policies: grid to sweep; defaults to :func:`default_policy_grid` (48).
+        policies: grid to sweep; defaults to :func:`default_policy_grid` (200).
         workers: process-pool width. Partitions are host-label-disjoint, so
             results are bit-identical for every worker count. Scripts calling
             this with ``workers > 1`` at top level need the standard
@@ -189,10 +234,23 @@ def run_sweep(
         hosts: optional host-label filter.
         mmap: pass ``mmap=True`` to shard reads (zero-copy for ``npy_dir``
             shards; see :meth:`TelemetryStore.iter_shards`).
-        **replayer_kwargs: forwarded to :class:`PolicyReplayer`
+        batched: evaluate the grid family-by-family along a config axis
+            (:class:`BatchedPolicyReplayer`) — one classification / RLE /
+            baseline integration per stream segment for the whole grid.
+            ``batched=False`` runs the per-policy reference path; both are
+            bit-identical (tests/test_whatif_batched.py), the batched one is
+            the fast default.
+        **replayer_kwargs: forwarded to the replayer
             (``min_job_duration_s``, ``platform_of``, ``classifier``, ...).
     """
     policies = list(default_policy_grid() if policies is None else policies)
+
+    if batched:
+        replayer = map_shard_partitions(
+            store, hosts, workers, _replay_partition_batched,
+            (policies, mmap, replayer_kwargs), merge=lambda a, b: a.merge(b))
+        n_rows = replayer.n_rows          # finalize() resets the counter
+        return _assemble(replayer.finalize(), n_rows)
 
     def merge_lists(a: list[PolicyReplayer], b: list[PolicyReplayer]):
         for dst, src in zip(a, b):
@@ -207,10 +265,15 @@ def run_sweep(
 
 
 def sweep_frame(frame, policies: Sequence[Policy] | None = None,
-                **replayer_kwargs) -> Frontier:
+                batched: bool = True, **replayer_kwargs) -> Frontier:
     """In-memory convenience: sweep a single :class:`TelemetryFrame`
     (e.g. a DES :class:`PoolResult` telemetry) without a store."""
     policies = list(default_policy_grid() if policies is None else policies)
+    if batched:
+        replayer = BatchedPolicyReplayer(policies, **replayer_kwargs)
+        replayer.update(frame)
+        n_rows = replayer.n_rows          # finalize() resets the counter
+        return _assemble(replayer.finalize(), n_rows)
     replayers = [PolicyReplayer(p, **replayer_kwargs) for p in policies]
     replay_chunk(replayers, frame)
     n_rows = replayers[0].n_rows if replayers else 0

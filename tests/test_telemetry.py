@@ -47,6 +47,87 @@ def test_sampler_states_roundtrip():
     assert idle_power.mean() > 1.5 * deep_power.mean()
 
 
+def test_sampler_drain_to_store_appends_shards():
+    """Long-replay plumbing: drain() output lands in TelemetryStore.append
+    shards whose concatenation equals the undrained frame, and last_row()
+    survives the drain (controllers keep polling O(1) mid-replay)."""
+    ref = make_sampler()
+    ref.load_program()
+    with tempfile.TemporaryDirectory() as d:
+        store = TelemetryStore(d)
+        s = make_sampler()
+        s.load_program()
+        for sampler in (ref, s):
+            sampler.busy(4.0, compute_util=0.8, hbm_util=0.5)
+        assert s.drain_to(store) == 4
+        last = s.last_row()
+        assert last is not None and last["timestamp"] == 3.0
+        for sampler in (ref, s):
+            sampler.idle(6.0)
+        assert s.drain_to(store) == 6
+        assert s.drain_to(store) == 0          # empty drain appends nothing
+        store.save_manifest()
+        assert len(store.manifest["shards"]) == 2
+        back = store.read_all()
+    full = ref.frame()
+    assert len(back) == len(full) == 10
+    for f in full.columns:
+        a, b = full[f], back[f]
+        assert np.array_equal(a, b, equal_nan=(a.dtype.kind == "f")), f
+
+
+def test_phase_signal_noise_block_bit_identical_to_per_field_draws():
+    """The simulator's one-normal-block-per-phase optimization must consume
+    the rng bitstream exactly like the legacy per-field ``normal(0, s, n)``
+    calls, so seeded cluster output never changes."""
+    from repro.cluster import jobgen
+    from repro.cluster.simulator import _phase_signals
+    from repro.core.power_model import PLATFORMS
+
+    def legacy_noise_fields(rng, plat, kind, util, n):
+        """Per-field draw order of the pre-batched implementation."""
+        if kind == "deep":
+            return {"power": plat.deep_idle_w + rng.normal(0.0, 1.0, n),
+                    "cpu_util": np.clip(5 + rng.normal(0.0, 2.0, n), 0, 100)}
+        if kind == "idle":
+            sm = np.clip(rng.uniform(0, 2.5, n), 0, 4.9)
+            dram = np.clip(rng.uniform(0, 2.0, n), 0, 4.9)
+            return {"sm": sm, "dram": dram,
+                    "power": plat.exec_idle_w + rng.normal(0.0, 3.0, n),
+                    "cpu_util": np.clip(8 + rng.normal(0.0, 4.0, n), 0, 100)}
+        return {"sm": np.clip(100 * util + rng.normal(0.0, 6.0, n), 6, 100),
+                "tensor": np.clip(85 * util + rng.normal(0.0, 6.0, n), 0, 100),
+                "dram": np.clip(70 * util + rng.normal(0.0, 8.0, n), 5.5, 100),
+                "power": np.clip(plat.power_w(util) + rng.normal(0.0, 8.0, n),
+                                 plat.exec_idle_w, plat.tdp_w),
+                "cpu_util": np.clip(30 + rng.normal(0.0, 8.0, n), 0, 100)}
+
+    plat = PLATFORMS["l40s"]
+    for kind, util in (("deep", 0.0), ("idle", 0.0), ("active", 0.7)):
+        # n=40 keeps the active branch dip-free (dips need n > 45) and
+        # cause="" skips the tail signature, so only the (unchanged)
+        # dip-slot/tail-length draws follow the noise block
+        phase = jobgen.Phase(kind, 40, util=util, cause="")
+        r_new, r_old = np.random.default_rng(13), np.random.default_rng(13)
+        cols, _, _ = _phase_signals(r_new, phase, plat, 40)
+        ref = legacy_noise_fields(r_old, plat, kind, util, 40)
+        for f, expected in ref.items():
+            assert np.array_equal(cols[f], expected), (kind, f)
+
+
+def test_store_append_derives_day_label():
+    with tempfile.TemporaryDirectory() as d:
+        store = TelemetryStore(d)
+        frame = TelemetryFrame.from_rows([
+            {"timestamp": 86400.0 * 2 + 5.0, "job_id": 1, "device_id": 0,
+             "hostname": 0, "program_resident": 1, "power": 100.0}])
+        store.append(frame, host="h3")
+        assert store.manifest["shards"][0]["day"] == 2
+        assert store.manifest["shards"][0]["host"] == "h3"
+        assert store.append(TelemetryFrame({}), host="h3") is None
+        assert len(store.manifest["shards"]) == 1
+
+
 def test_storage_roundtrip():
     s = make_sampler()
     s.load_program()

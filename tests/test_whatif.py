@@ -276,10 +276,13 @@ def test_replay_store_matches_in_memory_replayer():
     assert streamed.penalty_s == mono.penalty_s
 
 
-def test_default_policy_grid_is_48_configs():
+def test_default_policy_grid_is_dense_and_unique():
+    # dense default (200) for the batched path; the legacy 48-config grid
+    # stays available as the committed benchmark baseline — sizes and
+    # uniqueness are asserted in tests/test_whatif_batched.py
     grid = default_policy_grid()
-    assert len(grid) == 48
-    assert len({tuple(sorted(p.describe().items())) for p in grid}) == 48
+    assert len(grid) == 200
+    assert len(default_policy_grid(dense=False)) == 48
 
 
 def test_replayer_merge_rejects_overlap_and_config_mismatch():

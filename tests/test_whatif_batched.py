@@ -1,0 +1,213 @@
+"""Batched config-axis replay: bit-identity vs the per-policy reference.
+
+The load-bearing guarantee of the batched sweep path (ISSUE 3): for ANY
+policy grid, ANY chunking, and any process-pool width, every
+:class:`PolicyOutcome` field — energies, penalties, event counts, per-job
+CDFs — equals the scalar per-policy reference path's value *exactly*.
+"""
+import tempfile
+
+import numpy as np
+from _hyp import given, settings, st
+
+from repro.cluster import generate_cluster
+from repro.core.controller import ControllerConfig, DownscaleMode
+from repro.core.energy import BatchedStreamingIntegrator, StreamingIntegrator
+from repro.core.imbalance import PoolConfig, PoolPolicy
+from repro.telemetry import TelemetryStore
+from repro.whatif import (BatchedPolicyReplayer, DownscalePolicy, NoOpPolicy,
+                          ParkingPolicy, PolicyReplayer, PowerCapPolicy,
+                          default_policy_grid, frontier_to_dict, make_batches,
+                          run_sweep, sweep_frame)
+
+# --------------------------------------------------------------------------- #
+# BatchedStreamingIntegrator == n_configs independent scalar integrators
+# --------------------------------------------------------------------------- #
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=5, deadline=None)
+def test_batched_integrator_matches_independent_scalars(seed):
+    rng = np.random.default_rng(seed % 100000)
+    n, n_cfg = 2000, 5
+    states = rng.choice([0, 1, 2], size=n, p=[0.2, 0.3, 0.5]).astype(np.int8)
+    power = rng.normal(200, 40, (n_cfg, n))
+    chunk = int(rng.integers(1, n + 1))
+    batched = BatchedStreamingIntegrator(n_configs=n_cfg, min_duration_s=5.0)
+    singles = [StreamingIntegrator(min_duration_s=5.0) for _ in range(n_cfg)]
+    for s in range(0, n, chunk):
+        batched.update(states[s:s + chunk], power[:, s:s + chunk])
+        for c in range(n_cfg):
+            singles[c].update(states[s:s + chunk], power[c, s:s + chunk])
+    bds, intervals = batched.finalize_batch()
+    for c in range(n_cfg):
+        bd, ivs = singles[c].finalize()
+        assert bd.energy_j == bds[c].energy_j
+        assert bd.time_s == bds[c].time_s
+        assert ivs == intervals
+
+
+# --------------------------------------------------------------------------- #
+# Random grids, random chunkings, workers in {1, 2}: sweep equality
+# --------------------------------------------------------------------------- #
+def random_grid(rng):
+    """A small random policy grid mixing families, knobs AND low-activity
+    thresholds (so family batches split and regroup)."""
+    grid = [NoOpPolicy()]
+    for _ in range(int(rng.integers(1, 4))):
+        grid.append(DownscalePolicy(config=ControllerConfig(
+            threshold_x_s=float(rng.uniform(0.5, 8.0)),
+            cooldown_y_s=float(rng.uniform(1.0, 10.0)),
+            interval_eps_s=float(rng.choice([0.5, 1.0, 2.0])),
+            activity_threshold=float(rng.choice([0.05, 0.03])),
+            mode=rng.choice([DownscaleMode.SM_ONLY, DownscaleMode.SM_AND_MEM]),
+        )))
+    for _ in range(int(rng.integers(1, 3))):
+        n_dev = int(rng.choice([2, 4]))
+        grid.append(ParkingPolicy(
+            pool=PoolConfig(n_devices=n_dev, policy=PoolPolicy.CONSOLIDATED,
+                            n_active=int(rng.integers(1, n_dev))),
+            resume_latency_s=float(rng.uniform(2.0, 40.0))))
+    for _ in range(int(rng.integers(1, 3))):
+        grid.append(PowerCapPolicy(
+            cap_fraction=float(rng.uniform(0.3, 0.9))))
+    order = rng.permutation(len(grid))
+    return [grid[i] for i in order]
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=4, deadline=None)
+def test_batched_sweep_matches_reference_any_grid_chunking_workers(seed):
+    rng = np.random.default_rng(seed % 100000)
+    grid = random_grid(rng)
+    shard_s = int(rng.choice([300, 700, 1500]))
+    with tempfile.TemporaryDirectory() as d:
+        store = TelemetryStore(d)
+        generate_cluster(n_devices=6, horizon_s=1500,
+                         seed=int(rng.integers(0, 100)),
+                         store=store, shard_s=shard_s)
+        # >1 host label, so workers=2 really exercises the process pool
+        assert len({s["host"] for s in store.manifest["shards"]}) > 1
+        ref = run_sweep(store, grid, workers=1, min_job_duration_s=300,
+                        batched=False)
+        for workers in (1, 2):
+            bat = run_sweep(store, grid, workers=workers,
+                            min_job_duration_s=300, batched=True)
+            assert frontier_to_dict(bat) == frontier_to_dict(ref)
+
+
+def test_batched_replayer_chunking_bit_identical():
+    cs = generate_cluster(n_devices=3, horizon_s=2700, seed=21)
+    grid = [NoOpPolicy(), DownscalePolicy(),
+            ParkingPolicy(pool=PoolConfig(n_devices=2,
+                                          policy=PoolPolicy.CONSOLIDATED,
+                                          n_active=1)),
+            PowerCapPolicy(cap_fraction=0.5)]
+    mono = BatchedPolicyReplayer(grid, min_job_duration_s=600)
+    mono.update(cs.frame)
+    a = mono.finalize()
+    refs = []
+    for pol in grid:
+        r = PolicyReplayer(pol, min_job_duration_s=600)
+        r.update(cs.frame)
+        refs.append(r.finalize())
+    for chunk_rows in (997, 1800):
+        rep = BatchedPolicyReplayer(grid, min_job_duration_s=600)
+        for chunk in cs.frame.iter_chunks(chunk_rows):
+            rep.update(chunk)
+        b = rep.finalize()
+        for res_a, res_b, res_ref in zip(a, b, refs):
+            for res in (res_b, res_ref):
+                assert [j.job_id for j in res_a.jobs] == \
+                    [j.job_id for j in res.jobs]
+                for ja, jr in zip(res_a.jobs, res.jobs):
+                    assert ja.baseline.energy_j == jr.baseline.energy_j
+                    assert ja.counterfactual.energy_j == jr.counterfactual.energy_j
+                    assert ja.counterfactual.time_s == jr.counterfactual.time_s
+                    assert ja.penalty_s == jr.penalty_s
+                    assert ja.wake_events == jr.wake_events
+                    assert ja.throttled_time_s == jr.throttled_time_s
+                assert res_a.counterfactual.energy_j == res.counterfactual.energy_j
+                assert res_a.penalty_s == res.penalty_s
+
+
+# --------------------------------------------------------------------------- #
+# Fallback: unknown policy types replay through their scalar apply
+# --------------------------------------------------------------------------- #
+class _TrimPolicy:
+    """A policy type the batcher has never heard of: shaves 10% board power
+    off every resident sample (and alternates reporting residency to stress
+    the fallback's row-structure stabilization)."""
+
+    @property
+    def name(self):
+        return "trim"
+
+    def describe(self):
+        return {"policy": "trim"}
+
+    def init_carry(self):
+        return 0
+
+    def apply(self, seg, plat, carry, dt_s=1.0):
+        from repro.whatif import SegmentEffect
+        power = np.asarray(seg["power"], dtype=np.float64)
+        resident = seg["program_resident"].astype(bool)
+        # report residency explicitly on every other segment only
+        out_resident = resident if carry % 2 else None
+        return SegmentEffect(
+            power_w=np.where(resident, 0.9 * power, power),
+            resident=out_resident,
+            throttled=resident,
+        ), carry + 1
+
+    def event_penalty_s(self, plat):
+        return 0.0
+
+
+def test_fallback_batch_matches_scalar_replay():
+    cs = generate_cluster(n_devices=3, horizon_s=2700, seed=9)
+    grid = [NoOpPolicy(), _TrimPolicy(), DownscalePolicy()]
+    batches = make_batches(grid)
+    assert [type(b).__name__ for b, _ in batches] == \
+        ["NoOpBatch", "FallbackBatch", "DownscaleBatch"]
+    frontier = sweep_frame(cs.frame, grid, min_job_duration_s=300,
+                           batched=True)
+    ref = sweep_frame(cs.frame, grid, min_job_duration_s=300, batched=False)
+    assert frontier_to_dict(frontier) == frontier_to_dict(ref)
+    # chunked feeding exercises the alternating-residency carry
+    rep = BatchedPolicyReplayer(grid, min_job_duration_s=300)
+    for chunk in cs.frame.iter_chunks(500):
+        rep.update(chunk)
+    chunked = rep.finalize()
+    trim = next(r for r in chunked if r.policy_name == "trim")
+    trim_ref = next(o for o in ref.outcomes if o.name == "trim")
+    assert trim.counterfactual.total_energy_j == trim_ref.counterfactual_energy_j
+    assert trim.energy_saved_j > 0
+
+
+# --------------------------------------------------------------------------- #
+# Grid shape and family grouping
+# --------------------------------------------------------------------------- #
+def test_default_policy_grid_sizes():
+    dense = default_policy_grid()
+    assert len(dense) == 200
+    assert len({tuple(sorted(p.describe().items())) for p in dense}) == 200
+    legacy = default_policy_grid(dense=False)
+    assert len(legacy) == 48
+    assert len({tuple(sorted(p.describe().items())) for p in legacy}) == 48
+
+
+def test_make_batches_groups_families_and_preserves_grid_order():
+    dense = default_policy_grid()
+    batches = make_batches(dense)
+    # default thresholds everywhere: one batch per family
+    assert [type(b).__name__ for b, _ in batches] == \
+        ["NoOpBatch", "DownscaleBatch", "ParkingBatch", "PowerCapBatch"]
+    flat = [i for _, idxs in batches for i in idxs]
+    assert sorted(flat) == list(range(len(dense)))
+    for batch, idxs in batches:
+        assert idxs == sorted(idxs)          # grid order within each family
+        assert len(batch.policies) == len(idxs)
+    # distinct low-activity thresholds split a family into separate batches
+    mixed = [DownscalePolicy(),
+             DownscalePolicy(config=ControllerConfig(activity_threshold=0.03))]
+    assert len(make_batches(mixed)) == 2
