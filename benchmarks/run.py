@@ -63,9 +63,9 @@ def main() -> None:
 
     from benchmarks.fleet_bench import bench_fleet_analyze
     from benchmarks.paper_benches import ALL_BENCHES
-    from benchmarks.whatif_bench import bench_whatif_sweep
+    from benchmarks.whatif_bench import bench_whatif_search, bench_whatif_sweep
     benches = list(ALL_BENCHES) + [bench_roofline, bench_fleet_analyze,
-                                   bench_whatif_sweep]
+                                   bench_whatif_sweep, bench_whatif_search]
     if args.only:
         keys = args.only.split(",")
         benches = [fn for fn in benches

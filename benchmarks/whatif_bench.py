@@ -1,4 +1,9 @@
-"""What-if sweep throughput benchmark (counterfactual policy engine).
+"""What-if engine benchmarks: sweep throughput and closed-loop search.
+
+``bench_whatif_sweep`` tracks the batched config-axis sweep;
+``bench_whatif_search`` tracks :func:`repro.whatif.search_frontier` against
+the dense 200-config sweep (configs evaluated to reach the knee, configs/s,
+knee-match tolerance). Both run in ``--quick`` CI mode on every PR.
 
 Generates the 96-group bench corpus (64 devices x 3 h, the fleet_bench
 deployment) straight into a shard store, then sweeps the legacy 48-config
@@ -129,4 +134,94 @@ def bench_whatif_sweep() -> Bench:
     b.add("pareto_set_size", float(len(serial.pareto_set())))
     best = max(serial.outcomes, key=lambda o: o.energy_saved_j)
     b.add("best_saved_fraction", best.saved_fraction)
+    return b
+
+
+def bench_whatif_search() -> Bench:
+    """Closed-loop Pareto search vs the dense fixed-grid sweep.
+
+    Same corpus as :func:`bench_whatif_sweep` (64 devices x 3 h, 691k
+    rows). Acceptance (full mode): :func:`repro.whatif.search_frontier`
+    over the composite-free default families reaches a Pareto front whose
+    knee matches the dense 200-config sweep's — knee ``saved_fraction``
+    within 0.01 absolute and knee ``penalty_s`` within 5% relative (the
+    documented tolerance) — while evaluating <= 50% of the dense grid, and
+    the search terminates by knee convergence, not budget exhaustion.
+    ``--quick`` (CI) shrinks the corpus and keeps only the structural
+    targets: on a tiny fleet the trade-off front is sparse enough that the
+    two knee constructions may legitimately pick different elbows.
+    """
+    from repro.cluster import generate_cluster
+    from repro.telemetry import TelemetryStore
+    from repro.whatif import (PenaltyBudget, default_families, find_knee,
+                              run_sweep, search_frontier)
+
+    quick = common.QUICK
+    n_devices = QUICK_N_DEVICES if quick else N_DEVICES
+    horizon_s = QUICK_HORIZON_S if quick else HORIZON_S
+    shard_s = QUICK_SHARD_S if quick else SHARD_S
+
+    b = Bench("whatif_search")
+    with tempfile.TemporaryDirectory() as d:
+        store = TelemetryStore(d, shard_format="npy_dir")
+        generate_cluster(n_devices=n_devices, horizon_s=horizon_s, seed=SEED,
+                         store=store, shard_s=shard_s)
+        rows = store.total_rows
+
+        t_dense, dense = _timed(
+            lambda: run_sweep(store, min_job_duration_s=0.0), 1)
+        t_search, res = _timed(
+            lambda: search_frontier(store,
+                                    families=default_families(
+                                        composites=False),
+                                    min_job_duration_s=0.0), 1)
+        t_comp, res_comp = _timed(
+            lambda: search_frontier(store,
+                                    budget=PenaltyBudget(
+                                        max_penalty_fraction=0.01),
+                                    min_job_duration_s=0.0), 1)
+
+    n_dense = len(dense.outcomes)
+    b.add("rows", float(rows))
+    b.add("dense_configs", float(n_dense), (200.0, 0.01))
+    b.add("dense_sweep_s", t_dense)
+    b.add("search_s", t_search)
+    b.add("search_evals", float(res.n_evals))
+    b.add("search_rounds", float(res.n_rounds))
+    b.add("search_configs_per_s", res.n_evals / t_search)
+    b.add("evals_fraction_of_dense", res.n_evals / n_dense)
+    b.add("evals_le_half_dense", float(res.n_evals <= n_dense // 2),
+          (1.0, 0.01))
+    b.add("search_converged", float(res.converged), (1.0, 0.01))
+
+    # configs evaluated to reach the final knee (first round it appeared)
+    evals_to_knee = next(
+        (r.n_evals_total for r in res.history
+         if r.knee_params == res.knee.params), float(res.n_evals))
+    b.add("evals_to_knee", float(evals_to_knee))
+
+    knee_dense = find_knee(list(dense.outcomes))
+    b.add("knee_saved_fraction_dense", knee_dense.saved_fraction)
+    b.add("knee_saved_fraction_search", res.knee.saved_fraction)
+    b.add("knee_penalty_s_dense", knee_dense.penalty_s)
+    b.add("knee_penalty_s_search", res.knee.penalty_s)
+    saved_ok = abs(res.knee.saved_fraction
+                   - knee_dense.saved_fraction) <= 0.01
+    pen_ok = (abs(res.knee.penalty_s - knee_dense.penalty_s)
+              <= 0.05 * abs(knee_dense.penalty_s))
+    b.add("knee_saved_match_0p01", float(saved_ok),
+          None if quick else (1.0, 0.01))
+    b.add("knee_penalty_match_5pct", float(pen_ok),
+          None if quick else (1.0, 0.01))
+
+    # composite-enabled search under an operator budget (1% of active time)
+    b.add("composite_search_evals", float(res_comp.n_evals))
+    n_comp_front = sum(1 for o in res_comp.frontier.pareto_set()
+                       if o.params.get("policy") == "composite")
+    b.add("composite_configs_on_front", float(n_comp_front))
+    if res_comp.best is not None:
+        b.add("budget_best_saved_fraction", res_comp.best.saved_fraction)
+        b.add("budget_best_penalty_fraction", res_comp.best.penalty_fraction)
+        b.add("budget_respected",
+              float(res_comp.best.penalty_fraction <= 0.01), (1.0, 0.01))
     return b

@@ -8,7 +8,11 @@
    each policy family evaluated as one (configs, samples) batch per
    stream segment (the config-axis batched replay).
 3. Print the energy/perf trade-off frontier (Pareto set starred) and save
-   the JSON report for dashboards.
+   the compact JSON report for dashboards.
+
+For the budgeted alternative to the dense dump — closed-loop knob search
+around the Pareto knee, including parking+downscale composites — see
+examples/whatif_search.py.
 
 Run:  PYTHONPATH=src python examples/whatif_sweep.py [--devices 16]
           [--hours 24] [--workers 2]
@@ -62,7 +66,7 @@ def main() -> None:
               f"{best.params} -> {energy_kwh(best.energy_saved_j):.2f} kWh "
               f"({best.saved_fraction:.1%}) saved")
 
-    path = save_frontier(frontier, args.out)
+    path = save_frontier(frontier, args.out)     # compact=True by default
     print(f"frontier JSON written to {path}")
 
 

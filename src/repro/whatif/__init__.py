@@ -2,15 +2,30 @@
 fleet telemetry.
 
 Replays any :class:`~repro.telemetry.storage.TelemetryStore` (cluster
-simulator output, DES/serving traces) under a grid of execution-idle
-mitigation policies — Algorithm-1 downscaling, k-of-n consolidation
-parking, power capping — fully out-of-core, and reports the energy/perf
-trade-off :class:`~repro.whatif.sweep.Frontier`. Turns the repro from
-"measure execution-idle" into "choose a mitigation".
+simulator output, DES/serving traces) under execution-idle mitigation
+policies — Algorithm-1 downscaling, k-of-n consolidation parking, power
+capping, and sequential :class:`~repro.whatif.policies.CompositePolicy`
+combinations of them — fully out-of-core, and reports the energy/perf
+trade-off :class:`~repro.whatif.sweep.Frontier`. Policies are values in the
+:mod:`repro.whatif.effects` algebra; grids ride the config-axis batched
+replay; and :func:`~repro.whatif.search.search_frontier` turns the fixed
+grid sweep into a budgeted closed-loop knob search around the Pareto knee.
+Turns the repro from "measure execution-idle" into "choose a mitigation".
 """
+from repro.whatif.effects import (  # noqa: F401
+    BatchEffect,
+    SegmentEffect,
+    compose,
+    effect_view,
+    identity_effect,
+    policy_event_channels,
+    policy_event_prices,
+    price_events,
+)
 from repro.whatif.policies import (  # noqa: F401
     BatchDownscaleCarry,
-    BatchEffect,
+    CompositeBatch,
+    CompositePolicy,
     DownscaleBatch,
     DownscaleCarry,
     DownscalePolicy,
@@ -23,7 +38,6 @@ from repro.whatif.policies import (  # noqa: F401
     PolicyBatch,
     PowerCapBatch,
     PowerCapPolicy,
-    SegmentEffect,
     batched_downscale_decisions,
     downscale_decisions,
     low_activity_series,
@@ -40,9 +54,24 @@ from repro.whatif.replay import (  # noqa: F401
 from repro.whatif.sweep import (  # noqa: F401
     Frontier,
     PolicyOutcome,
+    assemble_frontier,
     default_policy_grid,
+    evaluate,
+    pareto_flags,
     run_sweep,
     sweep_frame,
+)
+from repro.whatif.search import (  # noqa: F401
+    CategoricalAxis,
+    ContinuousAxis,
+    PenaltyBudget,
+    PolicyFamily,
+    RoundRecord,
+    SearchResult,
+    achievable_saving,
+    default_families,
+    find_knee,
+    search_frontier,
 )
 from repro.whatif.report import (  # noqa: F401
     format_frontier,

@@ -20,7 +20,14 @@ The policy set mirrors the paper's mitigation space:
   model-reload tax per wake (the "Model Parking Tax" trade-off);
 * :class:`PowerCapPolicy` — board power capping with a cube-law slowdown on
   capped active samples (deadline-aware frequency-scaling baseline);
-* :class:`NoOpPolicy` — the recorded fleet, unchanged (frontier origin).
+* :class:`NoOpPolicy` — the recorded fleet, unchanged (frontier origin);
+* :class:`CompositePolicy` — any sequence of the above applied in order
+  (e.g. park the n-k inactive devices, downscale the rest), a first-class
+  policy in the :mod:`repro.whatif.effects` algebra.
+
+Every policy validates its knobs at construction — a malformed grid point
+raises a ``ValueError`` naming the knob, instead of failing deep inside the
+replay.
 """
 from __future__ import annotations
 
@@ -34,6 +41,9 @@ from repro.core.imbalance import PoolConfig
 from repro.core.power_model import ClockLevel, PlatformSpec
 from repro.core.states import COMMUNICATION_SIGNALS, COMPUTE_SIGNALS
 from repro.telemetry.records import TelemetryFrame
+from repro.whatif.effects import (BatchEffect, SegmentEffect, compose,
+                                  effect_view, identity_effect,
+                                  policy_event_channels, policy_event_prices)
 
 
 def _threshold_params(config: ControllerConfig) -> dict:
@@ -78,25 +88,6 @@ def low_activity_series(seg: TelemetryFrame, config: ControllerConfig) -> np.nda
            & (comm < config.comm_threshold_gbs))
     cache[key] = low
     return low
-
-
-@dataclasses.dataclass
-class SegmentEffect:
-    """One policy's counterfactual for one time-ordered segment."""
-
-    #: counterfactual board power per sample (W)
-    power_w: np.ndarray
-    #: counterfactual residency, or None when unchanged from the recording
-    resident: np.ndarray | None
-    #: samples the policy affected (downscaled / parked / capped)
-    throttled: np.ndarray
-    #: penalty partial-sum for sample-proportional penalty models; partials
-    #: are fsum'd at finalize so totals are chunking-invariant
-    penalty_partial_s: float = 0.0
-    #: events priced at finalize via ``Policy.event_penalty_s`` (restores,
-    #: wake-ups); integer counts keep the pricing chunking-invariant
-    wake_events: int = 0
-    downscale_events: int = 0
 
 
 @runtime_checkable
@@ -244,6 +235,24 @@ class DownscalePolicy:
     switch_latency_s: float = 0.2
     compute_bound_fraction: float = 0.7
 
+    def __post_init__(self) -> None:
+        if not self.config.threshold_x_s > 0:
+            raise ValueError(
+                f"DownscalePolicy threshold_x_s must be positive, got "
+                f"{self.config.threshold_x_s}")
+        if not self.config.cooldown_y_s > 0:
+            raise ValueError(
+                f"DownscalePolicy cooldown_y_s must be positive, got "
+                f"{self.config.cooldown_y_s}")
+        if not self.config.interval_eps_s > 0:
+            raise ValueError(
+                f"DownscalePolicy interval_eps_s must be positive, got "
+                f"{self.config.interval_eps_s}")
+        if self.switch_latency_s < 0:
+            raise ValueError(
+                f"DownscalePolicy switch_latency_s must be >= 0, got "
+                f"{self.switch_latency_s}")
+
     @property
     def name(self) -> str:
         return "downscale"
@@ -319,6 +328,23 @@ class ParkingPolicy:
     resume_latency_s: float = 10.0
     config: ControllerConfig = ControllerConfig()
 
+    def __post_init__(self) -> None:
+        if self.pool.n_devices < 1:
+            raise ValueError(
+                f"ParkingPolicy pool must have >= 1 device, got "
+                f"{self.pool.n_devices}")
+        if self.pool.n_active is not None and not (
+                1 <= self.pool.n_active <= self.pool.n_devices):
+            raise ValueError(
+                f"ParkingPolicy requires 1 <= n_active <= n_devices, got "
+                f"n_active={self.pool.n_active} for a pool of "
+                f"{self.pool.n_devices}")
+        self.pool.active_set()   # BALANCED/CONSOLIDATED consistency check
+        if self.resume_latency_s < 0:
+            raise ValueError(
+                f"ParkingPolicy resume_latency_s must be >= 0, got "
+                f"{self.resume_latency_s}")
+
     @property
     def name(self) -> str:
         return "parking"
@@ -381,6 +407,12 @@ class PowerCapPolicy:
     cap_fraction: float = 0.6
     config: ControllerConfig = ControllerConfig()
 
+    def __post_init__(self) -> None:
+        if not 0.0 < self.cap_fraction <= 1.0:
+            raise ValueError(
+                f"PowerCapPolicy cap_fraction must be in (0, 1], got "
+                f"{self.cap_fraction}")
+
     @property
     def name(self) -> str:
         return "powercap"
@@ -413,36 +445,91 @@ class PowerCapPolicy:
 
 
 # --------------------------------------------------------------------------- #
-# Family-batched evaluators (config-axis replay)
+# Sequential composition (the effect algebra's product)
 # --------------------------------------------------------------------------- #
-@dataclasses.dataclass
-class BatchEffect:
-    """One family batch's counterfactual for one segment, row-compressed.
+@dataclasses.dataclass(frozen=True)
+class CompositePolicy:
+    """Apply ``parts`` in sequence: each part sees the previous part's
+    counterfactual (power and residency overridden, every signal column
+    recorded) and the effects fold through
+    :func:`repro.whatif.effects.compose`.
 
-    ``row_of[c]`` maps member config ``c`` to a row of ``power_rows`` /
-    ``throttled_rows`` (and ``resident_rows`` when present); ``-1`` means the
-    config leaves this stream untouched (counterfactual == recorded series,
-    so the replayer aliases it to the shared baseline integration). Distinct
-    configs may share a row — every parking config that parks a device
-    produces the *same* counterfactual series — so integration cost scales
-    with distinct rows, not grid size.
+    The motivating composite is the operator's real mitigation: park the
+    pool's inactive devices and downscale the ones that keep serving —
+    ``CompositePolicy((ParkingPolicy(pool), DownscalePolicy(cfg)))``. The
+    two parts act on disjoint device sets (parking no-ops on active devices;
+    on parked devices the idle samples lose residency, so downscale's
+    ``throttled = decisions & resident`` no-ops there), and each part prices
+    its own events: part ``i``'s wake counts occupy their own pricing
+    channel, so parking wakes cost the resume latency while downscale
+    restores cost the clock-switch stall (see
+    :func:`repro.whatif.effects.policy_event_prices`).
+
+    Composition is sequential, not commutative in general — parts that touch
+    the same samples (e.g. downscale then power-cap) compose like the real
+    controllers would, downstream of each other's output.
     """
 
-    #: counterfactual board power rows (W), [R, n]
-    power_rows: np.ndarray
-    #: samples each row's policy affected, [R, n]
-    throttled_rows: np.ndarray
-    #: config -> row index, or -1 for identity (cf == recorded), [C]
-    row_of: np.ndarray
-    #: counterfactual residency rows, or None when unchanged for every row
-    resident_rows: np.ndarray | None
-    #: per-config penalty partial-sums (fsum'd at finalize), [C]
-    penalty_partial_s: np.ndarray
-    #: per-config event counts priced at finalize, [C]
-    wake_events: np.ndarray
-    downscale_events: np.ndarray
+    parts: tuple[Policy, ...]
+
+    def __post_init__(self) -> None:
+        if not self.parts:
+            raise ValueError("CompositePolicy requires at least one part")
+        for p in self.parts:
+            if not isinstance(p, Policy):
+                raise ValueError(
+                    f"CompositePolicy parts must implement the Policy "
+                    f"protocol, got {type(p).__name__}")
+        object.__setattr__(self, "parts", tuple(self.parts))
+
+    @property
+    def name(self) -> str:
+        return "+".join(p.name for p in self.parts)
+
+    def describe(self) -> dict:
+        return {"policy": "composite",
+                "parts": [p.describe() for p in self.parts]}
+
+    @property
+    def n_event_channels(self) -> int:
+        return sum(policy_event_channels(p) for p in self.parts)
+
+    def event_prices_s(self, plat: PlatformSpec) -> np.ndarray:
+        """Concatenated per-part price vectors, in part order."""
+        return np.concatenate(
+            [policy_event_prices(p, plat) for p in self.parts])
+
+    def event_penalty_s(self, plat: PlatformSpec) -> float:
+        """Unused: composite events are priced per channel via
+        :meth:`event_prices_s` (each part keeps its own per-event cost)."""
+        return 0.0
+
+    def init_carry(self) -> tuple:
+        return tuple(p.init_carry() for p in self.parts)
+
+    def apply(self, seg: TelemetryFrame, plat: PlatformSpec, carry: tuple,
+              dt_s: float = 1.0) -> tuple[SegmentEffect, tuple]:
+        k_total = self.n_event_channels
+        eff = identity_effect(seg, n_channels=k_total)
+        cur = seg
+        out_carries = []
+        k0 = 0
+        for i, (p, c) in enumerate(zip(self.parts, carry)):
+            if i > 0:
+                cur = effect_view(cur, part_eff)
+            part_eff, c2 = p.apply(cur, plat, c, dt_s=dt_s)
+            out_carries.append(c2)
+            kp = policy_event_channels(p)
+            events = np.zeros(k_total, dtype=np.int64)
+            events[k0:k0 + kp] = part_eff.event_vector(kp)
+            eff = compose(eff, dataclasses.replace(part_eff, events=events))
+            k0 += kp
+        return eff, tuple(out_carries)
 
 
+# --------------------------------------------------------------------------- #
+# Family-batched evaluators (config-axis replay)
+# --------------------------------------------------------------------------- #
 @runtime_checkable
 class PolicyBatch(Protocol):
     """A family of policy configs evaluated in one pass per segment.
@@ -762,13 +849,109 @@ class FallbackBatch:
             wake_events=np.array([effect.wake_events], dtype=np.int64),
             downscale_events=np.array([effect.downscale_events],
                                       dtype=np.int64),
+            events_rows=(None if effect.events is None
+                         else effect.events[None, :]),
         ), carry
+
+
+@dataclasses.dataclass(frozen=True)
+class CompositeBatch:
+    """Config axis over composites sharing one part structure.
+
+    Members apply their parts sequentially through the scalar
+    :meth:`CompositePolicy.apply` (each member's downstream parts see *that
+    member's* intermediate counterfactual, so their series differ per member
+    and cannot share rows), but the batch still rides the replayer's shared
+    per-segment work: one stream grouping, one baseline classification and
+    integration, and one low-activity series per distinct threshold pair —
+    the memo in :func:`low_activity_series` is shared across members and
+    parts via :func:`repro.whatif.effects.effect_view`. Bit-identical to
+    sequential scalar application (tests/test_whatif_effects.py).
+
+    Residency rows are reported only when some member actually overrides
+    residency on this stream; when every part is a known leaf family that
+    decision is stream-stable (parking is the only resident-changer and its
+    parked set is device-keyed), so streams on never-parked devices — the
+    majority under k-of-n pools — keep the replayer's shared classification
+    and config-axis integrator instead of one reclassification per member.
+    Composites containing *unknown* part types always materialize residency
+    rows, like :class:`FallbackBatch` (a custom part may alternate between
+    None and an override across segments, and the replayer requires a
+    stream-stable row structure).
+    """
+
+    policies: tuple[CompositePolicy, ...]
+
+    def __post_init__(self) -> None:
+        def stable(policy) -> bool:
+            if isinstance(policy, CompositePolicy):
+                return all(stable(p) for p in policy.parts)
+            return isinstance(policy, (NoOpPolicy, DownscalePolicy,
+                                       ParkingPolicy, PowerCapPolicy))
+        object.__setattr__(self, "_stable_residency",
+                           all(stable(p) for p in self.policies))
+
+    def init_carry(self) -> list:
+        return [p.init_carry() for p in self.policies]
+
+    def apply_batch(self, seg: TelemetryFrame, plat: PlatformSpec,
+                    carry: list,
+                    dt_s: float = 1.0) -> tuple[BatchEffect, list]:
+        n = len(seg)
+        n_cfg = len(self.policies)
+        n_ch = self.policies[0].n_event_channels
+        power_rows = np.empty((n_cfg, n))
+        throttled_rows = np.empty((n_cfg, n), dtype=bool)
+        events_rows = np.empty((n_cfg, n_ch), dtype=np.int64)
+        partials = np.empty(n_cfg)
+        wakes = np.empty(n_cfg, dtype=np.int64)
+        downs = np.empty(n_cfg, dtype=np.int64)
+        out_carries = []
+        effects = []
+        for i, (pol, c) in enumerate(zip(self.policies, carry)):
+            eff, c2 = pol.apply(seg, plat, c, dt_s=dt_s)
+            out_carries.append(c2)
+            effects.append(eff)
+            power_rows[i] = eff.power_w
+            throttled_rows[i] = eff.throttled
+            events_rows[i] = eff.events
+            partials[i] = eff.penalty_partial_s
+            wakes[i] = eff.wake_events
+            downs[i] = eff.downscale_events
+        if self._stable_residency and all(e.resident is None for e in effects):
+            resident_rows = None
+        else:
+            resident_rows = np.empty((n_cfg, n), dtype=bool)
+            rec_resident = seg["program_resident"].astype(bool)
+            for i, eff in enumerate(effects):
+                resident_rows[i] = (rec_resident if eff.resident is None
+                                    else eff.resident)
+        return BatchEffect(
+            power_rows=power_rows,
+            throttled_rows=throttled_rows,
+            row_of=np.arange(n_cfg, dtype=np.int64),
+            resident_rows=resident_rows,
+            penalty_partial_s=partials,
+            wake_events=wakes,
+            downscale_events=downs,
+            events_rows=events_rows,
+        ), out_carries
+
+
+def _part_structure(policy: Policy) -> tuple:
+    """Recursive part-type signature of a composite — members of one
+    :class:`CompositeBatch` must share it so their event-channel layouts
+    (and hence the batch's rectangular ``events_rows``) line up."""
+    if isinstance(policy, CompositePolicy):
+        return tuple(_part_structure(p) for p in policy.parts)
+    return (type(policy).__name__,)
 
 
 def _batch_key(policy: Policy, index: int) -> tuple:
     """Family grouping key: policies sharing a key batch together. Downscale /
     parking / powercap group by their low-activity thresholds (the shared
-    per-segment precompute); anything else stays a singleton."""
+    per-segment precompute); composites group by part structure; anything
+    else stays a singleton."""
     if isinstance(policy, DownscalePolicy):
         cfg = policy.config
         return ("downscale", cfg.activity_threshold, cfg.comm_threshold_gbs)
@@ -780,12 +963,14 @@ def _batch_key(policy: Policy, index: int) -> tuple:
         return ("powercap", cfg.activity_threshold, cfg.comm_threshold_gbs)
     if isinstance(policy, NoOpPolicy):
         return ("noop",)
+    if isinstance(policy, CompositePolicy):
+        return ("composite", _part_structure(policy))
     return ("other", index)
 
 
 _BATCH_TYPES = {"downscale": DownscaleBatch, "parking": ParkingBatch,
                 "powercap": PowerCapBatch, "noop": NoOpBatch,
-                "other": FallbackBatch}
+                "composite": CompositeBatch, "other": FallbackBatch}
 
 
 def make_batches(

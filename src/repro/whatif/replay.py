@@ -19,6 +19,9 @@ verified bit-identical to per-config :class:`PolicyReplayer` replays.
 
 Penalties: event-priced penalties (downscale restores, parking wakes) are
 integer counts priced once at finalize, so they are chunking-invariant too.
+Policies with several pricing channels (composites — see
+:mod:`repro.whatif.effects`) carry a per-channel count vector and are priced
+per channel, each part's events at that part's own per-event cost.
 Sample-proportional penalties (power capping) are per-chunk ``np.sum``
 partials ``math.fsum``'d at finalize: exact for any *fixed* chunking —
 ``workers=N`` matches ``workers=1`` bit-for-bit since the shard partition
@@ -39,6 +42,7 @@ from repro.core.power_model import PlatformSpec, get_platform
 from repro.core.states import (ClassifierConfig, DEFAULT_CLASSIFIER,
                                DeviceState, classify_series)
 from repro.telemetry.records import TelemetryFrame
+from repro.whatif.effects import policy_event_prices, price_events
 from repro.whatif.policies import Policy, PolicyBatch, make_batches
 
 if TYPE_CHECKING:
@@ -83,6 +87,9 @@ class _WhatIfGroup:
     wake_events: int = 0
     downscale_events: int = 0
     throttled_samples: int = 0
+    #: per-channel event counts for multi-channel pricing (composites);
+    #: None while the policy emits only the legacy single-channel form
+    events: np.ndarray | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -238,6 +245,9 @@ class PolicyReplayer:
         g.wake_events += effect.wake_events
         g.downscale_events += effect.downscale_events
         g.throttled_samples += int(np.sum(effect.throttled))
+        if effect.events is not None:
+            g.events = (effect.events.copy() if g.events is None
+                        else g.events + effect.events)
 
     # ------------------------------------------------------------------ #
     def merge(self, other: "PolicyReplayer") -> "PolicyReplayer":
@@ -274,8 +284,12 @@ class PolicyReplayer:
             if span_s < self.min_job_duration_s:
                 continue
             plat = self._platform(g.platform_id)
-            penalty = (math.fsum(g.penalty_partials)
-                       + g.wake_events * self.policy.event_penalty_s(plat))
+            if g.events is not None:
+                event_pen = price_events(
+                    policy_event_prices(self.policy, plat), g.events)
+            else:
+                event_pen = g.wake_events * self.policy.event_penalty_s(plat)
+            penalty = math.fsum(g.penalty_partials) + event_pen
             jobs.append(JobReplay(
                 job_id=key[0],
                 platform=plat.name,
@@ -329,6 +343,7 @@ class _BatchState:
     wake_events: np.ndarray | None = None              # [C_b] int
     downscale_events: np.ndarray | None = None         # [C_b] int
     throttled_counts: np.ndarray | None = None         # [R] int, per row
+    events: np.ndarray | None = None                   # [C_b, K] int (composites)
 
 
 @dataclasses.dataclass
@@ -477,6 +492,9 @@ class BatchedPolicyReplayer:
             bs.penalty_partials.append(effect.penalty_partial_s)
             bs.wake_events += effect.wake_events
             bs.downscale_events += effect.downscale_events
+            if effect.events_rows is not None:
+                bs.events = (effect.events_rows.copy() if bs.events is None
+                             else bs.events + effect.events_rows)
 
     # ------------------------------------------------------------------ #
     def merge(self, other: "BatchedPolicyReplayer") -> "BatchedPolicyReplayer":
@@ -526,8 +544,13 @@ class BatchedPolicyReplayer:
                     row = int(bs.row_of[j]) if bs.row_of is not None else -1
                     cf_bd = base_bd if row < 0 else row_bds[row]
                     wakes = int(bs.wake_events[j])
+                    if bs.events is not None:
+                        event_pen = price_events(
+                            policy_event_prices(pol, plat), bs.events[j])
+                    else:
+                        event_pen = wakes * pol.event_penalty_s(plat)
                     penalty = (math.fsum(p[j] for p in bs.penalty_partials)
-                               + wakes * pol.event_penalty_s(plat))
+                               + event_pen)
                     throttled = (0 if row < 0
                                  else int(bs.throttled_counts[row]))
                     jobs[gi].append(JobReplay(

@@ -37,10 +37,20 @@ def frontier_from_dict(payload: dict) -> Frontier:
                     n_rows=payload["n_rows"], n_jobs=payload["n_jobs"])
 
 
-def save_frontier(frontier: Frontier, path: str | pathlib.Path) -> pathlib.Path:
+def save_frontier(frontier: Frontier, path: str | pathlib.Path,
+                  compact: bool = True) -> pathlib.Path:
+    """Write the frontier JSON. ``compact=True`` (default) uses minimal
+    separators and no indentation — a dense-grid frontier is ~10k lines
+    pretty-printed, one line compact, at identical fidelity (the loader
+    accepts both) — pass ``compact=False`` for a human-diffable dump."""
     path = pathlib.Path(path)
     path.parent.mkdir(parents=True, exist_ok=True)
-    path.write_text(json.dumps(frontier_to_dict(frontier), indent=1) + "\n")
+    payload = frontier_to_dict(frontier)
+    if compact:
+        text = json.dumps(payload, separators=(",", ":"))
+    else:
+        text = json.dumps(payload, indent=1)
+    path.write_text(text + "\n")
     return path
 
 
@@ -48,16 +58,23 @@ def load_frontier(path: str | pathlib.Path) -> Frontier:
     return frontier_from_dict(json.loads(pathlib.Path(path).read_text()))
 
 
-def _label(outcome: PolicyOutcome) -> str:
-    p = outcome.params
-    if outcome.name == "downscale":
+def _label_params(name: str, p: dict) -> str:
+    if p.get("policy") == "composite":
+        return " + ".join(_label_params(q.get("policy", "?"), q)
+                          for q in p["parts"])
+    if name == "downscale":
         return (f"downscale X={p['threshold_x_s']:g} Y={p['cooldown_y_s']:g} "
                 f"{p['mode']}")
-    if outcome.name == "parking":
-        return f"parking {p['n_active']}-of-{p['n_devices']} resume={p['resume_latency_s']:g}s"
-    if outcome.name == "powercap":
+    if name == "parking":
+        return (f"parking {p['n_active']}-of-{p['n_devices']} "
+                f"resume={p['resume_latency_s']:g}s")
+    if name == "powercap":
         return f"powercap {p['cap_fraction']:.0%} TDP"
-    return outcome.name
+    return name
+
+
+def _label(outcome: PolicyOutcome) -> str:
+    return _label_params(outcome.name, outcome.params)
 
 
 def format_frontier(frontier: Frontier, top: int | None = None) -> str:

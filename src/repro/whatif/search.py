@@ -1,0 +1,552 @@
+"""Closed-loop Pareto search: budgeted knob optimization over policy families.
+
+A dense grid sweep (:func:`repro.whatif.sweep.run_sweep`) answers "what does
+the whole mitigation space look like" with an O(grid) dump. An operator asks
+a narrower question: *the best knob setting under a performance-penalty
+budget* — and wants it without paying for 200 grid points.
+:func:`search_frontier` answers it closed-loop: evaluate a coarse per-family
+grid once (one batched replay over the store), find the Pareto **knee**,
+then successively refine each family's continuous knobs around its
+knee-adjacent Pareto members — midpoint subdivision per axis, one batched
+:func:`repro.whatif.sweep.evaluate` pass per round — terminating on a
+config-evaluation budget, knee convergence, or axis resolution.
+
+The budget currency is **config evaluations**: each refinement round costs
+one streaming pass over the store, so the search pays O(rounds x rows) in
+shared per-row work and wins where per-*config* cost dominates — composite
+or custom families (no row sharing), knob spaces finer than the fixed
+grid's 200 points, or when only the knee neighbourhood matters. On a corpus
+where batched per-row work dominates, the dense sweep is the faster dump
+(see ``BENCH_whatif_search.json``: ``dense_sweep_s`` vs ``search_s``).
+
+The refinement mirrors the data-driven deadline-aware frequency-scaling
+approach of Ilager et al. (budgeted knob search instead of exhaustive
+sweep); the parking/cap axes follow the "Model Parking Tax" trade-off study.
+Everything is deterministic — candidate generation is order-fixed and the
+batched evaluator is bit-identical for any worker count — so a search is
+reproducible across runs and process-pool widths.
+
+Typical use::
+
+    result = search_frontier(store, budget=PenaltyBudget(
+        max_penalty_fraction=0.01))     # <= 1% of recorded active time
+    print(result.best.params, result.knee.params)
+    print(format_frontier(result.frontier, top=10))
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import json
+import math
+from typing import TYPE_CHECKING, Callable, Iterable, Sequence
+
+from repro.core.controller import ControllerConfig, DownscaleMode
+from repro.core.imbalance import PoolConfig, PoolPolicy
+from repro.whatif.policies import (CompositePolicy, DownscalePolicy,
+                                   NoOpPolicy, ParkingPolicy, Policy,
+                                   PowerCapPolicy)
+from repro.whatif.sweep import (Frontier, PolicyOutcome, assemble_frontier,
+                                _evaluate, _outcome, pareto_flags)
+
+if TYPE_CHECKING:
+    from repro.telemetry.storage import TelemetryStore
+
+
+# --------------------------------------------------------------------------- #
+# Budget
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class PenaltyBudget:
+    """Feasibility constraint on the modeled performance penalty.
+
+    ``max_penalty_s`` bounds the fleet-total modeled stall seconds;
+    ``max_penalty_fraction`` bounds the stall relative to the recorded
+    active time (``PolicyOutcome.penalty_fraction``). Give either or both;
+    a config is feasible when it satisfies every given bound.
+    """
+
+    max_penalty_s: float | None = None
+    max_penalty_fraction: float | None = None
+
+    def __post_init__(self) -> None:
+        for field in ("max_penalty_s", "max_penalty_fraction"):
+            v = getattr(self, field)
+            if v is not None and v < 0:
+                raise ValueError(f"PenaltyBudget {field} must be >= 0, got {v}")
+
+    def feasible(self, outcome: PolicyOutcome) -> bool:
+        if (self.max_penalty_s is not None
+                and outcome.penalty_s > self.max_penalty_s):
+            return False
+        if (self.max_penalty_fraction is not None
+                and outcome.penalty_fraction > self.max_penalty_fraction):
+            return False
+        return True
+
+
+# --------------------------------------------------------------------------- #
+# Family knob spaces
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class ContinuousAxis:
+    """A refinable knob. ``coarse`` seeds round 0; refinement inserts
+    midpoints (geometric when ``log``) between a Pareto anchor's value and
+    its nearest tried neighbours, while the gap exceeds ``resolution``
+    (axis units when linear, log-units when ``log``)."""
+
+    name: str
+    lo: float
+    hi: float
+    coarse: tuple[float, ...]
+    log: bool = False
+    resolution: float = 0.05
+
+    def __post_init__(self) -> None:
+        if not self.lo < self.hi:
+            raise ValueError(f"axis {self.name}: lo must be < hi")
+        if self.log and self.lo <= 0:
+            raise ValueError(f"axis {self.name}: log axis requires lo > 0")
+        for v in self.coarse:
+            if not self.lo <= v <= self.hi:
+                raise ValueError(
+                    f"axis {self.name}: coarse level {v} outside "
+                    f"[{self.lo}, {self.hi}]")
+
+    def gap(self, a: float, b: float) -> float:
+        return math.log(b / a) if self.log else b - a
+
+    def midpoint(self, a: float, b: float) -> float:
+        return math.sqrt(a * b) if self.log else 0.5 * (a + b)
+
+
+@dataclasses.dataclass(frozen=True)
+class CategoricalAxis:
+    """A discrete knob: every option is tried in round 0, never refined."""
+
+    name: str
+    options: tuple
+
+    def __post_init__(self) -> None:
+        if not self.options:
+            raise ValueError(f"axis {self.name}: options must be non-empty")
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyFamily:
+    """One searchable family: a knob space plus a policy factory.
+
+    ``build`` maps a point (``{axis name: value}``) to a
+    :class:`~repro.whatif.policies.Policy`; the search only ever identifies
+    configs by the built policy's ``describe()``, so factories are free to
+    derive several constructor arguments from one axis.
+    """
+
+    name: str
+    axes: tuple[ContinuousAxis | CategoricalAxis, ...]
+    build: Callable[[dict], Policy]
+
+    def coarse_points(self) -> list[dict]:
+        levels = [(ax.name, ax.coarse if isinstance(ax, ContinuousAxis)
+                   else ax.options) for ax in self.axes]
+        return [dict(zip([n for n, _ in levels], combo))
+                for combo in itertools.product(*[v for _, v in levels])]
+
+
+def _build_downscale(pt: dict) -> Policy:
+    return DownscalePolicy(config=ControllerConfig(
+        threshold_x_s=pt["threshold_x_s"], cooldown_y_s=pt["cooldown_y_s"],
+        mode=pt["mode"]))
+
+
+def _build_parking(pt: dict) -> Policy:
+    n_devices, n_active = pt["pool"]
+    return ParkingPolicy(
+        pool=PoolConfig(n_devices=n_devices, policy=PoolPolicy.CONSOLIDATED,
+                        n_active=n_active),
+        resume_latency_s=pt["resume_latency_s"])
+
+
+def _build_powercap(pt: dict) -> Policy:
+    return PowerCapPolicy(cap_fraction=pt["cap_fraction"])
+
+
+def _build_park_downscale(pt: dict) -> Policy:
+    n_devices, n_active = pt["pool"]
+    return CompositePolicy((
+        ParkingPolicy(
+            pool=PoolConfig(n_devices=n_devices,
+                            policy=PoolPolicy.CONSOLIDATED,
+                            n_active=n_active),
+            resume_latency_s=pt["resume_latency_s"]),
+        DownscalePolicy(config=ControllerConfig(
+            threshold_x_s=pt["threshold_x_s"])),
+    ))
+
+
+def default_families(composites: bool = True) -> list[PolicyFamily]:
+    """The searchable mirror of :func:`~repro.whatif.sweep
+    .default_policy_grid`: same families, same knob ranges, but coarse seeds
+    instead of dense levels — the refinement loop supplies the density, and
+    only where the Pareto knee needs it.
+
+    ``composites=True`` adds the operator's composite ("Model Parking Tax"
+    meets Algorithm 1): park the pool's inactive devices, downscale the
+    active rest — a point the fixed grid cannot express at all.
+    """
+    families = [
+        PolicyFamily(
+            name="downscale",
+            axes=(
+                ContinuousAxis("threshold_x_s", 0.5, 15.0,
+                               coarse=(0.5, 3.0, 15.0), log=True),
+                ContinuousAxis("cooldown_y_s", 1.0, 10.0,
+                               coarse=(1.0, 10.0), log=True),
+                CategoricalAxis("mode", (DownscaleMode.SM_ONLY,
+                                         DownscaleMode.SM_AND_MEM)),
+            ),
+            build=_build_downscale),
+        PolicyFamily(
+            name="parking",
+            axes=(
+                CategoricalAxis("pool", ((4, 1), (4, 2), (4, 3),
+                                         (8, 2), (8, 4), (8, 6))),
+                ContinuousAxis("resume_latency_s", 2.0, 60.0,
+                               coarse=(2.0, 60.0), log=True),
+            ),
+            build=_build_parking),
+        PolicyFamily(
+            name="powercap",
+            axes=(
+                ContinuousAxis("cap_fraction", 0.25, 0.95,
+                               coarse=(0.25, 0.6, 0.95), resolution=0.005),
+            ),
+            build=_build_powercap),
+    ]
+    if composites:
+        families.append(PolicyFamily(
+            name="park+downscale",
+            axes=(
+                CategoricalAxis("pool", ((4, 1), (4, 2), (8, 4))),
+                ContinuousAxis("resume_latency_s", 2.0, 60.0,
+                               coarse=(10.0,), log=True),
+                ContinuousAxis("threshold_x_s", 0.5, 15.0,
+                               coarse=(1.0, 8.0), log=True),
+            ),
+            build=_build_park_downscale))
+    return families
+
+
+# --------------------------------------------------------------------------- #
+# Knee detection
+# --------------------------------------------------------------------------- #
+def _normalizer(outcomes: Sequence[PolicyOutcome]):
+    s = [o.energy_saved_j for o in outcomes]
+    p = [o.penalty_s for o in outcomes]
+    s_lo, s_span = min(s), max(s) - min(s)
+    p_lo, p_span = min(p), max(p) - min(p)
+
+    def norm(o: PolicyOutcome) -> tuple[float, float]:
+        return ((o.energy_saved_j - s_lo) / s_span if s_span else 0.0,
+                (o.penalty_s - p_lo) / p_span if p_span else 0.0)
+    return norm
+
+
+def find_knee(outcomes: Sequence[PolicyOutcome]) -> PolicyOutcome:
+    """The Pareto front's point of diminishing returns.
+
+    Pareto-filter the outcomes, normalize saved energy and penalty to the
+    front's extents, and take the member with the maximum perpendicular
+    distance above the chord joining the front's endpoints (the classic
+    elbow/kneedle construction). Degenerate fronts (fewer than three
+    members, or a flat chord) fall back to the member maximizing
+    ``saved_norm - penalty_norm``. Deterministic: ties keep the
+    lowest-penalty member.
+    """
+    if not outcomes:
+        raise ValueError("find_knee requires at least one outcome")
+    flags = pareto_flags([o.energy_saved_j for o in outcomes],
+                         [o.penalty_s for o in outcomes])
+    front = [o for o, f in zip(outcomes, flags) if f]
+    front.sort(key=lambda o: (o.penalty_s, -o.energy_saved_j))
+    norm = _normalizer(front)
+    if len(front) >= 3:
+        (s0, p0), (s1, p1) = norm(front[0]), norm(front[-1])
+        ds, dp = s1 - s0, p1 - p0
+        chord = math.hypot(ds, dp)
+        if chord > 0:
+            best_i, best_d = 0, -math.inf
+            for i, o in enumerate(front):
+                s, p = norm(o)
+                d = (dp * (s - s0) - ds * (p - p0)) / chord
+                if d > best_d + 1e-12:
+                    best_i, best_d = i, d
+            return front[best_i]
+    best_i, best_u = 0, -math.inf
+    for i, o in enumerate(front):
+        s, p = norm(o)
+        if s - p > best_u + 1e-12:
+            best_i, best_u = i, s - p
+    return front[best_i]
+
+
+def achievable_saving(outcomes: Iterable[PolicyOutcome],
+                      max_penalty_s: float) -> float:
+    """Best ``saved_fraction`` among outcomes with ``penalty_s`` within
+    ``max_penalty_s`` — the scalar used to compare two frontiers at a common
+    operating point (e.g. a search frontier vs a dense sweep, at the dense
+    knee's penalty)."""
+    ok = [o.saved_fraction for o in outcomes if o.penalty_s <= max_penalty_s]
+    return max(ok, default=0.0)
+
+
+# --------------------------------------------------------------------------- #
+# Search driver
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class RoundRecord:
+    """One refinement round's accounting."""
+
+    n_new: int
+    n_evals_total: int
+    knee_saved_fraction: float
+    knee_penalty_s: float
+    knee_params: dict
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchResult:
+    """Outcome of a :func:`search_frontier` run."""
+
+    #: every evaluated config (evaluation order), Pareto subset flagged
+    frontier: Frontier
+    #: the front's point of diminishing returns (:func:`find_knee`)
+    knee: PolicyOutcome
+    #: highest-saving config within the budget; the knee when no budget was
+    #: given; None when no evaluated config is feasible
+    best: PolicyOutcome | None
+    n_evals: int
+    n_rounds: int
+    #: True when the loop stopped because the knee stopped moving or every
+    #: axis reached resolution — False when it ran out of eval budget/rounds
+    converged: bool
+    history: tuple[RoundRecord, ...]
+
+
+def _key(policy: Policy) -> str:
+    return json.dumps(policy.describe(), sort_keys=True, default=str)
+
+
+def _neighbor_mids(axis: ContinuousAxis, value: float,
+                   tried: Sequence[float]) -> list[float]:
+    """Midpoints between ``value`` and its nearest tried neighbours on each
+    side, respecting the axis resolution."""
+    mids = []
+    below = [v for v in tried if v < value]
+    above = [v for v in tried if v > value]
+    if below:
+        left = max(below)
+        if axis.gap(left, value) > 2 * axis.resolution:
+            mids.append(axis.midpoint(left, value))
+    if above:
+        right = min(above)
+        if axis.gap(value, right) > 2 * axis.resolution:
+            mids.append(axis.midpoint(value, right))
+    return mids
+
+
+def search_frontier(
+    store: "TelemetryStore",
+    budget: PenaltyBudget | None = None,
+    families: Sequence[PolicyFamily] | None = None,
+    max_evals: int = 100,
+    max_rounds: int = 8,
+    knee_tol: float = 0.01,
+    knee_patience: int = 2,
+    anchors_per_family: int = 2,
+    include_noop: bool = True,
+    workers: int = 1,
+    hosts: Iterable[str] | None = None,
+    mmap: bool = False,
+    batched: bool = True,
+    **replayer_kwargs,
+) -> SearchResult:
+    """Budgeted closed-loop knob search over a telemetry store.
+
+    Round 0 evaluates every family's coarse grid in one batched replay
+    (:func:`repro.whatif.sweep.evaluate` is the inner loop). Each later
+    round (a) Pareto-filters everything evaluated so far and finds the knee
+    (:func:`find_knee`), (b) picks per-family anchors — the family's Pareto
+    members nearest the knee, plus its best budget-feasible member when a
+    ``budget`` is given — and (c) proposes midpoint subdivisions of each
+    continuous axis around every anchor. The loop stops when the
+    config-evaluation budget ``max_evals`` is spent, the knee moves less
+    than ``knee_tol`` (relative, both coordinates) for ``knee_patience``
+    consecutive rounds, no axis can be subdivided above its resolution, or
+    ``max_rounds`` is reached.
+
+    Determinism: candidates are generated in family/axis order from sorted
+    tried-value sets and evaluated through the batched replayer, so the
+    result is bit-identical for any ``workers`` (tests/test_whatif_search.py).
+
+    Returns a :class:`SearchResult`; its ``frontier`` holds every evaluated
+    config with the Pareto subset flagged, ``best`` answers the operator's
+    budget question directly.
+    """
+    if max_evals < 1:
+        raise ValueError(f"max_evals must be >= 1, got {max_evals}")
+    families = (default_families() if families is None else list(families))
+    names = [f.name for f in families]
+    if len(set(names)) != len(names):
+        raise ValueError(f"duplicate family names: {names}")
+
+    # evaluation state, keyed by the built policy's canonical describe()
+    outcomes: dict[str, PolicyOutcome] = {}
+    point_of: dict[str, tuple[str, dict]] = {}     # key -> (family, point)
+    order: list[str] = []                          # evaluation order
+    tried: dict[tuple[str, str], set[float]] = {}  # (family, axis) -> values
+    n_rows = 0
+
+    def build_candidates(fam: PolicyFamily, points: list[dict]):
+        cands = []
+        for pt in points:
+            pol = fam.build(pt)
+            key = _key(pol)
+            if key in outcomes or any(key == k for k, _ in cands):
+                continue
+            cands.append((key, (fam.name, pt, pol)))
+        return cands
+
+    def evaluate_round(cands) -> int:
+        nonlocal n_rows
+        if not cands:
+            return 0
+        pols = [pol for _, (_, _, pol) in cands]
+        results, rows = _evaluate(
+            pols, store, workers=workers, hosts=hosts, mmap=mmap,
+            batched=batched, replayer_kwargs=replayer_kwargs)
+        n_rows = rows
+        for (key, (fam_name, pt, _)), res in zip(cands, results):
+            outcomes[key] = _outcome(res)
+            point_of[key] = (fam_name, pt)
+            order.append(key)
+            for ax_name, v in pt.items():
+                if isinstance(v, (int, float)) and not isinstance(v, bool):
+                    tried.setdefault((fam_name, ax_name), set()).add(float(v))
+        return len(cands)
+
+    # ---------------- round 0: coarse grids ---------------- #
+    round0: list[tuple[str, tuple]] = []
+    if include_noop:
+        noop = NoOpPolicy()
+        round0.append((_key(noop), ("noop", {}, noop)))
+    for fam in families:
+        round0.extend(build_candidates(fam, fam.coarse_points()))
+    if len(round0) > max_evals:
+        raise ValueError(
+            f"max_evals={max_evals} cannot cover the coarse grids "
+            f"({len(round0)} configs); raise the budget or thin the "
+            f"families' coarse levels")
+    evaluate_round(round0)
+
+    history: list[RoundRecord] = []
+    knee = find_knee(list(outcomes.values()))
+    history.append(RoundRecord(
+        n_new=len(order), n_evals_total=len(order),
+        knee_saved_fraction=knee.saved_fraction, knee_penalty_s=knee.penalty_s,
+        knee_params=knee.params))
+
+    # ---------------- refinement rounds ---------------- #
+    def close(a: float, b: float) -> bool:
+        return abs(a - b) <= knee_tol * max(abs(a), abs(b), 1e-12)
+
+    converged = False
+    stable = 0
+    by_fam: dict[str, list[str]] = {}
+    while len(history) - 1 < max_rounds:
+        all_outcomes = [outcomes[k] for k in order]
+        flags = pareto_flags([o.energy_saved_j for o in all_outcomes],
+                             [o.penalty_s for o in all_outcomes])
+        pareto_keys = {k for k, f in zip(order, flags) if f}
+        norm = _normalizer(all_outcomes)
+        ks, kp = norm(knee)
+
+        def knee_dist(key: str) -> float:
+            s, p = norm(outcomes[key])
+            return math.hypot(s - ks, p - kp)
+
+        by_fam.clear()
+        for k in order:
+            by_fam.setdefault(point_of[k][0], []).append(k)
+
+        candidates: list[tuple[str, tuple]] = []
+        for fam in families:
+            keys = by_fam.get(fam.name, [])
+            if not keys:
+                continue
+            anchors = sorted((k for k in keys if k in pareto_keys),
+                             key=knee_dist)[:anchors_per_family]
+            if not anchors:
+                # no Pareto member: refine the family's most competitive
+                # point so a coarse miss can still recover
+                anchors = sorted(keys, key=knee_dist)[:1]
+            if budget is not None:
+                feas = [k for k in keys if budget.feasible(outcomes[k])]
+                if feas:
+                    best_f = max(feas,
+                                 key=lambda k: outcomes[k].energy_saved_j)
+                    if best_f not in anchors:
+                        anchors.append(best_f)
+            points = []
+            for akey in anchors:
+                _, apt = point_of[akey]
+                for ax in fam.axes:
+                    if not isinstance(ax, ContinuousAxis):
+                        continue
+                    vals = sorted(tried.get((fam.name, ax.name), ()))
+                    for mid in _neighbor_mids(ax, float(apt[ax.name]), vals):
+                        points.append({**apt, ax.name: mid})
+            candidates.extend(build_candidates(fam, points))
+
+        room = max_evals - len(order)
+        if not candidates:
+            converged = True
+            break
+        if room <= 0:
+            break
+        new = evaluate_round(candidates[:room])
+        prev = knee
+        knee = find_knee(list(outcomes.values()))
+        history.append(RoundRecord(
+            n_new=new, n_evals_total=len(order),
+            knee_saved_fraction=knee.saved_fraction,
+            knee_penalty_s=knee.penalty_s, knee_params=knee.params))
+        if (close(prev.saved_fraction, knee.saved_fraction)
+                and close(prev.penalty_s, knee.penalty_s)):
+            stable += 1
+            if stable >= knee_patience:
+                converged = True
+                break
+        else:
+            stable = 0
+        if new < len(candidates):      # budget truncated the round
+            break
+
+    frontier = assemble_frontier([outcomes[k] for k in order], n_rows)
+    final_outcomes = list(frontier.outcomes)
+    knee = find_knee(final_outcomes)
+    if budget is None:
+        best: PolicyOutcome | None = knee
+    else:
+        feasible = [o for o in final_outcomes if budget.feasible(o)]
+        best = (max(feasible, key=lambda o: o.energy_saved_j)
+                if feasible else None)
+    return SearchResult(
+        frontier=frontier,
+        knee=knee,
+        best=best,
+        n_evals=len(order),
+        n_rounds=len(history),
+        converged=converged,
+        history=tuple(history),
+    )

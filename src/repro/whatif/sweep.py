@@ -1,9 +1,13 @@
-"""Policy-grid sweep runner: policies x shards, process-pool parallel.
+"""Policy evaluation kernel and the fixed-grid sweep built on it.
 
-``run_sweep`` replays every policy config of a grid over one
-:class:`TelemetryStore` and assembles a :class:`Frontier` — energy saved vs
-performance penalty per config, with the Pareto-optimal subset flagged and
-per-job CDFs attached.
+:func:`evaluate` is the reusable kernel: replay any set of policy configs
+over one :class:`TelemetryStore`, one :class:`PolicyOutcome` per config.
+:func:`run_sweep` is its fixed-grid caller — it assembles a
+:class:`Frontier` (energy saved vs performance penalty per config, the
+Pareto-optimal subset flagged, per-job CDFs attached) from the default
+200-config grid. :func:`repro.whatif.search.search_frontier` is the
+*closed-loop* caller: the same kernel inside a budgeted refinement loop
+around the Pareto knee.
 
 Execution model: the store's shards are partitioned by host label (each
 (job, host, device) stream lives entirely under one host label, so
@@ -117,7 +121,16 @@ class PolicyOutcome:
 
 @dataclasses.dataclass(frozen=True)
 class Frontier:
-    """Sweep result: one outcome per policy config, Pareto subset flagged."""
+    """Sweep result: one outcome per policy config, Pareto subset flagged.
+
+    Produced by the fixed-grid :func:`run_sweep` / :func:`sweep_frame` and
+    by the closed-loop :func:`repro.whatif.search.search_frontier` (whose
+    :class:`~repro.whatif.search.SearchResult.frontier` holds every config
+    the search evaluated). :func:`repro.whatif.search.find_knee` locates a
+    frontier's point of diminishing returns;
+    :meth:`best_within_penalty` / :class:`repro.whatif.search.PenaltyBudget`
+    answer the budget question directly.
+    """
 
     outcomes: tuple[PolicyOutcome, ...]
     n_rows: int
@@ -132,7 +145,7 @@ class Frontier:
         return max(ok, key=lambda o: o.energy_saved_j) if ok else None
 
 
-def _pareto_flags(saved: Sequence[float], penalty: Sequence[float]) -> list[bool]:
+def pareto_flags(saved: Sequence[float], penalty: Sequence[float]) -> list[bool]:
     """Non-dominated points for (maximize saved, minimize penalty)."""
     flags = []
     for i, (s_i, p_i) in enumerate(zip(saved, penalty)):
@@ -141,6 +154,20 @@ def _pareto_flags(saved: Sequence[float], penalty: Sequence[float]) -> list[bool
             for j, (s_j, p_j) in enumerate(zip(saved, penalty)) if j != i)
         flags.append(not dominated)
     return flags
+
+
+def assemble_frontier(outcomes: Sequence[PolicyOutcome],
+                      n_rows: int = 0) -> Frontier:
+    """Build a :class:`Frontier` from already-evaluated outcomes, recomputing
+    the Pareto flags over exactly this set (any flags carried in are
+    discarded). The closed-loop search accumulates outcomes across
+    refinement rounds and re-assembles after every round."""
+    flags = pareto_flags([o.energy_saved_j for o in outcomes],
+                         [o.penalty_s for o in outcomes])
+    flagged = tuple(dataclasses.replace(o, pareto=f)
+                    for o, f in zip(outcomes, flags))
+    n_jobs = max((o.n_jobs for o in flagged), default=0)
+    return Frontier(outcomes=flagged, n_rows=n_rows, n_jobs=n_jobs)
 
 
 def _outcome(result: ReplayResult) -> PolicyOutcome:
@@ -167,17 +194,11 @@ def _outcome(result: ReplayResult) -> PolicyOutcome:
 
 
 def _assemble(results: list[ReplayResult], n_rows: int) -> Frontier:
-    outcomes = [_outcome(r) for r in results]
-    flags = _pareto_flags([o.energy_saved_j for o in outcomes],
-                          [o.penalty_s for o in outcomes])
-    outcomes = [dataclasses.replace(o, pareto=f)
-                for o, f in zip(outcomes, flags)]
-    n_jobs = max((o.n_jobs for o in outcomes), default=0)
-    return Frontier(outcomes=tuple(outcomes), n_rows=n_rows, n_jobs=n_jobs)
+    return assemble_frontier([_outcome(r) for r in results], n_rows)
 
 
 # --------------------------------------------------------------------------- #
-# Sweep execution
+# Evaluation kernel and its fixed-grid caller
 # --------------------------------------------------------------------------- #
 def _replay_partition(
     root: str,
@@ -213,6 +234,83 @@ def _replay_partition_batched(
     return replayer
 
 
+def _evaluate(
+    configs: Sequence[Policy],
+    store: "TelemetryStore",
+    workers: int = 1,
+    hosts: Iterable[str] | None = None,
+    mmap: bool = False,
+    batched: bool = True,
+    replayer_kwargs: dict | None = None,
+) -> tuple[list[ReplayResult], int]:
+    """Kernel body shared by :func:`evaluate` / :func:`run_sweep`: one
+    :class:`ReplayResult` per config in input order, plus the replayed
+    job-attributed row count."""
+    configs = list(configs)
+    replayer_kwargs = replayer_kwargs or {}
+
+    if batched:
+        replayer = map_shard_partitions(
+            store, hosts, workers, _replay_partition_batched,
+            (configs, mmap, replayer_kwargs), merge=lambda a, b: a.merge(b))
+        n_rows = replayer.n_rows          # finalize() resets the counter
+        return replayer.finalize(), n_rows
+
+    def merge_lists(a: list[PolicyReplayer], b: list[PolicyReplayer]):
+        for dst, src in zip(a, b):
+            dst.merge(src)
+        return a
+
+    replayers = map_shard_partitions(
+        store, hosts, workers, _replay_partition,
+        (configs, mmap, replayer_kwargs), merge=merge_lists)
+    n_rows = replayers[0].n_rows if replayers else 0
+    return [r.finalize() for r in replayers], n_rows
+
+
+def evaluate(
+    configs: Sequence[Policy],
+    store: "TelemetryStore",
+    workers: int = 1,
+    hosts: Iterable[str] | None = None,
+    mmap: bool = False,
+    batched: bool = True,
+    **replayer_kwargs,
+) -> list[PolicyOutcome]:
+    """Evaluate an arbitrary set of policy configs over a store.
+
+    The reusable kernel under both the fixed-grid :func:`run_sweep` and the
+    closed-loop :func:`repro.whatif.search.search_frontier`: replays
+    ``configs`` (grouped into family batches, one pass per stream segment)
+    and returns one :class:`PolicyOutcome` per config, **in input order**,
+    with no Pareto flags — Pareto-ness is a property of a *set* of outcomes;
+    flag a set with :func:`assemble_frontier`.
+
+    Args:
+        configs: policy configs to evaluate (any mix of families).
+        store: shard store to replay (simulator output or DES/serving traces).
+        workers: process-pool width. Partitions are host-label-disjoint, so
+            results are bit-identical for every worker count. Scripts calling
+            this with ``workers > 1`` at top level need the standard
+            ``if __name__ == "__main__":`` guard (workers re-import main).
+        hosts: optional host-label filter.
+        mmap: pass ``mmap=True`` to shard reads (zero-copy for ``npy_dir``
+            shards; see :meth:`TelemetryStore.iter_shards`).
+        batched: evaluate the configs family-by-family along a config axis
+            (:class:`BatchedPolicyReplayer`) — one classification / RLE /
+            baseline integration per stream segment for the whole set.
+            ``batched=False`` runs the per-policy reference path; both are
+            bit-identical (tests/test_whatif_batched.py), the batched one is
+            the fast default.
+        **replayer_kwargs: forwarded to the replayer
+            (``min_job_duration_s``, ``platform_of``, ``classifier``, ...).
+    """
+    results, _ = _evaluate(configs, store, workers=workers, hosts=hosts,
+                           mmap=mmap, batched=batched,
+                           replayer_kwargs=replayer_kwargs)
+    return [_outcome(r) for r in results]
+
+
 def run_sweep(
     store: "TelemetryStore",
     policies: Sequence[Policy] | None = None,
@@ -222,46 +320,19 @@ def run_sweep(
     batched: bool = True,
     **replayer_kwargs,
 ) -> Frontier:
-    """Replay a policy grid over a store and report the trade-off frontier.
+    """Replay a fixed policy grid over a store and report the trade-off
+    frontier — the fixed-grid caller of the :func:`evaluate` kernel.
 
-    Args:
-        store: shard store to replay (simulator output or DES/serving traces).
-        policies: grid to sweep; defaults to :func:`default_policy_grid` (200).
-        workers: process-pool width. Partitions are host-label-disjoint, so
-            results are bit-identical for every worker count. Scripts calling
-            this with ``workers > 1`` at top level need the standard
-            ``if __name__ == "__main__":`` guard (workers re-import main).
-        hosts: optional host-label filter.
-        mmap: pass ``mmap=True`` to shard reads (zero-copy for ``npy_dir``
-            shards; see :meth:`TelemetryStore.iter_shards`).
-        batched: evaluate the grid family-by-family along a config axis
-            (:class:`BatchedPolicyReplayer`) — one classification / RLE /
-            baseline integration per stream segment for the whole grid.
-            ``batched=False`` runs the per-policy reference path; both are
-            bit-identical (tests/test_whatif_batched.py), the batched one is
-            the fast default.
-        **replayer_kwargs: forwarded to the replayer
-            (``min_job_duration_s``, ``platform_of``, ``classifier``, ...).
+    ``policies`` defaults to :func:`default_policy_grid` (200 configs). For
+    a *budgeted* search of the same knob space instead of a dense dump, see
+    :func:`repro.whatif.search.search_frontier`. All other arguments are
+    :func:`evaluate`'s.
     """
     policies = list(default_policy_grid() if policies is None else policies)
-
-    if batched:
-        replayer = map_shard_partitions(
-            store, hosts, workers, _replay_partition_batched,
-            (policies, mmap, replayer_kwargs), merge=lambda a, b: a.merge(b))
-        n_rows = replayer.n_rows          # finalize() resets the counter
-        return _assemble(replayer.finalize(), n_rows)
-
-    def merge_lists(a: list[PolicyReplayer], b: list[PolicyReplayer]):
-        for dst, src in zip(a, b):
-            dst.merge(src)
-        return a
-
-    replayers = map_shard_partitions(
-        store, hosts, workers, _replay_partition,
-        (policies, mmap, replayer_kwargs), merge=merge_lists)
-    n_rows = replayers[0].n_rows if replayers else 0
-    return _assemble([r.finalize() for r in replayers], n_rows)
+    results, n_rows = _evaluate(policies, store, workers=workers, hosts=hosts,
+                                mmap=mmap, batched=batched,
+                                replayer_kwargs=replayer_kwargs)
+    return _assemble(results, n_rows)
 
 
 def sweep_frame(frame, policies: Sequence[Policy] | None = None,

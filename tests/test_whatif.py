@@ -299,6 +299,43 @@ def test_replayer_merge_rejects_overlap_and_config_mismatch():
         a.merge(PolicyReplayer(PowerCapPolicy(), min_job_duration_s=0.0))
 
 
+def test_policy_config_validation():
+    """Malformed grid points fail at construction with a named knob, not
+    deep inside the replay."""
+    with pytest.raises(ValueError, match="threshold_x_s"):
+        DownscalePolicy(config=ControllerConfig(threshold_x_s=0.0))
+    with pytest.raises(ValueError, match="threshold_x_s"):
+        DownscalePolicy(config=ControllerConfig(threshold_x_s=-3.0))
+    with pytest.raises(ValueError, match="cooldown_y_s"):
+        DownscalePolicy(config=ControllerConfig(cooldown_y_s=-1.0))
+    with pytest.raises(ValueError, match="interval_eps_s"):
+        DownscalePolicy(config=ControllerConfig(interval_eps_s=0.0))
+    with pytest.raises(ValueError, match="switch_latency_s"):
+        DownscalePolicy(switch_latency_s=-0.1)
+    with pytest.raises(ValueError, match="n_active"):
+        ParkingPolicy(pool=PoolConfig(n_devices=4,
+                                      policy=PoolPolicy.CONSOLIDATED,
+                                      n_active=0))
+    with pytest.raises(ValueError, match="n_active"):
+        ParkingPolicy(pool=PoolConfig(n_devices=4,
+                                      policy=PoolPolicy.CONSOLIDATED,
+                                      n_active=5))
+    with pytest.raises(ValueError, match="1 device"):
+        ParkingPolicy(pool=PoolConfig(n_devices=0))
+    with pytest.raises(ValueError, match="resume_latency_s"):
+        ParkingPolicy(pool=PoolConfig(n_devices=4,
+                                      policy=PoolPolicy.CONSOLIDATED,
+                                      n_active=2), resume_latency_s=-1.0)
+    for bad_cap in (0.0, -0.5, 1.5):
+        with pytest.raises(ValueError, match="cap_fraction"):
+            PowerCapPolicy(cap_fraction=bad_cap)
+    # valid boundary values construct fine
+    PowerCapPolicy(cap_fraction=1.0)
+    ParkingPolicy(pool=PoolConfig(n_devices=4,
+                                  policy=PoolPolicy.CONSOLIDATED, n_active=4))
+    DownscalePolicy(config=ControllerConfig(threshold_x_s=0.01))
+
+
 def test_power_cap_penalty_prices_at_replayer_dt():
     from repro.telemetry.records import TelemetryFrame
     rows = [{"timestamp": float(2 * t), "job_id": 1, "device_id": 0,

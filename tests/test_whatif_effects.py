@@ -1,0 +1,301 @@
+"""Effect algebra and policy composition: identity/associativity laws and
+composite bit-identity.
+
+The load-bearing guarantees of the ISSUE-4 refactor: (1) ``compose`` with
+the identity effect is bit-exact (``compose(NoOp, P)`` replays identically
+to ``P`` alone); (2) a :class:`CompositePolicy` is bit-identical under any
+chunking and process-pool width; (3) the batched :class:`CompositeBatch`
+path equals scalar sequential application on random composite grids; and
+(4) composite event pricing charges each part's events at that part's own
+per-event cost.
+"""
+import tempfile
+
+import numpy as np
+import pytest
+from _hyp import given, settings, st
+
+from repro.cluster import generate_cluster
+from repro.core.controller import ControllerConfig, DownscaleMode
+from repro.core.imbalance import PoolConfig, PoolPolicy
+from repro.telemetry import TelemetryStore
+from repro.telemetry.records import TelemetryFrame
+from repro.whatif import (BatchedPolicyReplayer, CompositePolicy,
+                          DownscalePolicy, NoOpPolicy, ParkingPolicy,
+                          PolicyReplayer, PowerCapPolicy, compose,
+                          frontier_to_dict, identity_effect, make_batches,
+                          policy_event_prices, price_events, run_sweep,
+                          sweep_frame)
+
+
+def _job_frame(cs):
+    return cs.frame
+
+
+def _replay(policy, frame, chunk=None, **kw):
+    kw.setdefault("min_job_duration_s", 300)
+    rep = PolicyReplayer(policy, **kw)
+    if chunk is None:
+        rep.update(frame)
+    else:
+        for c in frame.iter_chunks(chunk):
+            rep.update(c)
+    return rep.finalize()
+
+
+def _assert_results_equal(a, b):
+    assert [j.job_id for j in a.jobs] == [j.job_id for j in b.jobs]
+    for ja, jb in zip(a.jobs, b.jobs):
+        assert ja.baseline.energy_j == jb.baseline.energy_j
+        assert ja.counterfactual.energy_j == jb.counterfactual.energy_j
+        assert ja.counterfactual.time_s == jb.counterfactual.time_s
+        assert ja.penalty_s == jb.penalty_s
+        assert ja.wake_events == jb.wake_events
+        assert ja.downscale_events == jb.downscale_events
+        assert ja.throttled_time_s == jb.throttled_time_s
+    assert a.counterfactual.energy_j == b.counterfactual.energy_j
+    assert a.penalty_s == b.penalty_s
+
+
+# --------------------------------------------------------------------------- #
+# algebra laws on raw effects
+# --------------------------------------------------------------------------- #
+def test_compose_identity_is_bit_exact():
+    cs = generate_cluster(n_devices=2, horizon_s=1200, seed=5)
+    from repro.core.power_model import get_platform
+    plat = get_platform("l40s")
+    pol = DownscalePolicy()
+    for key, seg in cs.frame.group_streams():
+        if key[0] < 0:
+            continue
+        eff, _ = pol.apply(seg, plat, pol.init_carry())
+        eff.events = np.array([eff.wake_events], dtype=np.int64)
+        ident = identity_effect(seg)
+        out = compose(ident, eff)
+        assert out.power_w is eff.power_w
+        assert out.resident is eff.resident
+        assert np.array_equal(out.throttled, eff.throttled)
+        assert out.penalty_partial_s == eff.penalty_partial_s
+        assert out.wake_events == eff.wake_events
+        assert np.array_equal(out.events, eff.events)
+        break
+
+
+def test_compose_is_associative():
+    rng = np.random.default_rng(0)
+    n = 50
+
+    def eff(seed):
+        r = np.random.default_rng(seed)
+        from repro.whatif import SegmentEffect
+        return SegmentEffect(
+            power_w=r.uniform(50, 400, n),
+            resident=None if seed % 2 else r.random(n) < 0.5,
+            throttled=r.random(n) < 0.3,
+            penalty_partial_s=float(r.uniform(0, 5)),
+            wake_events=int(r.integers(0, 4)),
+            downscale_events=int(r.integers(0, 4)),
+            events=r.integers(0, 4, 3).astype(np.int64),
+        )
+
+    a, b, c = eff(1), eff(2), eff(3)
+    left = compose(compose(a, b), c)
+    right = compose(a, compose(b, c))
+    assert left.power_w is right.power_w
+    assert np.array_equal(left.throttled, right.throttled)
+    assert np.array_equal(left.events, right.events)
+    assert left.wake_events == right.wake_events
+    # residency: last non-None override either way
+    la = left.resident if left.resident is not None else None
+    ra = right.resident if right.resident is not None else None
+    assert (la is None) == (ra is None)
+    if la is not None:
+        assert np.array_equal(la, ra)
+
+
+def test_compose_rejects_mismatched_channel_spaces():
+    from repro.whatif import SegmentEffect
+    n = 4
+    base = dict(power_w=np.ones(n), resident=None,
+                throttled=np.zeros(n, bool))
+    with pytest.raises(ValueError, match="channel"):
+        compose(SegmentEffect(**base, events=np.zeros(2, dtype=np.int64)),
+                SegmentEffect(**base, events=np.zeros(3, dtype=np.int64)))
+    with pytest.raises(ValueError, match="lift"):
+        compose(SegmentEffect(**base),
+                SegmentEffect(**base, events=np.zeros(1, dtype=np.int64)))
+
+
+# --------------------------------------------------------------------------- #
+# compose(NoOp, P) == P through the replayer (the identity law, end to end)
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("inner", [
+    DownscalePolicy(),
+    ParkingPolicy(pool=PoolConfig(n_devices=2,
+                                  policy=PoolPolicy.CONSOLIDATED, n_active=1),
+                  resume_latency_s=7.0),
+    PowerCapPolicy(cap_fraction=0.5),
+])
+def test_noop_composition_is_bit_identical_to_bare_policy(inner):
+    cs = generate_cluster(n_devices=3, horizon_s=2400, seed=13)
+    bare = _replay(inner, cs.frame)
+    for parts in ((NoOpPolicy(), inner), (inner, NoOpPolicy())):
+        comp = _replay(CompositePolicy(parts), cs.frame)
+        _assert_results_equal(bare, comp)
+
+
+# --------------------------------------------------------------------------- #
+# composite bit-identity: chunking, workers, batched vs scalar sequential
+# --------------------------------------------------------------------------- #
+def _random_composite_grid(rng):
+    """Random grids of composites (park+downscale, downscale+cap, 3-part)
+    mixed with their leaf constituents."""
+    grid = [NoOpPolicy()]
+    for _ in range(int(rng.integers(1, 3))):
+        n_dev = int(rng.choice([2, 4]))
+        park = ParkingPolicy(
+            pool=PoolConfig(n_devices=n_dev, policy=PoolPolicy.CONSOLIDATED,
+                            n_active=int(rng.integers(1, n_dev))),
+            resume_latency_s=float(rng.uniform(2.0, 40.0)))
+        down = DownscalePolicy(config=ControllerConfig(
+            threshold_x_s=float(rng.uniform(0.5, 8.0)),
+            cooldown_y_s=float(rng.uniform(1.0, 10.0)),
+            mode=rng.choice([DownscaleMode.SM_ONLY, DownscaleMode.SM_AND_MEM]),
+        ))
+        grid.append(CompositePolicy((park, down)))
+        grid.append(park)
+        grid.append(down)
+    cap = PowerCapPolicy(cap_fraction=float(rng.uniform(0.3, 0.9)))
+    grid.append(CompositePolicy((DownscalePolicy(), cap)))
+    if rng.random() < 0.5:
+        grid.append(CompositePolicy((
+            ParkingPolicy(pool=PoolConfig(n_devices=4,
+                                          policy=PoolPolicy.CONSOLIDATED,
+                                          n_active=2)),
+            DownscalePolicy(), cap)))
+    order = rng.permutation(len(grid))
+    return [grid[i] for i in order]
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=3, deadline=None)
+def test_batched_composite_matches_scalar_sequential(seed):
+    rng = np.random.default_rng(seed % 100000)
+    grid = _random_composite_grid(rng)
+    shard_s = int(rng.choice([300, 700, 1500]))
+    with tempfile.TemporaryDirectory() as d:
+        store = TelemetryStore(d)
+        generate_cluster(n_devices=6, horizon_s=1500,
+                         seed=int(rng.integers(0, 100)),
+                         store=store, shard_s=shard_s)
+        assert len({s["host"] for s in store.manifest["shards"]}) > 1
+        ref = run_sweep(store, grid, workers=1, min_job_duration_s=300,
+                        batched=False)
+        for workers in (1, 2):
+            bat = run_sweep(store, grid, workers=workers,
+                            min_job_duration_s=300, batched=True)
+            assert frontier_to_dict(bat) == frontier_to_dict(ref)
+
+
+def test_composite_chunking_bit_identical():
+    cs = generate_cluster(n_devices=4, horizon_s=2700, seed=21)
+    comp = CompositePolicy((
+        ParkingPolicy(pool=PoolConfig(n_devices=2,
+                                      policy=PoolPolicy.CONSOLIDATED,
+                                      n_active=1), resume_latency_s=9.0),
+        DownscalePolicy(config=ControllerConfig(threshold_x_s=1.0,
+                                                cooldown_y_s=2.0)),
+    ))
+    mono = _replay(comp, cs.frame)
+    for chunk_rows in (1, 97, 997):
+        _assert_results_equal(mono, _replay(comp, cs.frame, chunk=chunk_rows))
+    # batched replayer, chunked, same grid position
+    for chunk_rows in (97, 997):
+        rep = BatchedPolicyReplayer([comp], min_job_duration_s=300)
+        for chunk in cs.frame.iter_chunks(chunk_rows):
+            rep.update(chunk)
+        _assert_results_equal(mono, rep.finalize()[0])
+
+
+def test_composites_group_into_structure_batches():
+    pd = CompositePolicy((ParkingPolicy(pool=PoolConfig(
+        n_devices=4, policy=PoolPolicy.CONSOLIDATED, n_active=2)),
+        DownscalePolicy()))
+    pd2 = CompositePolicy((ParkingPolicy(pool=PoolConfig(
+        n_devices=8, policy=PoolPolicy.CONSOLIDATED, n_active=4)),
+        DownscalePolicy(config=ControllerConfig(threshold_x_s=2.0))))
+    dc = CompositePolicy((DownscalePolicy(), PowerCapPolicy()))
+    batches = make_batches([pd, dc, pd2, NoOpPolicy()])
+    names = [type(b).__name__ for b, _ in batches]
+    assert names == ["CompositeBatch", "CompositeBatch", "NoOpBatch"]
+    # same part structure -> same batch, grid order preserved
+    (b0, idx0), (b1, idx1), _ = batches
+    assert idx0 == [0, 2] and len(b0.policies) == 2
+    assert idx1 == [1]
+
+
+# --------------------------------------------------------------------------- #
+# per-part event pricing
+# --------------------------------------------------------------------------- #
+def test_composite_prices_each_parts_events_at_its_own_cost():
+    # device 1 of a 1-of-2 pool parks; alternating idle/active decades
+    # produce parking wakes AND downscale restores on the same stream
+    rows = []
+    for t in range(60):
+        active = (t // 10) % 2 == 0
+        rows.append({
+            "timestamp": float(t), "job_id": 3, "device_id": 1, "hostname": 0,
+            "program_resident": 1, "sm": 80.0 if active else 1.0,
+            "power": 250.0 if active else 105.0, "platform": 0,
+        })
+    frame = TelemetryFrame.from_rows(rows)
+    park = ParkingPolicy(pool=PoolConfig(n_devices=2,
+                                         policy=PoolPolicy.CONSOLIDATED,
+                                         n_active=1), resume_latency_s=7.0)
+    down = DownscalePolicy(config=ControllerConfig(threshold_x_s=1.0,
+                                                   cooldown_y_s=2.0))
+    comp = CompositePolicy((park, down))
+    from repro.core.power_model import get_platform
+    plat = get_platform("l40s")
+    prices = policy_event_prices(comp, plat)
+    assert len(prices) == 2
+    assert prices[0] == park.event_penalty_s(plat) == 7.0
+    assert prices[1] == down.event_penalty_s(plat)
+
+    res_comp = _replay(comp, frame, min_job_duration_s=0.0)
+    res_park = _replay(park, frame, min_job_duration_s=0.0)
+    res_down = _replay(down, frame, min_job_duration_s=0.0)
+    # parking wakes are unchanged by composition (parking runs first);
+    # each part's events are priced at that part's own per-event cost
+    assert res_park.wake_events == 2
+    counts = np.array([res_park.wake_events,
+                       res_comp.wake_events - res_park.wake_events])
+    assert res_comp.penalty_s == pytest.approx(
+        price_events(prices, counts))
+    # and the parking component alone contributes 2 * 7 s
+    assert res_comp.penalty_s >= 2 * 7.0
+    assert res_down.downscale_events > 0   # the stream does trigger downscale
+
+
+def test_composite_validation():
+    with pytest.raises(ValueError, match="at least one part"):
+        CompositePolicy(())
+    with pytest.raises(ValueError, match="Policy protocol"):
+        CompositePolicy((NoOpPolicy(), object()))
+
+
+def test_composite_frontier_roundtrip_and_label():
+    cs = generate_cluster(n_devices=2, horizon_s=1500, seed=23)
+    comp = CompositePolicy((
+        ParkingPolicy(pool=PoolConfig(n_devices=2,
+                                      policy=PoolPolicy.CONSOLIDATED,
+                                      n_active=1)),
+        DownscalePolicy(),
+    ))
+    frontier = sweep_frame(cs.frame, [NoOpPolicy(), comp],
+                           min_job_duration_s=300)
+    from repro.whatif import format_frontier, frontier_from_dict
+    payload = frontier_to_dict(frontier)
+    assert frontier_from_dict(payload) == frontier
+    text = format_frontier(frontier)
+    assert "parking 1-of-2" in text and "downscale" in text

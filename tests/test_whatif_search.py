@@ -1,0 +1,211 @@
+"""Closed-loop Pareto search: budget accounting, knee soundness, refinement,
+determinism, and the evaluate() kernel contract.
+"""
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.cluster import generate_cluster
+from repro.telemetry import TelemetryStore
+from repro.whatif import (CategoricalAxis, ContinuousAxis, PenaltyBudget,
+                          PolicyFamily, PowerCapPolicy, achievable_saving,
+                          default_families, evaluate, find_knee,
+                          frontier_to_dict, run_sweep, search_frontier)
+from repro.whatif.sweep import assemble_frontier
+
+
+@pytest.fixture(scope="module")
+def store_dir():
+    with tempfile.TemporaryDirectory() as d:
+        store = TelemetryStore(d)
+        generate_cluster(n_devices=8, horizon_s=2700, seed=3,
+                         store=store, shard_s=900)
+        assert len({s["host"] for s in store.manifest["shards"]}) > 1
+        yield d
+
+
+def _store(store_dir):
+    return TelemetryStore(store_dir)
+
+
+# --------------------------------------------------------------------------- #
+# evaluate(): the kernel contract
+# --------------------------------------------------------------------------- #
+def test_evaluate_matches_run_sweep_outcomes(store_dir):
+    store = _store(store_dir)
+    from repro.whatif import default_policy_grid
+    grid = default_policy_grid(dense=False)[:10]
+    outcomes = evaluate(grid, store, min_job_duration_s=0.0)
+    assert len(outcomes) == len(grid)
+    assert all(not o.pareto for o in outcomes)   # flags belong to sets
+    swept = run_sweep(store, grid, min_job_duration_s=0.0)
+    flagged = assemble_frontier(outcomes, swept.n_rows)
+    assert frontier_to_dict(flagged) == frontier_to_dict(swept)
+
+
+# --------------------------------------------------------------------------- #
+# search: budget, knee, convergence
+# --------------------------------------------------------------------------- #
+def test_search_respects_eval_budget_and_flags_pareto(store_dir):
+    store = _store(store_dir)
+    res = search_frontier(store, max_evals=50, min_job_duration_s=0.0)
+    assert res.n_evals <= 50
+    assert res.n_evals == len(res.frontier.outcomes)
+    assert res.n_rounds == len(res.history)
+    assert res.history[-1].n_evals_total == res.n_evals
+    # pareto soundness over everything evaluated
+    for o in res.frontier.pareto_set():
+        assert not any(
+            p.energy_saved_j >= o.energy_saved_j
+            and p.penalty_s <= o.penalty_s
+            and (p.energy_saved_j > o.energy_saved_j
+                 or p.penalty_s < o.penalty_s)
+            for p in res.frontier.outcomes)
+    # the noop anchor is present and untouched
+    noop = next(o for o in res.frontier.outcomes if o.name == "noop")
+    assert noop.energy_saved_j == 0.0 and noop.penalty_s == 0.0
+    # knee is on the front, and without a budget best == knee
+    assert res.knee.pareto
+    assert res.best == res.knee
+
+
+def test_search_refines_around_the_knee(store_dir):
+    store = _store(store_dir)
+    res = search_frontier(store, min_job_duration_s=0.0)
+    assert res.n_rounds >= 2                      # refinement happened
+    assert sum(r.n_new for r in res.history) == res.n_evals
+    coarse = res.history[0].n_evals_total
+    assert res.n_evals > coarse                   # beyond the coarse grids
+    # refinement improves (or maintains) the knee's saved energy
+    assert (res.history[-1].knee_saved_fraction
+            >= res.history[0].knee_saved_fraction)
+
+
+def test_search_budget_feasibility(store_dir):
+    store = _store(store_dir)
+    budget = PenaltyBudget(max_penalty_fraction=0.005)
+    res = search_frontier(store, budget=budget, min_job_duration_s=0.0)
+    assert res.best is not None
+    assert res.best.penalty_fraction <= 0.005
+    # best is the max-saving feasible config over everything evaluated
+    for o in res.frontier.outcomes:
+        if budget.feasible(o):
+            assert o.energy_saved_j <= res.best.energy_saved_j
+    # an impossible budget yields best=None (noop excluded by its own bound)
+    res2 = search_frontier(store, budget=PenaltyBudget(max_penalty_s=-0.0),
+                           include_noop=False, max_evals=40, max_rounds=1,
+                           min_job_duration_s=0.0)
+    assert all(not PenaltyBudget(max_penalty_s=-0.0).feasible(o)
+               or o.penalty_s == 0.0 for o in res2.frontier.outcomes)
+
+
+def test_search_deterministic_and_workers_bit_identical(store_dir):
+    store = _store(store_dir)
+    a = search_frontier(store, min_job_duration_s=0.0)
+    b = search_frontier(store, min_job_duration_s=0.0)
+    assert frontier_to_dict(a.frontier) == frontier_to_dict(b.frontier)
+    c = search_frontier(store, workers=2, min_job_duration_s=0.0)
+    assert frontier_to_dict(a.frontier) == frontier_to_dict(c.frontier)
+    assert a.knee.params == c.knee.params
+    assert a.n_evals == c.n_evals
+
+
+def test_search_tracks_dense_sweep_at_the_knee(store_dir):
+    """The acceptance property at test scale: the searched front's
+    achievable saving at its knee penalty is within tolerance of (or better
+    than) the dense 200-config sweep's at the same operating point."""
+    store = _store(store_dir)
+    res = search_frontier(store, families=default_families(composites=False),
+                          min_job_duration_s=0.0)
+    dense = run_sweep(store, min_job_duration_s=0.0)
+    at_knee_dense = achievable_saving(dense.outcomes, res.knee.penalty_s)
+    assert res.knee.saved_fraction >= at_knee_dense - 0.02
+    assert res.n_evals <= 100        # <= 50% of the 200-config dense grid
+
+
+# --------------------------------------------------------------------------- #
+# knee detection
+# --------------------------------------------------------------------------- #
+def test_find_knee_picks_the_elbow():
+    def out(saved, pen):
+        from repro.whatif import PolicyOutcome
+        return PolicyOutcome(
+            name="x", params={}, n_jobs=1, baseline_energy_j=100.0,
+            counterfactual_energy_j=100.0 - saved, energy_saved_j=saved,
+            saved_fraction=saved / 100.0, penalty_s=pen,
+            penalty_fraction=pen / 100.0, wake_events=0, downscale_events=0,
+            throttled_time_s=0.0, exec_idle_energy_fraction_baseline=0.0,
+            exec_idle_energy_fraction_cf=0.0, per_job_saved_fraction=(),
+            per_job_penalty_s=())
+    # a sharp elbow at (10, 9): near-vertical rise then a flat tail
+    outcomes = [out(0.0, 0.0), out(5.0, 4.0), out(9.0, 10.0),
+                out(9.5, 50.0), out(10.0, 100.0)]
+    knee = find_knee(outcomes)
+    assert knee.energy_saved_j == 9.0
+    # dominated points never win
+    outcomes.append(out(1.0, 90.0))
+    assert find_knee(outcomes).energy_saved_j == 9.0
+    # degenerate: single point
+    assert find_knee([out(3.0, 1.0)]).energy_saved_j == 3.0
+    with pytest.raises(ValueError):
+        find_knee([])
+
+
+def test_achievable_saving():
+    store = None
+    from repro.whatif import PolicyOutcome
+
+    def out(saved_frac, pen):
+        return PolicyOutcome(
+            name="x", params={}, n_jobs=1, baseline_energy_j=1.0,
+            counterfactual_energy_j=1.0, energy_saved_j=saved_frac,
+            saved_fraction=saved_frac, penalty_s=pen, penalty_fraction=0.0,
+            wake_events=0, downscale_events=0, throttled_time_s=0.0,
+            exec_idle_energy_fraction_baseline=0.0,
+            exec_idle_energy_fraction_cf=0.0,
+            per_job_saved_fraction=(), per_job_penalty_s=())
+    os_ = [out(0.1, 1.0), out(0.3, 5.0), out(0.2, 2.0)]
+    assert achievable_saving(os_, 2.5) == 0.2
+    assert achievable_saving(os_, 0.5) == 0.0
+    assert achievable_saving(os_, 10.0) == 0.3
+
+
+# --------------------------------------------------------------------------- #
+# family/axis validation and custom families
+# --------------------------------------------------------------------------- #
+def test_axis_validation():
+    with pytest.raises(ValueError, match="lo must be < hi"):
+        ContinuousAxis("x", 2.0, 1.0, coarse=(1.5,))
+    with pytest.raises(ValueError, match="log axis"):
+        ContinuousAxis("x", 0.0, 1.0, coarse=(0.5,), log=True)
+    with pytest.raises(ValueError, match="outside"):
+        ContinuousAxis("x", 1.0, 2.0, coarse=(3.0,))
+    with pytest.raises(ValueError, match="non-empty"):
+        CategoricalAxis("m", ())
+    with pytest.raises(ValueError, match="max_evals"):
+        search_frontier(None, max_evals=0)
+    with pytest.raises(ValueError, match=">= 0"):
+        PenaltyBudget(max_penalty_s=-1.0)
+
+
+def test_custom_single_family_search(store_dir):
+    store = _store(store_dir)
+    fam = PolicyFamily(
+        name="caps",
+        axes=(ContinuousAxis("cap_fraction", 0.3, 0.9,
+                             coarse=(0.3, 0.9), resolution=0.01),),
+        build=lambda pt: PowerCapPolicy(cap_fraction=pt["cap_fraction"]))
+    res = search_frontier(store, families=[fam], max_evals=20,
+                          min_job_duration_s=0.0)
+    assert res.n_evals <= 20
+    names = {o.name for o in res.frontier.outcomes}
+    assert names == {"noop", "powercap"}
+    # the midpoint refinement actually subdivided the cap axis
+    caps = sorted(o.params["cap_fraction"]
+                  for o in res.frontier.outcomes if o.name == "powercap")
+    assert len(caps) > 2
+    assert any(0.3 < c < 0.9 for c in caps)
+    # coarse grids exceeding the budget are rejected up front
+    with pytest.raises(ValueError, match="coarse grids"):
+        search_frontier(store, families=[fam], max_evals=2)
