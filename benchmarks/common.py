@@ -3,7 +3,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import time
 
 #: set by ``benchmarks.run --quick`` (CI): benches shrink their corpora and
 #: drop timing targets, keeping only correctness targets — the hot paths run
@@ -14,13 +13,14 @@ QUICK = False
 @dataclasses.dataclass
 class Row:
     name: str
-    us_per_call: float
+    us_per_call: float | None        # owning stage's wall time; None = n/a
     derived: float
     target: float | None = None
     ok: bool | None = None
 
     def csv(self) -> str:
-        return f"{self.name},{self.us_per_call:.1f},{self.derived:.6g}"
+        us = "" if self.us_per_call is None else f"{self.us_per_call:.1f}"
+        return f"{self.name},{us},{self.derived:.6g}"
 
 
 def check_abs(value: float, target: tuple[float, float]) -> bool:
@@ -33,25 +33,39 @@ def check_rel(value: float, target: tuple[float, float]) -> bool:
     return abs(value - mean) <= tol * abs(mean)
 
 
+def check_min(value: float, target: tuple[float, float]) -> bool:
+    """Regression floor: ok iff ``value >= floor`` (the tolerance slot is
+    unused — floors are one-sided)."""
+    floor, _ = target
+    return value >= floor
+
+
+_CHECKS = {"abs": check_abs, "rel": check_rel, "min": check_min}
+
+
 class Bench:
-    """Collects rows and wall time for one paper artifact."""
+    """Collects result rows for one paper artifact.
+
+    ``us_per_call`` records the row's *owning stage* wall time, passed
+    explicitly via ``seconds=`` by benches that timed a stage; derived
+    metrics (counts, ratios, pass/fail flags) leave it None/null — the old
+    behaviour of stamping cumulative harness wall-clock on every row made
+    the column meaningless for them.
+    """
 
     def __init__(self, name: str):
         self.name = name
         self.rows: list[Row] = []
-        self._t0 = time.time()
 
-    @property
-    def us(self) -> float:
-        return (time.time() - self._t0) * 1e6
-
-    def add(self, metric: str, value: float, target=None, mode="abs"):
+    def add(self, metric: str, value: float, target=None, mode="abs",
+            seconds: float | None = None):
         ok = None
         tval = None
         if target is not None:
             tval = target[0]
-            ok = check_abs(value, target) if mode == "abs" else check_rel(value, target)
-        self.rows.append(Row(f"{self.name}/{metric}", self.us, float(value),
+            ok = _CHECKS[mode](value, target)
+        us = None if seconds is None else seconds * 1e6
+        self.rows.append(Row(f"{self.name}/{metric}", us, float(value),
                              tval, ok))
 
     def summary(self) -> str:

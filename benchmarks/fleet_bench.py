@@ -103,9 +103,9 @@ def bench_fleet_analyze() -> Bench:
     b.add("n_groups", float(n_groups))
     if not quick:
         b.add("groups_target_64", float(n_groups >= 64), (1.0, 0.01))
-    b.add("masked_rows_per_s", n / t_masked)
-    b.add("grouped_rows_per_s", n / t_grouped)
-    b.add("streaming_rows_per_s", n / t_streaming)
+    b.add("masked_rows_per_s", n / t_masked, seconds=t_masked)
+    b.add("grouped_rows_per_s", n / t_grouped, seconds=t_grouped)
+    b.add("streaming_rows_per_s", n / t_streaming, seconds=t_streaming)
     speedup = t_masked / t_grouped
     b.add("speedup_grouped_vs_masked", speedup)
     b.add("speedup_target_3x", float(speedup >= 3.0),

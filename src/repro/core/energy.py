@@ -112,6 +112,7 @@ class BatchedStreamingIntegrator:
         self._pending: list[np.ndarray] = []   # [C, k] power of the pending run
         self._pending_n = 0
         self._collapsed = np.zeros(n_configs)  # prefix sum of an over-long run
+        self._run_energy: np.ndarray | None = None  # update_runs trailing run
         self._time: dict[DeviceState, int] = {s: 0 for s in DeviceState}
         self._energy: dict[DeviceState, np.ndarray] = {
             s: np.zeros(n_configs) for s in DeviceState}
@@ -147,6 +148,9 @@ class BatchedStreamingIntegrator:
         return e
 
     def update(self, states: np.ndarray, power_w: np.ndarray) -> None:
+        if self._run_energy is not None:
+            raise ValueError("update cannot follow update_runs() on one "
+                             "integrator: trailing-run state differs")
         states = np.asarray(states)
         power_w = np.asarray(power_w, dtype=np.float64)
         if power_w.ndim == 1:
@@ -186,8 +190,99 @@ class BatchedStreamingIntegrator:
                 self._pending_n = 0
         self.n_samples += states.size
 
+    def update_runs(self, states: np.ndarray, energy: np.ndarray,
+                    lengths: np.ndarray) -> None:
+        """Run-weighted update: fold pre-aggregated runs instead of samples.
+
+        The run-level IR fast path (:mod:`repro.whatif.ir`) feeds this with
+        ``states [R]`` (one state per run, consecutive duplicates allowed —
+        e.g. runs split on an orthogonal flag), ``energy [n_configs, R]``
+        (each run's power *sum* in W·samples, one row per config) and
+        ``lengths [R]`` (samples per run). Consecutive equal-state runs are
+        merged — including a trailing run carried across calls — so the
+        §2.2 sustain rule sees the same maximal runs :meth:`update` would
+        see on the expanded per-sample series: per-state *times* and the
+        sustained-interval list are **bit-identical** to the sample path
+        (integer sample counts), per-state *energies* agree up to float
+        summation order (the per-run sums arrive pre-reduced).
+
+        Do not mix with :meth:`update` on one instance: the two paths carry
+        different trailing-run state.
+        """
+        if self._pending or (self._carry.length and self._run_energy is None):
+            raise ValueError("update_runs cannot follow update() on one "
+                             "integrator: trailing-run state differs")
+        states = np.asarray(states)
+        lengths = np.asarray(lengths, dtype=np.int64)
+        energy = np.asarray(energy, dtype=np.float64)
+        if energy.ndim == 1:
+            energy = energy[None, :]
+        if energy.shape != (self.n_configs, states.shape[0]):
+            raise ValueError(f"energy {energy.shape} vs expected "
+                             f"({self.n_configs}, {states.shape[0]})")
+        if states.shape[0] != lengths.shape[0]:
+            raise ValueError(
+                f"states {states.shape} vs lengths {lengths.shape}")
+        if states.size == 0:
+            return
+        change = np.flatnonzero(np.diff(states)) + 1
+        starts = np.concatenate([[0], change])
+        m_state = states[starts]
+        m_len = np.add.reduceat(lengths, starts)
+        m_energy = np.add.reduceat(energy, starts, axis=1)
+        offsets = np.concatenate([[0], np.cumsum(m_len)])
+        gpos = self.n_samples           # global index of this call's sample 0
+        n_m = m_state.shape[0]
+        i0 = 0
+        if self._run_energy is not None and self._carry.state == int(m_state[0]):
+            # trailing run continues: extend it in place
+            self._carry.length += int(m_len[0])
+            self._run_energy = self._run_energy + m_energy[:, 0]
+            i0 = 1
+        if i0 < n_m:
+            self._flush_run_carry()     # old carry ended at a state change
+            last = n_m - 1
+            if i0 < last:
+                # bulk-close every new maximal run except the trailing one:
+                # per-state time/energy accumulate by masked sums (times are
+                # exact integer sums; energy grouping differs from the
+                # sample path only in float association)
+                cs = m_state[i0:last].astype(np.int64)
+                cl = m_len[i0:last]
+                ce = m_energy[:, i0:last]
+                cstart = gpos + offsets[i0:last]
+                exec_i = int(DeviceState.EXECUTION_IDLE)
+                final = np.where((cs == exec_i) & (cl < self.min_samples),
+                                 int(DeviceState.ACTIVE), cs)
+                for s in DeviceState:
+                    mask = final == int(s)
+                    if mask.any():
+                        self._time[s] += int(cl[mask].sum())
+                        self._energy[s] = (self._energy[s]
+                                           + ce[:, mask].sum(axis=1))
+                for i in np.flatnonzero((cs == exec_i)
+                                        & (cl >= self.min_samples)):
+                    self._intervals.append(Interval(
+                        DeviceState.EXECUTION_IDLE, int(cstart[i]),
+                        int(cstart[i] + cl[i])))
+            self._carry = RunCarry(int(m_state[last]),
+                                   gpos + int(offsets[last]),
+                                   int(m_len[last]))
+            self._run_energy = m_energy[:, last].copy()
+        self.n_samples += int(offsets[-1])
+
+    def _flush_run_carry(self) -> None:
+        if self._run_energy is None:
+            return
+        self._close_run(self._carry.state, self._carry.start,
+                        self._carry.start + self._carry.length,
+                        self._run_energy)
+        self._carry = RunCarry()
+        self._run_energy = None
+
     def finalize_batch(self) -> tuple[list[EnergyBreakdown], list[Interval]]:
         """Flush carried state; one :class:`EnergyBreakdown` per config."""
+        self._flush_run_carry()
         if self._carry.length:
             energy = self._pending_energy(None)
             self._close_run(self._carry.state, self._carry.start,
@@ -257,6 +352,33 @@ def integrate(
     si.update(states, power_w)
     breakdown, _ = si.finalize()
     return breakdown
+
+
+def integrate_runs(
+    states: np.ndarray,
+    energy: np.ndarray,
+    lengths: np.ndarray,
+    min_samples: int,
+    dt_s: float = 1.0,
+) -> list[EnergyBreakdown]:
+    """Integrate pre-aggregated runs: one breakdown per config row.
+
+    Single-call application of
+    :meth:`BatchedStreamingIntegrator.update_runs` — the run-level IR's
+    accounting primitive (``states [R]``, ``energy [C, R]`` per-run power
+    sums in W·samples, ``lengths [R]``). Per-state times are bit-identical
+    to sample-level integration of the expanded series; energies agree up
+    to float summation order.
+    """
+    energy = np.asarray(energy, dtype=np.float64)
+    if energy.ndim == 1:
+        energy = energy[None, :]
+    bi = BatchedStreamingIntegrator(n_configs=energy.shape[0],
+                                    min_duration_s=None, dt_s=dt_s)
+    bi.min_samples = int(min_samples)
+    bi.update_runs(states, energy, lengths)
+    breakdowns, _ = bi.finalize_batch()
+    return breakdowns
 
 
 def merge(breakdowns: list[EnergyBreakdown]) -> EnergyBreakdown:

@@ -11,6 +11,22 @@ Two shard formats behind one manifest:
 Append-oriented: writers append shards labelled (host, day) — possibly
 several per label, e.g. one per device or per flush — and a reader
 concatenates (or streams) shards in manifest order.
+
+Run-IR sidecars
+---------------
+Next to the shards, the what-if engine may persist **run-level IR
+sidecars** (``run_ir_<hash>.npz``, written by
+:func:`repro.whatif.ir.save_sidecar`): the store's rows collapsed, per
+(job, host, device) stream, into maximal runs of constant
+``(device_state, low_activity)`` — run table (state/low/length/power_sum),
+per-stream metadata (host label, platform, first timestamp, row/run
+counts) and the raw power samples — so repeat sweeps skip stream grouping,
+classification and run-length encoding entirely. Sidecars are keyed in the
+manifest under ``manifest["run_ir"][<classifier-config hash>]`` with the
+``source_rows`` they were built from: a different classifier config hashes
+to a different sidecar, and appending shards invalidates (``source_rows``
+no longer matches, so :func:`repro.whatif.ir.get_ir` rebuilds). Sidecars
+are derived data — deleting the files and the manifest key is always safe.
 """
 from __future__ import annotations
 
@@ -56,6 +72,24 @@ class TelemetryStore:
 
     def save_manifest(self) -> None:
         self._manifest_path.write_text(json.dumps(self.manifest, indent=1))
+
+    def merge_manifest_key(self, key: str, subkey: str, value) -> None:
+        """Atomically merge ``manifest[key][subkey] = value`` into the
+        **on-disk** manifest: re-read it fresh, update the one entry, and
+        temp-file + rename. For derived-data writers (run-IR sidecars) on a
+        store another process may be appending to — a plain
+        :meth:`save_manifest` would re-serialize this handle's possibly
+        stale snapshot and silently drop shards appended since it opened.
+        """
+        try:
+            current = json.loads(self._manifest_path.read_text())
+        except (OSError, ValueError):
+            current = self.manifest
+        current.setdefault(key, {})[subkey] = value
+        tmp = self._manifest_path.with_name(MANIFEST_NAME + ".tmp")
+        tmp.write_text(json.dumps(current, indent=1))
+        tmp.replace(self._manifest_path)
+        self.manifest.setdefault(key, {})[subkey] = value
 
     def write_shard(self, frame: TelemetryFrame, host: str = "host0",
                     day: int = 0, flush_manifest: bool = True) -> pathlib.Path:

@@ -38,10 +38,25 @@ from repro.whatif.policies import (  # noqa: F401
     PolicyBatch,
     PowerCapBatch,
     PowerCapPolicy,
+    RunBatchResult,
     batched_downscale_decisions,
     downscale_decisions,
+    downscale_trigger_index,
     low_activity_series,
     make_batches,
+)
+from repro.whatif.ir import (  # noqa: F401
+    IRBuilder,
+    IRConfig,
+    IRUnsupportedError,
+    RunIR,
+    StreamIR,
+    build_ir,
+    get_ir,
+    ir_config_for,
+    ir_supported,
+    load_sidecar,
+    save_sidecar,
 )
 from repro.whatif.replay import (  # noqa: F401
     BatchedPolicyReplayer,
@@ -49,6 +64,7 @@ from repro.whatif.replay import (  # noqa: F401
     PolicyReplayer,
     ReplayResult,
     replay_chunk,
+    replay_ir,
     replay_store,
 )
 from repro.whatif.sweep import (  # noqa: F401
@@ -72,6 +88,7 @@ from repro.whatif.search import (  # noqa: F401
     default_families,
     find_knee,
     search_frontier,
+    seed_points,
 )
 from repro.whatif.report import (  # noqa: F401
     format_frontier,

@@ -1,0 +1,714 @@
+"""Run-level telemetry IR: compact the row axis once, replay against runs.
+
+The paper's central observation — in-execution telemetry is dominated by
+long, near-constant low-activity stretches — makes per-second fleet
+telemetry extremely *run-compressible*. This module exploits that for the
+what-if stack: per (job, host, device) stream, the row series is collapsed
+once, under a given classifier + low-activity threshold pair, into maximal
+runs of constant ``(device_state, low_activity)`` with per-run sample
+counts and power sums (plus the raw power samples for the few aggregates
+that are nonlinear per sample — power-cap clipping, downscale floors).
+Policy grids then replay against the ``(n_configs, n_runs)`` axis instead
+of ``(n_configs, n_rows)``: downscale decisions, parking counterfactuals
+and cap thresholds are run-structured, so per-config cost drops from
+O(rows) to O(runs) ("compact once, replay many").
+
+Contracts mirrored from the row-exact reference path
+(:class:`repro.whatif.replay.BatchedPolicyReplayer`):
+
+* **time/count metrics are bit-identical** — per-state durations are
+  integer sample sums, decision sequences reduce to the same trigger
+  indices, event counts and throttled-sample counts are exact integers;
+* **energies/penalties agree to <= 1e-9 relative** — per-run power sums
+  are exact partial sums of the same samples, but the float summation
+  *order* differs from the sample-level integrator
+  (tests/test_whatif_ir.py property-tests the equivalence).
+
+The IR is cached in memory across sweep/search rounds and persisted as a
+sidecar file next to the store's ``npz``/``npy_dir`` shards, keyed by the
+:meth:`IRConfig.config_hash` in the manifest (``manifest["run_ir"]``), so
+repeat sweeps skip stream grouping, classification and run-length encoding
+entirely. Sidecars are invalidated when the classifier config changes (a
+different hash misses) or the store grows (``source_rows`` mismatch).
+
+Requirements: streams must be regularly sampled (``ts == ts[0] +
+dt_s*arange(n)`` exactly, per stream) — the run table stores offsets, not
+timestamps. Irregular streams raise :class:`IRUnsupportedError` and the
+callers (:func:`repro.whatif.sweep.evaluate`) fall back to the row path.
+
+Memory: unlike the row paths (peak ~ one shard), a resident IR holds the
+store's *power column* (~8 bytes/row, 1/25th of the full schema) plus the
+run tables and lazy per-stream aggregates — the price of O(runs)
+replays. The in-process cache is a small LRU (``_IR_CACHE_MAX``); for a
+corpus whose power column alone exceeds RAM, sweep with
+``compact=False`` to stay fully out-of-core.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import pathlib
+from typing import TYPE_CHECKING, Iterable, Mapping
+
+import numpy as np
+
+from repro.core.controller import ControllerConfig
+from repro.core.energy import EnergyBreakdown, integrate_runs
+from repro.core.states import (ClassifierConfig, DEFAULT_CLASSIFIER,
+                               DeviceState, classify_series)
+from repro.whatif.policies import (CompositePolicy, DownscalePolicy,
+                                   NoOpPolicy, ParkingPolicy, Policy,
+                                   PowerCapPolicy, low_activity_series)
+
+if TYPE_CHECKING:
+    from repro.telemetry.records import TelemetryFrame
+    from repro.telemetry.storage import TelemetryStore
+
+#: manifest key holding {config_hash: {"file", "source_rows", "config"}}
+MANIFEST_KEY = "run_ir"
+
+_DEEP = int(DeviceState.DEEP_IDLE)
+_EXEC = int(DeviceState.EXECUTION_IDLE)
+_ACTIVE = int(DeviceState.ACTIVE)
+
+
+class IRUnsupportedError(ValueError):
+    """The store/grid cannot be compacted; callers fall back to rows."""
+
+
+@dataclasses.dataclass(frozen=True)
+class IRConfig:
+    """Everything the run decomposition depends on.
+
+    ``classifier`` fixes the §2.2 device states; ``activity_threshold`` /
+    ``comm_threshold_gbs`` fix the Algorithm-1 low-activity predicate the
+    policies share (:func:`repro.whatif.policies.low_activity_series`);
+    ``dt_s`` fixes the sample spacing the run lengths are denominated in.
+    Policies whose knobs disagree with these are simply *unsupported* by an
+    IR built from this config (:func:`ir_supported`) — they replay through
+    the row path instead.
+    """
+
+    classifier: ClassifierConfig = DEFAULT_CLASSIFIER
+    activity_threshold: float = 0.05
+    comm_threshold_gbs: float = 1.0
+    dt_s: float = 1.0
+
+    def low_config(self) -> ControllerConfig:
+        return ControllerConfig(activity_threshold=self.activity_threshold,
+                                comm_threshold_gbs=self.comm_threshold_gbs)
+
+    def to_dict(self) -> dict:
+        return {
+            "classifier": dataclasses.asdict(self.classifier),
+            "activity_threshold": self.activity_threshold,
+            "comm_threshold_gbs": self.comm_threshold_gbs,
+            "dt_s": self.dt_s,
+        }
+
+    @staticmethod
+    def from_dict(d: Mapping) -> "IRConfig":
+        cls_d = dict(d["classifier"])
+        cls_d["compute_memory_signals"] = tuple(cls_d["compute_memory_signals"])
+        cls_d["communication_signals"] = tuple(cls_d["communication_signals"])
+        return IRConfig(
+            classifier=ClassifierConfig(**cls_d),
+            activity_threshold=d["activity_threshold"],
+            comm_threshold_gbs=d["comm_threshold_gbs"],
+            dt_s=d["dt_s"],
+        )
+
+    def config_hash(self) -> str:
+        payload = json.dumps(self.to_dict(), sort_keys=True)
+        return hashlib.sha256(payload.encode()).hexdigest()[:16]
+
+
+# --------------------------------------------------------------------------- #
+# Per-stream IR + lazily derived replay aggregates
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass
+class StreamIR:
+    """One stream's run table plus its power samples.
+
+    The run arrays are the *compact* axis every policy config iterates;
+    ``power`` keeps the raw samples so nonlinear per-sample aggregates
+    (cap clipping, downscale floors) stay exact — computed **once** per
+    stream (lazily, memoized in ``_cache``) and shared by every config and
+    every sweep/search round. ``_cache`` is dropped on pickling, so
+    process-pool workers rebuild their own aggregates.
+    """
+
+    key: tuple[int, int, int]        # (job_id, hostname, device_id)
+    host_label: str                  # manifest host label (partition unit)
+    platform_id: int
+    ts_first: float
+    dt_s: float
+    state: np.ndarray                # [R] int8  DeviceState per run
+    low: np.ndarray                  # [R] bool  Algorithm-1 low-activity flag
+    length: np.ndarray               # [R] int64 samples per run
+    power_sum: np.ndarray            # [R] f8    sum of board power over run
+    power: np.ndarray                # [N] f8    raw per-sample board power
+
+    def __post_init__(self) -> None:
+        self._cache: dict = {}
+
+    def __getstate__(self):
+        d = dict(self.__dict__)
+        d["_cache"] = {}
+        return d
+
+    # ------------------------------------------------------------------ #
+    @property
+    def n_rows(self) -> int:
+        return int(self.power.shape[0])
+
+    @property
+    def n_runs(self) -> int:
+        return int(self.state.shape[0])
+
+    @property
+    def ts_last(self) -> float:
+        return float(self.ts_first + self.dt_s * (self.n_rows - 1))
+
+    def _memo(self, key, fn):
+        hit = self._cache.get(key)
+        if hit is None:
+            hit = self._cache[key] = fn()
+        return hit
+
+    def run_offsets(self) -> np.ndarray:
+        """[R+1] sample offset of each run (cumulative lengths)."""
+        return self._memo("off", lambda: np.concatenate(
+            [[0], np.cumsum(self.length)]).astype(np.int64))
+
+    def ts(self) -> np.ndarray:
+        """Reconstructed per-sample timestamps (regularity is validated at
+        build time, so this equals the recorded column bit-for-bit)."""
+        return self._memo("ts", lambda: self.ts_first
+                          + self.dt_s * np.arange(self.n_rows))
+
+    def resident_runs(self) -> np.ndarray:
+        """[R] bool — a program is resident (state is not DEEP_IDLE)."""
+        return self._memo("res", lambda: self.state != _DEEP)
+
+    def cum_resident(self) -> np.ndarray:
+        """[N+1] prefix counts of resident samples (exact throttle counts)."""
+        def build():
+            res = np.repeat(self.resident_runs(), self.length)
+            return np.concatenate([[0], np.cumsum(res)]).astype(np.int64)
+        return self._memo("cumres", build)
+
+    def expand(self) -> tuple[np.ndarray, np.ndarray]:
+        """Per-sample ``(states, low)`` — the inverse of the run-length
+        encoding (round-trip tested in tests/test_whatif_ir.py)."""
+        return (np.repeat(self.state, self.length),
+                np.repeat(self.low, self.length))
+
+    # ------------------------------------------------------------------ #
+    def final_state(self, min_samples: int) -> np.ndarray:
+        """[R] the state each run's samples are *accounted* under: maximal
+        same-state runs (merging across the low flag) shorter than the §2.2
+        sustain threshold relabel EXECUTION_IDLE -> ACTIVE, exactly as the
+        streaming integrator does."""
+        def build():
+            change = np.flatnonzero(np.diff(self.state)) + 1
+            starts = np.concatenate([[0], change])
+            m_state = self.state[starts].astype(np.int64)
+            m_len = np.add.reduceat(self.length, starts)
+            m_final = np.where((m_state == _EXEC) & (m_len < min_samples),
+                               _ACTIVE, m_state)
+            reps = np.diff(np.concatenate([starts, [self.n_runs]]))
+            return np.repeat(m_final, reps).astype(np.int8)
+        return self._memo(("final", min_samples), build)
+
+    def sample_final_state(self, min_samples: int) -> np.ndarray:
+        return self._memo(("sfinal", min_samples), lambda: np.repeat(
+            self.final_state(min_samples), self.length))
+
+    def baseline(self, min_samples: int) -> EnergyBreakdown:
+        """Recorded-series breakdown from run aggregates: per-state times
+        bit-identical to the sample integrator, energies within summation
+        order."""
+        return self._memo(("base", min_samples), lambda: integrate_runs(
+            self.state, self.power_sum[None, :], self.length,
+            min_samples, self.dt_s)[0])
+
+    def controller_runs(self) -> tuple[np.ndarray, np.ndarray]:
+        """Maximal runs of the low-activity flag (the Algorithm-1 axis):
+        ``(offsets [K+1] sample indices, low [K])``. Adjacent IR runs with
+        equal ``low`` but different state merge here — the controller sees
+        only the flag."""
+        def build():
+            change = np.flatnonzero(np.diff(self.low)) + 1
+            starts = np.concatenate([[0], change]).astype(np.int64)
+            off = self.run_offsets()[np.concatenate(
+                [starts, [self.n_runs]])]
+            return off, self.low[starts]
+        return self._memo("crs", build)
+
+    def downscale_cums(self, delta: float, deep_idle_w: float,
+                       min_samples: int) -> tuple[np.ndarray, np.ndarray]:
+        """Per-sample prefix sums of the downscale saving
+        ``power - max(power - delta, deep_idle_w)`` on resident samples,
+        split by the accounting state bucket: ``(cum_exec [N+1],
+        cum_active [N+1])``. One O(N) pass per (platform delta, sustain
+        threshold), shared by every config and round."""
+        def build():
+            p = self.power
+            sav = p - np.maximum(p - delta, deep_idle_w)
+            sav = np.where(np.repeat(self.resident_runs(), self.length),
+                           sav, 0.0)
+            fs = self.sample_final_state(min_samples)
+            cum_exec = np.concatenate(
+                [[0.0], np.cumsum(np.where(fs == _EXEC, sav, 0.0))])
+            cum_act = np.concatenate(
+                [[0.0], np.cumsum(np.where(fs == _ACTIVE, sav, 0.0))])
+            return cum_exec, cum_act
+        return self._memo(("dscum", float(delta), float(deep_idle_w),
+                           min_samples), build)
+
+    def cap_buckets(self, min_samples: int) -> dict:
+        """Sorted-power aggregates for power capping, one O(N log N) build
+        shared by every cap fraction:
+
+        * per accounting state ``s``: ``(sorted_p ascending, top_sum)``
+          where ``top_sum[k]`` is the sum of the k largest samples — so a
+          cap's clipped energy is ``bucket_sum - (top_sum[k] - k*cap_w)``
+          with ``k = #{p > cap_w}`` found by one vectorized searchsorted;
+        * ``"penalty"``: the resident & not-low samples (the cube-law
+          slowdown base), with ``top_cbrt[k]`` the sum of the k largest
+          samples' cube roots.
+        """
+        def build():
+            fs = self.sample_final_state(min_samples)
+            out = {}
+            for s in (_DEEP, _EXEC, _ACTIVE):
+                sp = np.sort(self.power[fs == s])
+                top = np.concatenate([[0.0], np.cumsum(sp[::-1])])
+                out[s] = (sp, top)
+            pen_mask = np.repeat(self.resident_runs() & ~self.low,
+                                 self.length)
+            sp = np.sort(self.power[pen_mask])
+            top = np.concatenate([[0.0], np.cumsum(sp[::-1])])
+            top_cbrt = np.concatenate([[0.0], np.cumsum(np.cbrt(sp[::-1]))])
+            out["penalty"] = (sp, top, top_cbrt)
+            return out
+        return self._memo(("caps", min_samples), build)
+
+    def parking_counterfactual(self, min_samples: int) -> dict:
+        """The one counterfactual every parked config shares: idle samples
+        (resident & low) drop to deep-idle residency. Returns per-run cf
+        states / energies plus exact wake and idle-sample counts. The
+        deep-idle *power value* is platform-dependent, so energies are
+        returned as ``(power_sum part, idle-sample count)`` for the caller
+        to price: ``energy = keep_sum + idle_len * deep_idle_w`` per run.
+        """
+        def build():
+            idle = self.resident_runs() & self.low
+            active = self.resident_runs() & ~self.low
+            cf_state = np.where(idle, _DEEP, self.state).astype(np.int8)
+            keep_sum = np.where(idle, 0.0, self.power_sum)
+            idle_len = np.where(idle, self.length, 0).astype(np.int64)
+            wakes = int(np.sum(idle[:-1] & active[1:]))
+            return {"cf_state": cf_state, "keep_sum": keep_sum,
+                    "idle_len": idle_len, "wakes": wakes,
+                    "idle_samples": int(np.sum(idle_len))}
+        return self._memo(("park", min_samples), build)
+
+
+# --------------------------------------------------------------------------- #
+# Fleet-level IR
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass
+class RunIR:
+    """The whole store's run-level IR: one :class:`StreamIR` per
+    job-attributed stream, plus the build config and the store row count it
+    was built from (staleness check)."""
+
+    config: IRConfig
+    streams: dict[tuple[int, int, int], StreamIR]
+    source_rows: int
+
+    @property
+    def n_rows(self) -> int:
+        return sum(s.n_rows for s in self.streams.values())
+
+    @property
+    def n_runs(self) -> int:
+        return sum(s.n_runs for s in self.streams.values())
+
+    @property
+    def compaction_ratio(self) -> float:
+        runs = self.n_runs
+        return self.n_rows / runs if runs else float("nan")
+
+    def select(self, hosts: Iterable[str] | None = None) -> list[StreamIR]:
+        """Streams in sorted-key order, optionally host-label filtered."""
+        host_set = set(hosts) if hosts is not None else None
+        return [self.streams[k] for k in sorted(self.streams)
+                if host_set is None
+                or self.streams[k].host_label in host_set]
+
+
+# --------------------------------------------------------------------------- #
+# Builder (streaming, mergeable — same partition contract as the replayers)
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass
+class _StreamAccum:
+    host_label: str
+    platform_id: int
+    ts_first: float
+    n_seen: int = 0
+    run_state: list = dataclasses.field(default_factory=list)
+    run_low: list = dataclasses.field(default_factory=list)
+    run_len: list = dataclasses.field(default_factory=list)
+    run_sum: list = dataclasses.field(default_factory=list)
+    power_pieces: list = dataclasses.field(default_factory=list)
+    # trailing, possibly-unfinished run
+    t_state: int = -1
+    t_low: bool = False
+    t_len: int = 0
+    t_sum: float = 0.0
+
+
+class IRBuilder:
+    """Build a :class:`RunIR` from time-ordered telemetry chunks.
+
+    Same streaming contract as the replayers (chunks may mix streams; per
+    stream they arrive in time order), one classification + low-activity
+    pass + run-length encoding per chunk — this is the *only* O(rows) work
+    the compact path ever does, paid once per (store, IRConfig).
+    ``merge`` absorbs a builder that saw a disjoint stream set (the
+    process-pool reduction).
+    """
+
+    def __init__(self, config: IRConfig):
+        self.config = config
+        self._low_cfg = config.low_config()
+        self._acc: dict[tuple[int, int, int], _StreamAccum] = {}
+
+    def update(self, chunk: "TelemetryFrame", host_label: str = "") -> None:
+        if len(chunk) == 0:
+            return
+        for key, seg in chunk.group_streams():
+            if key[0] < 0:
+                continue
+            self._update_segment(key, seg, host_label)
+
+    def _update_segment(self, key, seg, host_label: str) -> None:
+        n = len(seg)
+        ts = np.asarray(seg["timestamp"], dtype=np.float64)
+        acc = self._acc.get(key)
+        if acc is None:
+            acc = self._acc[key] = _StreamAccum(
+                host_label=host_label,
+                platform_id=int(seg["platform"][0]),
+                ts_first=float(ts[0]))
+        expected = acc.ts_first + self.config.dt_s * np.arange(
+            acc.n_seen, acc.n_seen + n)
+        if not np.array_equal(ts, expected):
+            raise IRUnsupportedError(
+                f"stream {key} is not regularly sampled at dt={self.config.dt_s}"
+                f" (run-level IR stores offsets, not timestamps); replay this "
+                f"store with compact=False")
+        states = classify_series(
+            seg["program_resident"].astype(bool),
+            seg.activity_pct(),
+            seg.comm_gbs(),
+            self.config.classifier,
+        )
+        low = low_activity_series(seg, self._low_cfg)
+        power = np.asarray(seg["power"], dtype=np.float64)
+        acc.power_pieces.append(power)
+        acc.n_seen += n
+
+        code = states.astype(np.int16) * 2 + low
+        change = np.flatnonzero(np.diff(code)) + 1
+        starts = np.concatenate([[0], change]).astype(np.int64)
+        ends = np.concatenate([change, [n]]).astype(np.int64)
+        sums = np.add.reduceat(power, starts)
+        first = 0
+        if acc.t_len and acc.t_state == int(states[0]) \
+                and acc.t_low == bool(low[0]):
+            acc.t_len += int(ends[0] - starts[0])
+            acc.t_sum += float(sums[0])
+            first = 1
+        for i in range(first, starts.shape[0]):
+            if acc.t_len:
+                acc.run_state.append(acc.t_state)
+                acc.run_low.append(acc.t_low)
+                acc.run_len.append(acc.t_len)
+                acc.run_sum.append(acc.t_sum)
+            acc.t_state = int(states[starts[i]])
+            acc.t_low = bool(low[starts[i]])
+            acc.t_len = int(ends[i] - starts[i])
+            acc.t_sum = float(sums[i])
+
+    def merge(self, other: "IRBuilder") -> "IRBuilder":
+        overlap = self._acc.keys() & other._acc.keys()
+        if overlap:
+            raise ValueError(f"cannot merge IR builders with overlapping "
+                             f"streams: {sorted(overlap)[:3]}...")
+        if other.config != self.config:
+            raise ValueError("cannot merge IR builders with different configs")
+        self._acc.update(other._acc)
+        return self
+
+    def finalize(self, source_rows: int = 0) -> RunIR:
+        streams: dict[tuple[int, int, int], StreamIR] = {}
+        for key in sorted(self._acc):
+            acc = self._acc[key]
+            if acc.t_len:
+                acc.run_state.append(acc.t_state)
+                acc.run_low.append(acc.t_low)
+                acc.run_len.append(acc.t_len)
+                acc.run_sum.append(acc.t_sum)
+                acc.t_len = 0
+            streams[key] = StreamIR(
+                key=key,
+                host_label=acc.host_label,
+                platform_id=acc.platform_id,
+                ts_first=acc.ts_first,
+                dt_s=self.config.dt_s,
+                state=np.array(acc.run_state, dtype=np.int8),
+                low=np.array(acc.run_low, dtype=bool),
+                length=np.array(acc.run_len, dtype=np.int64),
+                power_sum=np.array(acc.run_sum, dtype=np.float64),
+                power=(np.concatenate(acc.power_pieces)
+                       if acc.power_pieces else np.empty(0)),
+            )
+        self._acc.clear()
+        return RunIR(config=self.config, streams=streams,
+                     source_rows=source_rows)
+
+
+def _build_partition(root: str, shard_files: list[str], config: IRConfig,
+                     mmap: bool) -> IRBuilder:
+    """Process-pool worker body (module-level picklable)."""
+    from repro.telemetry.storage import TelemetryStore
+    store = TelemetryStore(root)
+    host_of = {s["file"]: s["host"] for s in store.manifest["shards"]}
+    builder = IRBuilder(config)
+    for name in shard_files:
+        builder.update(store.read_shard(name, mmap=mmap),
+                       host_label=host_of[name])
+    return builder
+
+
+def build_ir(store: "TelemetryStore", config: IRConfig | None = None,
+             workers: int = 1, mmap: bool = False) -> RunIR:
+    """One O(rows) pass over the store: group, classify, low-flag, RLE.
+
+    ``workers > 1`` partitions by host label exactly like the sweep; the
+    result is identical for any worker count (per-stream decomposition is
+    independent, streams are reassembled in sorted order).
+    """
+    from repro.telemetry.pipeline import map_shard_partitions
+    config = config or IRConfig()
+    builder = map_shard_partitions(
+        store, None, workers, _build_partition, (config, mmap),
+        merge=lambda a, b: a.merge(b))
+    return builder.finalize(source_rows=store.total_rows)
+
+
+# --------------------------------------------------------------------------- #
+# Policy support
+# --------------------------------------------------------------------------- #
+def _low_pair(policy: Policy) -> tuple[float, float] | None:
+    if isinstance(policy, (DownscalePolicy, ParkingPolicy, PowerCapPolicy)):
+        return (policy.config.activity_threshold,
+                policy.config.comm_threshold_gbs)
+    if isinstance(policy, CompositePolicy):
+        pairs = {_low_pair(p) for p in policy.parts}
+        pairs.discard(None)
+        if len(pairs) == 1:
+            return next(iter(pairs))
+    return None
+
+
+def ir_supported(policy: Policy, config: IRConfig) -> bool:
+    """Can ``policy`` replay against an IR built with ``config``?
+
+    Leaf families must share the IR's low-activity thresholds (the run
+    decomposition bakes the flag in); composites must be the known
+    parking-then-downscale shape (each part's effect stays run-structured
+    because they touch disjoint residency); anything else — custom policies,
+    other composite orders — replays through the row path.
+    """
+    pair = (config.activity_threshold, config.comm_threshold_gbs)
+    if isinstance(policy, NoOpPolicy):
+        return True
+    if isinstance(policy, (DownscalePolicy, ParkingPolicy, PowerCapPolicy)):
+        return _low_pair(policy) == pair
+    if isinstance(policy, CompositePolicy):
+        return (len(policy.parts) == 2
+                and isinstance(policy.parts[0], ParkingPolicy)
+                and isinstance(policy.parts[1], DownscalePolicy)
+                and _low_pair(policy) == pair)
+    return False
+
+
+def ir_config_for(policies: Iterable[Policy],
+                  classifier: ClassifierConfig = DEFAULT_CLASSIFIER,
+                  dt_s: float = 1.0) -> IRConfig:
+    """The :class:`IRConfig` covering the most grid configs: the modal
+    low-threshold pair among the policies (ties broken deterministically
+    by pair value); configs on other pairs fall back to the row path."""
+    counts: dict[tuple[float, float], int] = {}
+    for p in policies:
+        pair = _low_pair(p)
+        if pair is not None:
+            counts[pair] = counts.get(pair, 0) + 1
+    if not counts:
+        pair = (ControllerConfig.activity_threshold,
+                ControllerConfig.comm_threshold_gbs)
+    else:
+        pair = max(sorted(counts), key=lambda k: counts[k])
+    return IRConfig(classifier=classifier, activity_threshold=pair[0],
+                    comm_threshold_gbs=pair[1], dt_s=dt_s)
+
+
+# --------------------------------------------------------------------------- #
+# Sidecar persistence (next to the store's shards, keyed in the manifest)
+# --------------------------------------------------------------------------- #
+def sidecar_name(config: IRConfig) -> str:
+    return f"run_ir_{config.config_hash()}.npz"
+
+
+def save_sidecar(ir: RunIR, store: "TelemetryStore") -> pathlib.Path:
+    """Persist the IR next to the shards and key it in the manifest.
+
+    Format: one compressed ``.npz`` holding the stream table (keys, host
+    labels, platforms, first timestamps, run/sample counts), the
+    concatenated run arrays (state/low/length/power_sum) and the
+    concatenated power samples; ``meta`` embeds the :class:`IRConfig` and
+    the source row count. ``manifest["run_ir"][hash]`` points at the file —
+    a changed classifier config hashes to a different sidecar, an appended
+    store invalidates via ``source_rows``.
+    """
+    streams = [ir.streams[k] for k in sorted(ir.streams)]
+    meta = json.dumps({"config": ir.config.to_dict(),
+                       "source_rows": ir.source_rows})
+    arrays = {
+        "meta": np.array(meta),
+        "job": np.array([s.key[0] for s in streams], dtype=np.int64),
+        "host": np.array([s.key[1] for s in streams], dtype=np.int64),
+        "dev": np.array([s.key[2] for s in streams], dtype=np.int64),
+        "host_label": np.array([s.host_label for s in streams]),
+        "platform": np.array([s.platform_id for s in streams], dtype=np.int64),
+        "ts_first": np.array([s.ts_first for s in streams]),
+        "n_runs": np.array([s.n_runs for s in streams], dtype=np.int64),
+        "n_rows": np.array([s.n_rows for s in streams], dtype=np.int64),
+        "state": (np.concatenate([s.state for s in streams])
+                  if streams else np.empty(0, np.int8)),
+        "low": (np.concatenate([s.low for s in streams])
+                if streams else np.empty(0, bool)),
+        "length": (np.concatenate([s.length for s in streams])
+                   if streams else np.empty(0, np.int64)),
+        "power_sum": (np.concatenate([s.power_sum for s in streams])
+                      if streams else np.empty(0)),
+        "power": (np.concatenate([s.power for s in streams])
+                  if streams else np.empty(0)),
+    }
+    name = sidecar_name(ir.config)
+    path = store.root / name
+    np.savez_compressed(path, **arrays)
+    entry = {"file": name, "source_rows": ir.source_rows,
+             "config": ir.config.to_dict()}
+    # atomic single-key merge: a concurrent appender's shard entries must
+    # survive this derived-data write (see TelemetryStore.merge_manifest_key)
+    store.merge_manifest_key(MANIFEST_KEY, ir.config.config_hash(), entry)
+    return path
+
+
+def load_sidecar(store: "TelemetryStore",
+                 config: IRConfig) -> RunIR | None:
+    """Load a sidecar if a *fresh* one exists: the manifest must key this
+    config's hash and the persisted ``source_rows`` must still equal the
+    store's row count (an appended store silently invalidates)."""
+    entry = store.manifest.get(MANIFEST_KEY, {}).get(config.config_hash())
+    if entry is None:
+        return None
+    if int(entry["source_rows"]) != store.total_rows:
+        return None
+    path = store.root / entry["file"]
+    if not path.exists():
+        return None
+    with np.load(path, allow_pickle=False) as z:
+        meta = json.loads(str(z["meta"]))
+        loaded_cfg = IRConfig.from_dict(meta["config"])
+        if loaded_cfg != config:
+            return None
+        run_off = np.concatenate([[0], np.cumsum(z["n_runs"])]).astype(np.int64)
+        row_off = np.concatenate([[0], np.cumsum(z["n_rows"])]).astype(np.int64)
+        streams: dict[tuple[int, int, int], StreamIR] = {}
+        for i in range(z["job"].shape[0]):
+            r0, r1 = run_off[i], run_off[i + 1]
+            p0, p1 = row_off[i], row_off[i + 1]
+            key = (int(z["job"][i]), int(z["host"][i]), int(z["dev"][i]))
+            streams[key] = StreamIR(
+                key=key,
+                host_label=str(z["host_label"][i]),
+                platform_id=int(z["platform"][i]),
+                ts_first=float(z["ts_first"][i]),
+                dt_s=config.dt_s,
+                state=z["state"][r0:r1].astype(np.int8),
+                low=z["low"][r0:r1].astype(bool),
+                length=z["length"][r0:r1].astype(np.int64),
+                power_sum=np.array(z["power_sum"][r0:r1]),
+                power=np.array(z["power"][p0:p1]),
+            )
+    return RunIR(config=config, streams=streams,
+                 source_rows=int(meta["source_rows"]))
+
+
+#: in-process cache: (resolved store root, config hash) -> RunIR. An IR
+#: pins the store's power column (~8 bytes/row) plus the run tables in
+#: memory, so the cache is a small LRU rather than unbounded.
+_IR_CACHE: dict[tuple[str, str], RunIR] = {}
+_IR_CACHE_MAX = 4
+#: negative cache: builds that raised IRUnsupportedError, keyed with the
+#: row count they failed at — a search over an irregular store fails the
+#: build once, not once per refinement round
+_IR_UNSUPPORTED: dict[tuple[str, str], tuple[int, str]] = {}
+
+
+def get_ir(store: "TelemetryStore", config: IRConfig | None = None,
+           workers: int = 1, mmap: bool = False,
+           persist: bool = True) -> RunIR:
+    """The IR acquisition ladder: in-memory cache, then sidecar, then a
+    fresh build (persisted back as a sidecar unless ``persist=False`` or
+    the store root is not writable). Every level validates freshness
+    against ``store.total_rows``; a store whose build failed
+    (:class:`IRUnsupportedError`, e.g. irregular sampling) re-raises from
+    a negative cache until the store changes, so callers that fall back to
+    the row path don't pay a doomed O(rows) build per call."""
+    config = config or IRConfig()
+    cache_key = (str(pathlib.Path(store.root).resolve()),
+                 config.config_hash())
+    failed = _IR_UNSUPPORTED.get(cache_key)
+    if failed is not None and failed[0] == store.total_rows:
+        raise IRUnsupportedError(failed[1])
+    ir = _IR_CACHE.get(cache_key)
+    if ir is not None and ir.source_rows == store.total_rows:
+        _IR_CACHE.pop(cache_key)
+        _IR_CACHE[cache_key] = ir       # refresh LRU recency
+        return ir
+    ir = load_sidecar(store, config)
+    if ir is None:
+        try:
+            ir = build_ir(store, config, workers=workers, mmap=mmap)
+        except IRUnsupportedError as e:
+            _IR_UNSUPPORTED[cache_key] = (store.total_rows, str(e))
+            raise
+        if persist:
+            try:
+                save_sidecar(ir, store)
+            except OSError:
+                pass                    # read-only store: memory cache only
+    _IR_CACHE.pop(cache_key, None)
+    _IR_CACHE[cache_key] = ir
+    while len(_IR_CACHE) > _IR_CACHE_MAX:      # LRU: dicts keep insert order
+        _IR_CACHE.pop(next(iter(_IR_CACHE)))
+    return ir

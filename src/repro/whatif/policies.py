@@ -32,14 +32,17 @@ replay.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Protocol, Sequence, runtime_checkable
 
 import numpy as np
 
 from repro.core.controller import ControllerConfig, DownscaleMode
+from repro.core.energy import EnergyBreakdown, integrate_runs
 from repro.core.imbalance import PoolConfig
 from repro.core.power_model import ClockLevel, PlatformSpec
-from repro.core.states import COMMUNICATION_SIGNALS, COMPUTE_SIGNALS
+from repro.core.states import (COMMUNICATION_SIGNALS, COMPUTE_SIGNALS,
+                               DeviceState)
 from repro.telemetry.records import TelemetryFrame
 from repro.whatif.effects import (BatchEffect, SegmentEffect, compose,
                                   effect_view, identity_effect,
@@ -572,6 +575,10 @@ class NoOpBatch:
                     dt_s: float = 1.0) -> tuple[BatchEffect, None]:
         return _identity_effect(len(seg), len(self.policies)), None
 
+    def apply_runs(self, stream, plat: PlatformSpec, min_samples: int,
+                   dt_s: float) -> "RunBatchResult":
+        return _identity_run_result(len(self.policies))
+
 
 @dataclasses.dataclass
 class BatchDownscaleCarry:
@@ -679,6 +686,7 @@ class DownscaleBatch:
                            np.array([p.config.threshold_x_s for p in pols]))
         object.__setattr__(self, "_y",
                            np.array([p.config.cooldown_y_s for p in pols]))
+        object.__setattr__(self, "_trig", _trigger_indices(self._eps, self._x))
         object.__setattr__(self, "_delta_cache", {})
 
     def init_carry(self) -> BatchDownscaleCarry:
@@ -722,6 +730,25 @@ class DownscaleBatch:
             wake_events=n_rest,
             downscale_events=n_down,
         ), carry
+
+    def apply_runs(self, stream, plat: PlatformSpec, min_samples: int,
+                   dt_s: float) -> "RunBatchResult":
+        """Whole-stream replay against the run axis: O(low runs) decisions
+        for the whole family, savings gathered from shared prefix sums —
+        no ``(n_configs, n_samples)`` block is ever built."""
+        n_cfg = len(self.policies)
+        n_down, n_rest, throttled, sav_exec, sav_act = _run_downscale(
+            stream, plat, min_samples, dt_s, self._eps, self._x, self._y,
+            self._trig, self._delta(plat))
+        base = stream.baseline(min_samples)
+        return RunBatchResult(
+            row_of=np.arange(n_cfg, dtype=np.int64),
+            cf_rows=_downscale_breakdowns(base, sav_exec, sav_act, dt_s),
+            penalty_partial_s=np.zeros(n_cfg),
+            wake_events=n_rest,
+            downscale_events=n_down,
+            throttled_samples=throttled,
+        )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -772,6 +799,29 @@ class ParkingBatch:
             downscale_events=np.zeros(n_cfg, dtype=np.int64),
         ), ParkCarry(prev_idle=bool(idle[-1]))
 
+    def apply_runs(self, stream, plat: PlatformSpec, min_samples: int,
+                   dt_s: float) -> "RunBatchResult":
+        """Run-level parking: the parked counterfactual is pure run algebra
+        (idle runs drop to deep-idle power and residency; wakes are
+        idle-to-active run adjacencies), and — as in the row path — every
+        parked config shares the one counterfactual breakdown."""
+        n_cfg = len(self.policies)
+        dev = stream.key[2]
+        parked = np.array([dev % nd not in act for nd, act in self._pools],
+                          dtype=bool)
+        if not parked.any():
+            return _identity_run_result(n_cfg)
+        bd, pk = _parking_breakdown(stream, plat, min_samples, dt_s)
+        return RunBatchResult(
+            row_of=np.where(parked, 0, -1).astype(np.int64),
+            cf_rows=[bd],
+            penalty_partial_s=np.zeros(n_cfg),
+            wake_events=np.where(parked, pk["wakes"], 0).astype(np.int64),
+            downscale_events=np.zeros(n_cfg, dtype=np.int64),
+            throttled_samples=np.where(parked, pk["idle_samples"],
+                                       0).astype(np.int64),
+        )
+
 
 @dataclasses.dataclass(frozen=True)
 class PowerCapBatch:
@@ -815,6 +865,43 @@ class PowerCapBatch:
             wake_events=np.zeros(n_cfg, dtype=np.int64),
             downscale_events=np.zeros(n_cfg, dtype=np.int64),
         ), None
+
+    def apply_runs(self, stream, plat: PlatformSpec, min_samples: int,
+                   dt_s: float) -> "RunBatchResult":
+        """Every cap fraction against sorted-power prefix structures: a
+        cap's clipped energy, throttle count and cube-law penalty are each
+        one vectorized ``searchsorted`` per accounting bucket — O(log n)
+        per config after a shared O(n log n) build, instead of an
+        O(n_samples) ``minimum``/``cbrt`` pass per config."""
+        n_cfg = len(self.policies)
+        caps = self._fracs * plat.tdp_w
+        buckets = stream.cap_buckets(min_samples)
+        base = stream.baseline(min_samples)
+        throttled = np.zeros(n_cfg, dtype=np.int64)
+        energy_cf: dict[DeviceState, np.ndarray] = {}
+        for s in DeviceState:
+            sorted_p, top_sum = buckets[int(s)]
+            k = sorted_p.shape[0] - np.searchsorted(sorted_p, caps,
+                                                    side="right")
+            energy_cf[s] = base.energy_j[s] - (top_sum[k] - k * caps) * dt_s
+            throttled += k
+        sorted_p, _, top_cbrt = buckets["penalty"]
+        kp = sorted_p.shape[0] - np.searchsorted(sorted_p, caps, side="right")
+        penalty = dt_s * (top_cbrt[kp] / np.cbrt(caps) - kp)
+        cf_rows = [
+            EnergyBreakdown(
+                time_s=base.time_s,
+                energy_j={s: float(energy_cf[s][c]) for s in DeviceState})
+            for c in range(n_cfg)
+        ]
+        return RunBatchResult(
+            row_of=np.arange(n_cfg, dtype=np.int64),
+            cf_rows=cf_rows,
+            penalty_partial_s=penalty,
+            wake_events=np.zeros(n_cfg, dtype=np.int64),
+            downscale_events=np.zeros(n_cfg, dtype=np.int64),
+            throttled_samples=throttled,
+        )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -890,6 +977,74 @@ class CompositeBatch:
                                        ParkingPolicy, PowerCapPolicy))
         object.__setattr__(self, "_stable_residency",
                            all(stable(p) for p in self.policies))
+        # run-level (IR) support: exactly the parking-then-downscale shape,
+        # whose parts act on disjoint residency (see apply_runs)
+        ir_ok = all(
+            len(p.parts) == 2
+            and isinstance(p.parts[0], ParkingPolicy)
+            and isinstance(p.parts[1], DownscalePolicy)
+            for p in self.policies)
+        object.__setattr__(self, "_ir_ok", ir_ok)
+        if ir_ok:
+            object.__setattr__(self, "_park_pools", tuple(
+                (p.parts[0].pool.n_devices,
+                 frozenset(p.parts[0].pool.active_set()))
+                for p in self.policies))
+            # reuse DownscaleBatch's knob-array / trigger / delta-cache
+            # precomputation for the downscale parts (one member each)
+            object.__setattr__(self, "_ds_batch", DownscaleBatch(
+                tuple(p.parts[1] for p in self.policies)))
+
+    def apply_runs(self, stream, plat: PlatformSpec, min_samples: int,
+                   dt_s: float) -> "RunBatchResult":
+        """Run-level park-then-downscale: the two parts touch disjoint
+        residency, so the composite decomposes exactly on the run axis.
+
+        On a stream a member parks, idle samples lose residency, and the
+        downstream downscale's ``throttled = decisions & resident`` is
+        empty (decisions are true only on low samples, which are exactly
+        the evicted ones) — parking's counterfactual IS the member's
+        counterfactual there, while the Algorithm-1 decision sequence (and
+        its restore events) is unchanged because the low-activity predicate
+        reads only signal columns. On unparked streams parking is the
+        identity and the member degenerates to its downscale part. Both
+        cases are pure run algebra; each part prices its own event channel
+        as in the row path.
+        """
+        if not self._ir_ok:
+            raise ValueError(
+                "run-level replay supports only parking+downscale "
+                "composites; route this batch through the row path")
+        n_cfg = len(self.policies)
+        dev = stream.key[2]
+        parked = np.array([dev % nd not in act for nd, act in
+                           self._park_pools], dtype=bool)
+        ds = self._ds_batch
+        n_down, n_rest, ds_throttled, sav_exec, sav_act = _run_downscale(
+            stream, plat, min_samples, dt_s, ds._eps, ds._x, ds._y,
+            ds._trig, ds._delta(plat))
+        base = stream.baseline(min_samples)
+        ds_rows = _downscale_breakdowns(base, sav_exec, sav_act, dt_s)
+        park_wakes = np.zeros(n_cfg, dtype=np.int64)
+        if parked.any():
+            park_bd, pk = _parking_breakdown(stream, plat, min_samples, dt_s)
+            park_wakes = np.where(parked, pk["wakes"], 0).astype(np.int64)
+            throttled = np.where(parked, pk["idle_samples"], ds_throttled)
+            cf_rows = [park_bd if parked[c] else ds_rows[c]
+                       for c in range(n_cfg)]
+        else:
+            throttled = ds_throttled
+            cf_rows = ds_rows
+        events = np.stack([park_wakes, n_rest], axis=1)
+        return RunBatchResult(
+            row_of=np.arange(n_cfg, dtype=np.int64),
+            cf_rows=cf_rows,
+            penalty_partial_s=np.zeros(n_cfg),
+            wake_events=park_wakes + n_rest,
+            downscale_events=n_down,
+            throttled_samples=throttled.astype(np.int64),
+            events_rows=events.astype(np.int64),
+        )
 
     def init_carry(self) -> list:
         return [p.init_carry() for p in self.policies]
@@ -936,6 +1091,199 @@ class CompositeBatch:
             downscale_events=downs,
             events_rows=events_rows,
         ), out_carries
+
+
+# --------------------------------------------------------------------------- #
+# Run-level evaluators (the IR fast path; see repro.whatif.ir)
+# --------------------------------------------------------------------------- #
+_NEVER_TRIGGERS = 1 << 62
+
+
+@functools.lru_cache(maxsize=65536)
+def downscale_trigger_index(eps: float, x: float) -> int:
+    """Samples of consecutive low activity before Algorithm 1 triggers.
+
+    Equals the number of strict left-fold additions of ``eps`` (from
+    ``c = 0.0``) whose accumulator stays ``<= x`` — the same float sequence
+    ``np.add.accumulate`` produces in :func:`downscale_decisions`, so the
+    trigger lands on the same sample bit-for-bit. In a whole-stream replay
+    every low run starts from ``c = 0`` (any activity resets the
+    accumulator), so this index is a *constant per config*: the run-level
+    replay never materializes the accumulator series at all. Returns a
+    sentinel larger than any run when the accumulator saturates below
+    ``x`` (it can then never trigger, exactly as the scalar recurrence).
+    """
+    c = 0.0
+    k = 0
+    while True:
+        nxt = c + eps
+        if nxt > x:
+            return k
+        if nxt == c:
+            return _NEVER_TRIGGERS
+        c = nxt
+        k += 1
+
+
+def _trigger_indices(eps: np.ndarray, x: np.ndarray) -> np.ndarray:
+    return np.array([downscale_trigger_index(float(e), float(xx))
+                     for e, xx in zip(eps, x)], dtype=np.int64)
+
+
+@dataclasses.dataclass
+class RunBatchResult:
+    """One family batch's counterfactual for one IR *stream*.
+
+    The run-level analogue of :class:`~repro.whatif.effects.BatchEffect`
+    with the integration already folded: distinct counterfactual
+    :class:`~repro.core.energy.EnergyBreakdown` rows instead of power rows
+    (``row_of[c] == -1`` aliases the shared baseline breakdown), exact
+    integer event/throttle counts, and per-config penalty partials.
+    """
+
+    row_of: np.ndarray               # [C] -> index into cf_rows, -1 = baseline
+    cf_rows: list                    # distinct counterfactual breakdowns
+    penalty_partial_s: np.ndarray    # [C] sample-proportional penalties
+    wake_events: np.ndarray          # [C] int
+    downscale_events: np.ndarray     # [C] int
+    throttled_samples: np.ndarray    # [C] int
+    events_rows: np.ndarray | None = None   # [C, K] multi-channel counts
+
+
+def _identity_run_result(n_configs: int) -> RunBatchResult:
+    return RunBatchResult(
+        row_of=np.full(n_configs, -1, dtype=np.int64),
+        cf_rows=[],
+        penalty_partial_s=np.zeros(n_configs),
+        wake_events=np.zeros(n_configs, dtype=np.int64),
+        downscale_events=np.zeros(n_configs, dtype=np.int64),
+        throttled_samples=np.zeros(n_configs, dtype=np.int64),
+    )
+
+
+def _run_downscale(stream, plat: PlatformSpec, min_samples: int, dt_s: float,
+                   eps: np.ndarray, x: np.ndarray, y: np.ndarray,
+                   trig: np.ndarray, deltas: np.ndarray):
+    """Config-axis Algorithm-1 replay over one stream's *low-activity runs*.
+
+    The run-level core shared by :meth:`DownscaleBatch.apply_runs` and
+    :meth:`CompositeBatch.apply_runs`: O(low runs) Python for the whole
+    config axis, with per-run vector ops — no per-sample decision series is
+    ever materialized. Per low run the trigger index is
+    ``max(trigger_index, cooldown searchsorted)`` exactly as the row
+    kernels compute it; restores (and their cooldown stamps) land on the
+    busy run separating consecutive low runs. Savings are gathered from the
+    stream's precomputed per-sample clip-saving prefix sums, bucketed by
+    accounting state.
+
+    Returns ``(n_down, n_rest, throttled, sav_exec, sav_active)``, each
+    ``[C]``: exact event/sample counts, savings in W·samples.
+    """
+    n_cfg = eps.shape[0]
+    n_down = np.zeros(n_cfg, dtype=np.int64)
+    n_rest = np.zeros(n_cfg, dtype=np.int64)
+    throttled = np.zeros(n_cfg, dtype=np.int64)
+    sav_exec = np.zeros(n_cfg)
+    sav_act = np.zeros(n_cfg)
+    off, low_flags = stream.controller_runs()
+    low_j = np.flatnonzero(low_flags)
+    n_low = low_j.size
+    if n_low == 0:
+        return n_down, n_rest, throttled, sav_exec, sav_act
+
+    s0s = off[low_j]
+    e0s = off[low_j + 1]
+    lens = e0s - s0s
+    ts0s = stream.ts_first + dt_s * s0s.astype(np.float64)
+    # runs are contiguous, so the busy run following low run k starts at
+    # the low run's end sample — where its restores (and cooldown clocks)
+    # land; this matches float(ts[off]) of the row kernels bit-for-bit
+    busy_after = stream.ts_first + dt_s * e0s.astype(np.float64)
+
+    # phase 1 — history-free decisions for the whole (run x config) grid:
+    # with c = 0 at every low-run start, a config fires iff the run outlives
+    # its trigger index. Cooldown can only *suppress* some of these.
+    fire = lens[:, None] > trig[None, :]                   # [K, C]
+    # cooldown from a fire before run k reaches into run k only if the busy
+    # run right before k is shorter than the largest cooldown: t_cd <=
+    # busy_after[k-1] + max(y), so a longer busy gap clears every config
+    risky = np.zeros(n_low, dtype=bool)
+    risky[1:] = (ts0s[1:] - busy_after[:-1]) < float(y.max())
+
+    # phase 2 — resolve cooldown suppression sequentially; the loop body is
+    # O(1) numpy ops per run, and only risky runs with a recent fire pay
+    # for the searchsorted (exact row-kernel trigger index)
+    i_rows: dict[int, np.ndarray] = {}
+    last_fire = np.full(n_cfg, -1, dtype=np.int64)
+    any_fire = False
+    ts_full = None
+    for k in range(n_low):
+        if any_fire and risky[k]:
+            t_cd = np.where(last_fire >= 0,
+                            busy_after[np.maximum(last_fire, 0)] + y,
+                            -np.inf)
+            if np.any(t_cd > ts0s[k]):
+                if ts_full is None:
+                    ts_full = stream.ts()
+                i_row = np.maximum(trig, np.searchsorted(
+                    ts_full[s0s[k]:e0s[k]], t_cd, side="left"))
+                fire[k] &= i_row < lens[k]
+                i_rows[k] = i_row
+        row = fire[k]
+        if row.any():
+            any_fire = True
+            np.copyto(last_fire, k, where=row)
+
+    # phase 3 — bulk event counts and prefix-sum gathers over [K, C]
+    n_down = fire.sum(axis=0).astype(np.int64)
+    n_rest = n_down.copy()
+    if int(low_j[-1]) == low_flags.shape[0] - 1:
+        # a trailing fired low run never restores (no busy run follows)
+        n_rest -= fire[-1]
+    trig_i = np.broadcast_to(trig, (n_low, n_cfg))
+    if i_rows:
+        trig_i = trig_i.copy()
+        for k, i_row in i_rows.items():
+            trig_i[k] = i_row
+    gpos = s0s[:, None] + np.where(fire, trig_i, 0)
+    cum_res = stream.cum_resident()
+    throttled = np.where(fire, cum_res[e0s][:, None] - cum_res[gpos],
+                         0).sum(axis=0)
+    for d in np.unique(deltas):
+        cfg_idx = np.flatnonzero(deltas == d)
+        cum_e, cum_a = stream.downscale_cums(float(d), plat.deep_idle_w,
+                                             min_samples)
+        sub_f = fire[:, cfg_idx]
+        sub_g = gpos[:, cfg_idx]
+        sav_exec[cfg_idx] = np.where(
+            sub_f, cum_e[e0s][:, None] - cum_e[sub_g], 0.0).sum(axis=0)
+        sav_act[cfg_idx] = np.where(
+            sub_f, cum_a[e0s][:, None] - cum_a[sub_g], 0.0).sum(axis=0)
+    return n_down, n_rest, throttled, sav_exec, sav_act
+
+
+def _downscale_breakdowns(base: EnergyBreakdown, sav_exec: np.ndarray,
+                          sav_act: np.ndarray, dt_s: float) -> list:
+    """Per-config counterfactual breakdowns: downscaling never changes the
+    state series, so times are the baseline's and only the EXECUTION_IDLE /
+    ACTIVE energy buckets shed the clipped savings."""
+    out = []
+    for c in range(sav_exec.shape[0]):
+        energy = dict(base.energy_j)
+        energy[DeviceState.EXECUTION_IDLE] -= sav_exec[c] * dt_s
+        energy[DeviceState.ACTIVE] -= sav_act[c] * dt_s
+        out.append(EnergyBreakdown(time_s=base.time_s, energy_j=energy))
+    return out
+
+
+def _parking_breakdown(stream, plat: PlatformSpec, min_samples: int,
+                       dt_s: float) -> tuple[EnergyBreakdown, dict]:
+    """The single counterfactual breakdown every parked config shares."""
+    pk = stream.parking_counterfactual(min_samples)
+    energy = pk["keep_sum"] + pk["idle_len"] * plat.deep_idle_w
+    bd = integrate_runs(pk["cf_state"], energy[None, :], stream.length,
+                        min_samples, dt_s)[0]
+    return bd, pk
 
 
 def _part_structure(policy: Policy) -> tuple:

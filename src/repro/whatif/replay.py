@@ -626,3 +626,157 @@ def replay_store(
     for shard in store.iter_shards(hosts, mmap=mmap):
         replayer.update(shard)
     return replayer.finalize()
+
+
+# --------------------------------------------------------------------------- #
+# Run-axis replay (the IR fast path; see repro.whatif.ir)
+# --------------------------------------------------------------------------- #
+def _replay_ir_streams(
+    streams: list,
+    policies: Sequence[Policy],
+    platform_of: str | Mapping[int, str] | None,
+    min_job_duration_s: float,
+    min_samples: int,
+    dt_s: float,
+) -> tuple[list[list[tuple]], int]:
+    """Replay a policy grid against a list of :class:`StreamIR` streams
+    (process-pool worker body; module-level picklable). Returns
+    ``(jobs_per_config, n_rows)`` where each job entry is ``(stream key,
+    JobReplay)`` — keys travel along so the parent can reassemble in
+    sorted-stream order regardless of partitioning."""
+    batches = make_batches(policies)
+    plat_cache: dict[int, PlatformSpec] = {}
+    n_cfg = len(policies)
+    jobs: list[list[tuple]] = [[] for _ in range(n_cfg)]
+    n_rows = 0
+    for stream in streams:
+        n_rows += stream.n_rows
+        span_s = stream.ts_last - stream.ts_first + dt_s
+        if span_s < min_job_duration_s:
+            continue
+        plat = _resolve_platform(platform_of, plat_cache, stream.platform_id)
+        base_bd = stream.baseline(min_samples)
+        for batch, idxs in batches:
+            res = batch.apply_runs(stream, plat, min_samples, dt_s)
+            for j, gi in enumerate(idxs):
+                pol = policies[gi]
+                row = int(res.row_of[j])
+                cf_bd = base_bd if row < 0 else res.cf_rows[row]
+                wakes = int(res.wake_events[j])
+                if res.events_rows is not None:
+                    event_pen = price_events(
+                        policy_event_prices(pol, plat), res.events_rows[j])
+                else:
+                    event_pen = wakes * pol.event_penalty_s(plat)
+                penalty = float(res.penalty_partial_s[j]) + event_pen
+                jobs[gi].append((stream.key, int(res.throttled_samples[j]),
+                                 JobReplay(
+                    job_id=stream.key[0],
+                    platform=plat.name,
+                    duration_s=float(span_s),
+                    baseline=base_bd,
+                    counterfactual=cf_bd,
+                    penalty_s=penalty,
+                    wake_events=wakes,
+                    downscale_events=int(res.downscale_events[j]),
+                    throttled_time_s=float(res.throttled_samples[j] * dt_s),
+                )))
+    return jobs, n_rows
+
+
+def replay_ir(
+    ir,
+    policies: Sequence[Policy],
+    platform_of: str | Mapping[int, str] | None = None,
+    min_job_duration_s: float = 2 * 3600.0,
+    min_interval_s: float = 5.0,
+    classifier: ClassifierConfig = DEFAULT_CLASSIFIER,
+    dt_s: float = 1.0,
+    hosts: Iterable[str] | None = None,
+    workers: int = 1,
+) -> list[ReplayResult]:
+    """Replay a whole policy grid against a :class:`repro.whatif.ir.RunIR`.
+
+    The run-axis counterpart of streaming the store through
+    :class:`BatchedPolicyReplayer`: every family evaluates
+    ``(n_configs, n_runs)`` blocks via its ``apply_runs`` method, so the
+    per-config cost is O(runs), and the only O(rows) work ever done was the
+    IR build. Contract vs the row path (tests/test_whatif_ir.py): per-state
+    times, event counts, throttled time and decision-derived metrics are
+    **bit-identical**; energies and penalties agree to <= 1e-9 relative.
+    Results are identical for any ``workers`` (streams are partitioned by
+    host label and reassembled in sorted-key order). Note ``workers > 1``
+    ships each partition's :class:`StreamIR` arrays — including the raw
+    power column, ~8 bytes/row — to the pool on every call and rebuilds
+    the per-stream memoized aggregates there, so it only pays off when
+    per-config run work dominates (very large grids); the serial path is
+    the right default for the compact replay.
+
+    Every policy must be run-level capable for the IR's config
+    (:func:`repro.whatif.ir.ir_supported`); the sweep kernel routes
+    unsupported configs through the row path instead.
+    """
+    if classifier != ir.config.classifier:
+        raise ValueError(
+            f"IR was built for classifier {ir.config.classifier}, replay "
+            f"requested {classifier}; rebuild the IR or use compact=False")
+    if dt_s != ir.config.dt_s:
+        raise ValueError(f"IR dt_s {ir.config.dt_s} != replay dt_s {dt_s}")
+    policies = list(policies)
+    min_samples = (0 if min_interval_s is None
+                   else int(np.ceil(min_interval_s / dt_s)))
+    streams = ir.select(hosts)
+    by_host: dict[str, list] = {}
+    for s in streams:
+        by_host.setdefault(s.host_label, []).append(s)
+    if workers > 1 and len(by_host) > 1:
+        # greedy row-balanced host partitions, heaviest first (the same
+        # partition rule as TelemetryStore.partition_hosts)
+        ordered = sorted(by_host, key=lambda h: (-sum(
+            s.n_rows for s in by_host[h]), h))
+        n_parts = min(workers, len(ordered))
+        parts: list[list] = [[] for _ in range(n_parts)]
+        loads = [0] * n_parts
+        for h in ordered:
+            i = loads.index(min(loads))
+            parts[i].extend(by_host[h])
+            loads[i] += sum(s.n_rows for s in by_host[h])
+        from concurrent.futures import ProcessPoolExecutor
+
+        from repro.telemetry.pipeline import _pool_context
+        pieces = []
+        with ProcessPoolExecutor(max_workers=n_parts,
+                                 mp_context=_pool_context()) as pool:
+            futures = [pool.submit(_replay_ir_streams, part, policies,
+                                   platform_of, min_job_duration_s,
+                                   min_samples, dt_s)
+                       for part in parts]
+            pieces = [f.result() for f in futures]
+        jobs = [[j for piece in pieces for j in piece[0][gi]]
+                for gi in range(len(policies))]
+        n_rows = sum(piece[1] for piece in pieces)
+    else:
+        jobs, n_rows = _replay_ir_streams(
+            streams, policies, platform_of, min_job_duration_s,
+            min_samples, dt_s)
+    results = []
+    base_fleet = None       # the kept-job set is config-independent, so the
+    for gi, pol in enumerate(policies):     # fleet baseline merges once
+        entries = sorted(jobs[gi], key=lambda kj: kj[0])
+        ordered_jobs = [jr for _, _, jr in entries]
+        if base_fleet is None:
+            base_fleet = merge([j.baseline for j in ordered_jobs])
+        results.append(ReplayResult(
+            policy_name=pol.name,
+            policy_params=pol.describe(),
+            jobs=ordered_jobs,
+            baseline=base_fleet,
+            counterfactual=merge([j.counterfactual for j in ordered_jobs]),
+            penalty_s=math.fsum(j.penalty_s for j in ordered_jobs),
+            wake_events=sum(j.wake_events for j in ordered_jobs),
+            downscale_events=sum(j.downscale_events for j in ordered_jobs),
+            throttled_time_s=float(
+                sum(t for _, t, _ in entries) * dt_s),
+            n_rows=n_rows,
+        ))
+    return results

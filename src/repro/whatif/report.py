@@ -22,6 +22,7 @@ def frontier_to_dict(frontier: Frontier) -> dict:
         "schema_version": SCHEMA_VERSION,
         "n_rows": frontier.n_rows,
         "n_jobs": frontier.n_jobs,
+        "n_runs": frontier.n_runs,
         "outcomes": [dataclasses.asdict(o) for o in frontier.outcomes],
     }
 
@@ -34,7 +35,8 @@ def frontier_from_dict(payload: dict) -> Frontier:
         o["per_job_penalty_s"] = tuple(o["per_job_penalty_s"])
         outcomes.append(PolicyOutcome(**o))
     return Frontier(outcomes=tuple(outcomes),
-                    n_rows=payload["n_rows"], n_jobs=payload["n_jobs"])
+                    n_rows=payload["n_rows"], n_jobs=payload["n_jobs"],
+                    n_runs=payload.get("n_runs", 0))
 
 
 def save_frontier(frontier: Frontier, path: str | pathlib.Path,
@@ -83,9 +85,16 @@ def format_frontier(frontier: Frontier, top: int | None = None) -> str:
     rows = sorted(frontier.outcomes, key=lambda o: -o.energy_saved_j)
     if top is not None:
         rows = rows[:top]
+    compaction = ""
+    if frontier.n_runs:
+        # rows/runs: how run-compressible (idle-dominated) the corpus is —
+        # the leverage behind the run-IR replay (paper: execution-idle
+        # stretches are long and near-constant)
+        compaction = (f" ({frontier.n_runs:,} runs, compaction "
+                      f"{frontier.compaction_ratio:.1f}x)")
     lines = [
         f"what-if frontier: {len(frontier.outcomes)} configs, "
-        f"{frontier.n_jobs} jobs, {frontier.n_rows:,} samples",
+        f"{frontier.n_jobs} jobs, {frontier.n_rows:,} samples{compaction}",
         f"{'':2}{'policy':44} {'saved kWh':>10} {'saved %':>8} "
         f"{'penalty s':>10} {'wakes':>7}",
     ]

@@ -140,17 +140,42 @@ class PolicyFamily:
     :class:`~repro.whatif.policies.Policy`; the search only ever identifies
     configs by the built policy's ``describe()``, so factories are free to
     derive several constructor arguments from one axis.
+
+    ``from_params`` is ``build``'s partial inverse: map a
+    :class:`~repro.whatif.sweep.PolicyOutcome`'s ``params`` dict back to an
+    axis point (or None when the params belong to another family) — it is
+    what lets :func:`search_frontier` warm-start from a previously saved
+    frontier (``init_frontier=``), seeding round 0 at last snapshot's knee.
     """
 
     name: str
     axes: tuple[ContinuousAxis | CategoricalAxis, ...]
     build: Callable[[dict], Policy]
+    from_params: Callable[[dict], dict | None] | None = None
 
     def coarse_points(self) -> list[dict]:
         levels = [(ax.name, ax.coarse if isinstance(ax, ContinuousAxis)
                    else ax.options) for ax in self.axes]
         return [dict(zip([n for n, _ in levels], combo))
                 for combo in itertools.product(*[v for _, v in levels])]
+
+    def clip_point(self, pt: dict) -> dict | None:
+        """Validate a seed point against the axes: categorical values must
+        be known options (a retired pool shape cannot be refined), and
+        continuous values clip into the axis range so refinement stays
+        well-defined."""
+        out = {}
+        for ax in self.axes:
+            if ax.name not in pt:
+                return None
+            v = pt[ax.name]
+            if isinstance(ax, CategoricalAxis):
+                if v not in ax.options:
+                    return None
+                out[ax.name] = v
+            else:
+                out[ax.name] = min(max(float(v), ax.lo), ax.hi)
+        return out
 
 
 def _build_downscale(pt: dict) -> Policy:
@@ -184,6 +209,38 @@ def _build_park_downscale(pt: dict) -> Policy:
     ))
 
 
+def _downscale_from_params(p: dict) -> dict | None:
+    if p.get("policy") != "downscale":
+        return None
+    return {"threshold_x_s": p["threshold_x_s"],
+            "cooldown_y_s": p["cooldown_y_s"],
+            "mode": DownscaleMode(p["mode"])}
+
+
+def _parking_from_params(p: dict) -> dict | None:
+    if p.get("policy") != "parking":
+        return None
+    return {"pool": (p["n_devices"], p["n_active"]),
+            "resume_latency_s": p["resume_latency_s"]}
+
+
+def _powercap_from_params(p: dict) -> dict | None:
+    if p.get("policy") != "powercap":
+        return None
+    return {"cap_fraction": p["cap_fraction"]}
+
+
+def _park_downscale_from_params(p: dict) -> dict | None:
+    if p.get("policy") != "composite" or len(p.get("parts", ())) != 2:
+        return None
+    park, down = p["parts"]
+    if park.get("policy") != "parking" or down.get("policy") != "downscale":
+        return None
+    return {"pool": (park["n_devices"], park["n_active"]),
+            "resume_latency_s": park["resume_latency_s"],
+            "threshold_x_s": down["threshold_x_s"]}
+
+
 def default_families(composites: bool = True) -> list[PolicyFamily]:
     """The searchable mirror of :func:`~repro.whatif.sweep
     .default_policy_grid`: same families, same knob ranges, but coarse seeds
@@ -205,7 +262,7 @@ def default_families(composites: bool = True) -> list[PolicyFamily]:
                 CategoricalAxis("mode", (DownscaleMode.SM_ONLY,
                                          DownscaleMode.SM_AND_MEM)),
             ),
-            build=_build_downscale),
+            build=_build_downscale, from_params=_downscale_from_params),
         PolicyFamily(
             name="parking",
             axes=(
@@ -214,14 +271,14 @@ def default_families(composites: bool = True) -> list[PolicyFamily]:
                 ContinuousAxis("resume_latency_s", 2.0, 60.0,
                                coarse=(2.0, 60.0), log=True),
             ),
-            build=_build_parking),
+            build=_build_parking, from_params=_parking_from_params),
         PolicyFamily(
             name="powercap",
             axes=(
                 ContinuousAxis("cap_fraction", 0.25, 0.95,
                                coarse=(0.25, 0.6, 0.95), resolution=0.005),
             ),
-            build=_build_powercap),
+            build=_build_powercap, from_params=_powercap_from_params),
     ]
     if composites:
         families.append(PolicyFamily(
@@ -233,7 +290,8 @@ def default_families(composites: bool = True) -> list[PolicyFamily]:
                 ContinuousAxis("threshold_x_s", 0.5, 15.0,
                                coarse=(1.0, 8.0), log=True),
             ),
-            build=_build_park_downscale))
+            build=_build_park_downscale,
+            from_params=_park_downscale_from_params))
     return families
 
 
@@ -355,6 +413,48 @@ def _neighbor_mids(axis: ContinuousAxis, value: float,
     return mids
 
 
+def seed_points(families: Sequence[PolicyFamily], frontier: "Frontier | str",
+                per_family: int = 3) -> dict[str, list[dict]]:
+    """Warm-start seeds: map a previous frontier's Pareto members back into
+    each family's knob space (via :attr:`PolicyFamily.from_params`),
+    dropping members whose categorical knobs are no longer searchable and
+    clipping continuous knobs into the current axis ranges. Members are
+    taken knee-outward — the previous knee seeds first — capped at
+    ``per_family`` so round 0 stays close to the coarse-grid size:
+    week-over-week re-searches start *at* last snapshot's knee instead of
+    re-discovering it through refinement rounds."""
+    if not hasattr(frontier, "outcomes"):
+        from repro.whatif.report import load_frontier
+        frontier = load_frontier(frontier)
+    members = frontier.pareto_set() or list(frontier.outcomes)
+    if len(members) > 1:
+        knee = find_knee(members)
+        norm = _normalizer(members)
+        ks, kp = norm(knee)
+
+        def knee_dist(o: PolicyOutcome) -> float:
+            s, p = norm(o)
+            return math.hypot(s - ks, p - kp)
+        members = sorted(members, key=knee_dist)
+    seeds: dict[str, list[dict]] = {}
+    for fam in families:
+        if fam.from_params is None:
+            continue
+        pts: list[dict] = []
+        for o in members:
+            pt = fam.from_params(o.params)
+            if pt is None:
+                continue
+            pt = fam.clip_point(pt)
+            if pt is not None and pt not in pts:
+                pts.append(pt)
+            if len(pts) >= per_family:
+                break
+        if pts:
+            seeds[fam.name] = pts
+    return seeds
+
+
 def search_frontier(
     store: "TelemetryStore",
     budget: PenaltyBudget | None = None,
@@ -369,6 +469,9 @@ def search_frontier(
     hosts: Iterable[str] | None = None,
     mmap: bool = False,
     batched: bool = True,
+    compact: bool | None = None,
+    ir=None,
+    init_frontier=None,
     **replayer_kwargs,
 ) -> SearchResult:
     """Budgeted closed-loop knob search over a telemetry store.
@@ -385,6 +488,19 @@ def search_frontier(
     consecutive rounds, no axis can be subdivided above its resolution, or
     ``max_rounds`` is reached.
 
+    With the compact path on (``compact=None`` follows ``batched``), the
+    run-level IR is acquired **once** — memory cache, store sidecar, or one
+    O(rows) build — and every refinement round replays against it, so
+    rounds cost O(runs x new configs) instead of re-streaming and
+    re-classifying the store (:mod:`repro.whatif.ir`). Pass ``ir=`` to
+    reuse one across searches.
+
+    ``init_frontier`` (a :class:`~repro.whatif.sweep.Frontier` or a saved
+    frontier JSON path) warm-starts the search: the previous frontier's
+    Pareto members seed round 0 alongside the coarse grids
+    (:func:`seed_points`), so a week-over-week re-search reaches its knee
+    in fewer evaluations (tracked in ``BENCH_whatif_search.json``).
+
     Determinism: candidates are generated in family/axis order from sorted
     tried-value sets and evaluated through the batched replayer, so the
     result is bit-identical for any ``workers`` (tests/test_whatif_search.py).
@@ -399,6 +515,8 @@ def search_frontier(
     names = [f.name for f in families]
     if len(set(names)) != len(names):
         raise ValueError(f"duplicate family names: {names}")
+    if compact is None:
+        compact = batched
 
     # evaluation state, keyed by the built policy's canonical describe()
     outcomes: dict[str, PolicyOutcome] = {}
@@ -406,6 +524,7 @@ def search_frontier(
     order: list[str] = []                          # evaluation order
     tried: dict[tuple[str, str], set[float]] = {}  # (family, axis) -> values
     n_rows = 0
+    n_runs = 0
 
     def build_candidates(fam: PolicyFamily, points: list[dict]):
         cands = []
@@ -418,14 +537,16 @@ def search_frontier(
         return cands
 
     def evaluate_round(cands) -> int:
-        nonlocal n_rows
+        nonlocal n_rows, n_runs
         if not cands:
             return 0
         pols = [pol for _, (_, _, pol) in cands]
-        results, rows = _evaluate(
+        results, rows, runs = _evaluate(
             pols, store, workers=workers, hosts=hosts, mmap=mmap,
-            batched=batched, replayer_kwargs=replayer_kwargs)
+            batched=batched, replayer_kwargs=replayer_kwargs,
+            compact=compact, ir=ir)
         n_rows = rows
+        n_runs = max(n_runs, runs)
         for (key, (fam_name, pt, _)), res in zip(cands, results):
             outcomes[key] = _outcome(res)
             point_of[key] = (fam_name, pt)
@@ -435,7 +556,7 @@ def search_frontier(
                     tried.setdefault((fam_name, ax_name), set()).add(float(v))
         return len(cands)
 
-    # ---------------- round 0: coarse grids ---------------- #
+    # ---------------- round 0: coarse grids (+ warm-start seeds) -------- #
     round0: list[tuple[str, tuple]] = []
     if include_noop:
         noop = NoOpPolicy()
@@ -447,6 +568,21 @@ def search_frontier(
             f"max_evals={max_evals} cannot cover the coarse grids "
             f"({len(round0)} configs); raise the budget or thin the "
             f"families' coarse levels")
+    if init_frontier is not None:
+        # warm-start seeds ride along only as far as the eval budget
+        # allows — the coarse grids keep priority, so a budget that was
+        # valid cold can never become invalid warm
+        seeds = seed_points(families, init_frontier)
+        round0_keys = {k for k, _ in round0}
+        seed_cands = [
+            c for fam in families
+            for c in build_candidates(fam, seeds.get(fam.name, []))
+            if c[0] not in round0_keys]
+        round0.extend(seed_cands[:max_evals - len(round0)])
+
+    # the IR is acquired by round 0's evaluate and held in the process
+    # cache (repro.whatif.ir.get_ir), so every later refinement round —
+    # and a doomed build on an unsupported store — resolves in O(1)
     evaluate_round(round0)
 
     history: list[RoundRecord] = []
@@ -532,7 +668,7 @@ def search_frontier(
         if new < len(candidates):      # budget truncated the round
             break
 
-    frontier = assemble_frontier([outcomes[k] for k in order], n_rows)
+    frontier = assemble_frontier([outcomes[k] for k in order], n_rows, n_runs)
     final_outcomes = list(frontier.outcomes)
     knee = find_knee(final_outcomes)
     if budget is None:

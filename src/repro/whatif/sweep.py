@@ -130,11 +130,21 @@ class Frontier:
     frontier's point of diminishing returns;
     :meth:`best_within_penalty` / :class:`repro.whatif.search.PenaltyBudget`
     answer the budget question directly.
+
+    ``n_runs`` is the run-level IR's compact axis size when the sweep took
+    the compact path (0 otherwise): ``n_rows / n_runs`` is the corpus's
+    compaction ratio — a direct view of how idle-dominated (and therefore
+    run-compressible) the fleet telemetry is.
     """
 
     outcomes: tuple[PolicyOutcome, ...]
     n_rows: int
     n_jobs: int
+    n_runs: int = 0
+
+    @property
+    def compaction_ratio(self) -> float:
+        return self.n_rows / self.n_runs if self.n_runs else float("nan")
 
     def pareto_set(self) -> list[PolicyOutcome]:
         return [o for o in self.outcomes if o.pareto]
@@ -157,7 +167,7 @@ def pareto_flags(saved: Sequence[float], penalty: Sequence[float]) -> list[bool]
 
 
 def assemble_frontier(outcomes: Sequence[PolicyOutcome],
-                      n_rows: int = 0) -> Frontier:
+                      n_rows: int = 0, n_runs: int = 0) -> Frontier:
     """Build a :class:`Frontier` from already-evaluated outcomes, recomputing
     the Pareto flags over exactly this set (any flags carried in are
     discarded). The closed-loop search accumulates outcomes across
@@ -167,7 +177,8 @@ def assemble_frontier(outcomes: Sequence[PolicyOutcome],
     flagged = tuple(dataclasses.replace(o, pareto=f)
                     for o, f in zip(outcomes, flags))
     n_jobs = max((o.n_jobs for o in flagged), default=0)
-    return Frontier(outcomes=flagged, n_rows=n_rows, n_jobs=n_jobs)
+    return Frontier(outcomes=flagged, n_rows=n_rows, n_jobs=n_jobs,
+                    n_runs=n_runs)
 
 
 def _outcome(result: ReplayResult) -> PolicyOutcome:
@@ -193,8 +204,9 @@ def _outcome(result: ReplayResult) -> PolicyOutcome:
     )
 
 
-def _assemble(results: list[ReplayResult], n_rows: int) -> Frontier:
-    return assemble_frontier([_outcome(r) for r in results], n_rows)
+def _assemble(results: list[ReplayResult], n_rows: int,
+              n_runs: int = 0) -> Frontier:
+    return assemble_frontier([_outcome(r) for r in results], n_rows, n_runs)
 
 
 # --------------------------------------------------------------------------- #
@@ -242,19 +254,78 @@ def _evaluate(
     mmap: bool = False,
     batched: bool = True,
     replayer_kwargs: dict | None = None,
-) -> tuple[list[ReplayResult], int]:
+    compact: bool | None = None,
+    ir=None,
+) -> tuple[list[ReplayResult], int, int]:
     """Kernel body shared by :func:`evaluate` / :func:`run_sweep`: one
     :class:`ReplayResult` per config in input order, plus the replayed
-    job-attributed row count."""
+    job-attributed row count and (when the compact path ran) the IR's run
+    count.
+
+    ``compact=None`` resolves to ``batched`` — the row-exact reference
+    paths (``batched=False`` / ``compact=False``) stay byte-for-byte what
+    they were. With the compact path on, configs the IR supports replay
+    against the run axis (:func:`repro.whatif.replay.replay_ir`); the rest
+    — custom policies, mismatched thresholds, unsupported composites —
+    stream the store through the row path, and an irregularly-sampled
+    store falls back entirely.
+    """
     configs = list(configs)
     replayer_kwargs = replayer_kwargs or {}
+    if compact is None:
+        compact = batched
+
+    if compact:
+        from repro.whatif import ir as ir_mod
+        from repro.whatif.replay import replay_ir
+
+        classifier = replayer_kwargs.get("classifier", None)
+        dt_s = replayer_kwargs.get("dt_s", 1.0)
+        if ir is not None:
+            ir_obj = ir
+        else:
+            from repro.core.states import DEFAULT_CLASSIFIER
+            cfg = ir_mod.ir_config_for(
+                configs, classifier or DEFAULT_CLASSIFIER, dt_s)
+            ir_obj = None
+            if any(ir_mod.ir_supported(p, cfg) for p in configs):
+                try:
+                    ir_obj = ir_mod.get_ir(store, cfg, workers=workers,
+                                           mmap=mmap)
+                except ir_mod.IRUnsupportedError:
+                    ir_obj = None       # e.g. irregular sampling: use rows
+        if ir_obj is not None:
+            sup = [i for i, p in enumerate(configs)
+                   if ir_mod.ir_supported(p, ir_obj.config)]
+            if sup:
+                ir_kwargs = {k: v for k, v in replayer_kwargs.items()
+                             if k in ("platform_of", "min_job_duration_s",
+                                      "min_interval_s", "classifier", "dt_s")}
+                sup_results = replay_ir(
+                    ir_obj, [configs[i] for i in sup], hosts=hosts,
+                    workers=workers, **ir_kwargs)
+                results: list[ReplayResult | None] = [None] * len(configs)
+                for i, res in zip(sup, sup_results):
+                    results[i] = res
+                rest = [i for i in range(len(configs)) if results[i] is None]
+                if rest:
+                    rest_results, _, _ = _evaluate(
+                        [configs[i] for i in rest], store, workers=workers,
+                        hosts=hosts, mmap=mmap, batched=batched,
+                        replayer_kwargs=replayer_kwargs, compact=False)
+                    for i, res in zip(rest, rest_results):
+                        results[i] = res
+                selected = ir_obj.select(hosts)
+                n_rows = sum(s.n_rows for s in selected)
+                n_runs = sum(s.n_runs for s in selected)
+                return results, n_rows, n_runs
 
     if batched:
         replayer = map_shard_partitions(
             store, hosts, workers, _replay_partition_batched,
             (configs, mmap, replayer_kwargs), merge=lambda a, b: a.merge(b))
         n_rows = replayer.n_rows          # finalize() resets the counter
-        return replayer.finalize(), n_rows
+        return replayer.finalize(), n_rows, 0
 
     def merge_lists(a: list[PolicyReplayer], b: list[PolicyReplayer]):
         for dst, src in zip(a, b):
@@ -265,7 +336,7 @@ def _evaluate(
         store, hosts, workers, _replay_partition,
         (configs, mmap, replayer_kwargs), merge=merge_lists)
     n_rows = replayers[0].n_rows if replayers else 0
-    return [r.finalize() for r in replayers], n_rows
+    return [r.finalize() for r in replayers], n_rows, 0
 
 
 def evaluate(
@@ -275,6 +346,8 @@ def evaluate(
     hosts: Iterable[str] | None = None,
     mmap: bool = False,
     batched: bool = True,
+    compact: bool | None = None,
+    ir=None,
     **replayer_kwargs,
 ) -> list[PolicyOutcome]:
     """Evaluate an arbitrary set of policy configs over a store.
@@ -302,12 +375,24 @@ def evaluate(
             ``batched=False`` runs the per-policy reference path; both are
             bit-identical (tests/test_whatif_batched.py), the batched one is
             the fast default.
+        compact: replay against the run-level IR (:mod:`repro.whatif.ir`)
+            where the configs support it — the "compact once, replay many"
+            fast path, O(runs) per config after a one-off O(rows) build
+            that is cached in memory and as a store sidecar. ``None``
+            (default) follows ``batched``; time/count metrics match the row
+            paths bit-for-bit, energies/penalties to <= 1e-9 relative
+            (tests/test_whatif_ir.py). Unsupported configs and
+            irregularly-sampled stores fall back to the row path.
+        ir: a prebuilt :class:`repro.whatif.ir.RunIR` to replay against
+            (skips the cache lookup entirely; the closed-loop search passes
+            one IR across all refinement rounds).
         **replayer_kwargs: forwarded to the replayer
             (``min_job_duration_s``, ``platform_of``, ``classifier``, ...).
     """
-    results, _ = _evaluate(configs, store, workers=workers, hosts=hosts,
-                           mmap=mmap, batched=batched,
-                           replayer_kwargs=replayer_kwargs)
+    results, _, _ = _evaluate(configs, store, workers=workers, hosts=hosts,
+                              mmap=mmap, batched=batched,
+                              replayer_kwargs=replayer_kwargs,
+                              compact=compact, ir=ir)
     return [_outcome(r) for r in results]
 
 
@@ -318,6 +403,8 @@ def run_sweep(
     hosts: Iterable[str] | None = None,
     mmap: bool = False,
     batched: bool = True,
+    compact: bool | None = None,
+    ir=None,
     **replayer_kwargs,
 ) -> Frontier:
     """Replay a fixed policy grid over a store and report the trade-off
@@ -326,13 +413,15 @@ def run_sweep(
     ``policies`` defaults to :func:`default_policy_grid` (200 configs). For
     a *budgeted* search of the same knob space instead of a dense dump, see
     :func:`repro.whatif.search.search_frontier`. All other arguments are
-    :func:`evaluate`'s.
+    :func:`evaluate`'s; ``run_sweep(compact=False)`` is the retained
+    row-exact verification path for the default compact (run-IR) sweep.
     """
     policies = list(default_policy_grid() if policies is None else policies)
-    results, n_rows = _evaluate(policies, store, workers=workers, hosts=hosts,
-                                mmap=mmap, batched=batched,
-                                replayer_kwargs=replayer_kwargs)
-    return _assemble(results, n_rows)
+    results, n_rows, n_runs = _evaluate(
+        policies, store, workers=workers, hosts=hosts, mmap=mmap,
+        batched=batched, replayer_kwargs=replayer_kwargs, compact=compact,
+        ir=ir)
+    return _assemble(results, n_rows, n_runs)
 
 
 def sweep_frame(frame, policies: Sequence[Policy] | None = None,

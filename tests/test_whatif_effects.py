@@ -192,8 +192,12 @@ def test_batched_composite_matches_scalar_sequential(seed):
         ref = run_sweep(store, grid, workers=1, min_job_duration_s=300,
                         batched=False)
         for workers in (1, 2):
+            # compact=False: this test pins the row-batched engine to the
+            # per-policy reference bit-for-bit; the run-IR fast path has its
+            # own equivalence suite in tests/test_whatif_ir.py
             bat = run_sweep(store, grid, workers=workers,
-                            min_job_duration_s=300, batched=True)
+                            min_job_duration_s=300, batched=True,
+                            compact=False)
             assert frontier_to_dict(bat) == frontier_to_dict(ref)
 
 

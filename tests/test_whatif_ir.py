@@ -1,0 +1,410 @@
+"""Run-level telemetry IR (ISSUE 5): round-trip, cache invalidation, and
+compact-vs-row equivalence.
+
+The load-bearing contract: a compact (run-IR) replay must report the SAME
+time/count metrics as the row-exact reference — per-state durations, event
+counts, throttled time, decision-derived outcomes, bit for bit — and
+energies/penalties within 1e-9 relative (the per-run power sums are exact
+partial sums of the same samples, only the float summation order differs).
+"""
+import tempfile
+
+import numpy as np
+import pytest
+from _hyp import given, settings, st
+
+from repro.cluster import generate_cluster
+from repro.core.controller import ControllerConfig, DownscaleMode
+from repro.core.energy import BatchedStreamingIntegrator
+from repro.core.imbalance import PoolConfig, PoolPolicy
+from repro.core.states import ClassifierConfig, classify_series
+from repro.telemetry import TelemetryStore
+from repro.telemetry.records import TelemetryFrame
+from repro.whatif import (CompositePolicy, DownscalePolicy, IRConfig,
+                          IRUnsupportedError, NoOpPolicy, ParkingPolicy,
+                          PowerCapPolicy, build_ir, default_policy_grid,
+                          downscale_trigger_index, evaluate, format_frontier,
+                          frontier_to_dict, get_ir, ir_supported,
+                          load_sidecar, low_activity_series, run_sweep,
+                          save_sidecar, search_frontier, seed_points)
+from repro.whatif.policies import low_activity_series  # noqa: F811
+
+
+@pytest.fixture(scope="module")
+def store_dir():
+    with tempfile.TemporaryDirectory() as d:
+        store = TelemetryStore(d, shard_format="npy_dir")
+        generate_cluster(n_devices=8, horizon_s=2700, seed=11,
+                         store=store, shard_s=700)
+        assert len({s["host"] for s in store.manifest["shards"]}) > 1
+        yield d
+
+
+def _store(store_dir):
+    return TelemetryStore(store_dir)
+
+
+# --------------------------------------------------------------------------- #
+# integrator: update_runs == update on the expanded series
+# --------------------------------------------------------------------------- #
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=5, deadline=None)
+def test_update_runs_matches_sample_updates(seed):
+    rng = np.random.default_rng(seed % 100000)
+    n_runs, n_cfg = 200, 3
+    states = rng.choice([0, 1, 2], size=n_runs).astype(np.int8)
+    lengths = rng.integers(1, 12, size=n_runs)
+    energy = rng.normal(100, 30, (n_cfg, n_runs)) * lengths
+    ref = BatchedStreamingIntegrator(n_configs=n_cfg, min_duration_s=5.0)
+    # expanded per-sample series with each run's energy spread evenly: the
+    # run path must bucket identical times and 1e-9-equal energies
+    s_exp = np.repeat(states, lengths)
+    p_exp = np.repeat(energy / lengths, lengths, axis=1)
+    ref.update(s_exp, p_exp)
+    ref_bds, ref_ivs = ref.finalize_batch()
+
+    run = BatchedStreamingIntegrator(n_configs=n_cfg, min_duration_s=5.0)
+    chunk = int(rng.integers(1, n_runs + 1))
+    for s in range(0, n_runs, chunk):
+        run.update_runs(states[s:s + chunk], energy[:, s:s + chunk],
+                        lengths[s:s + chunk])
+    run_bds, run_ivs = run.finalize_batch()
+    assert run_ivs == ref_ivs
+    for a, b in zip(ref_bds, run_bds):
+        assert a.time_s == b.time_s                 # bit-identical
+        for k in a.energy_j:
+            assert np.isclose(a.energy_j[k], b.energy_j[k],
+                              rtol=1e-9, atol=1e-9)
+
+
+def test_update_runs_rejects_mixing_with_update():
+    bi = BatchedStreamingIntegrator(n_configs=1)
+    bi.update(np.array([1, 1, 2]), np.array([[1.0, 1.0, 2.0]]))
+    with pytest.raises(ValueError, match="update_runs"):
+        bi.update_runs(np.array([2]), np.array([[2.0]]), np.array([3]))
+
+
+# --------------------------------------------------------------------------- #
+# IR round-trip: rows -> runs -> rows, and sidecar save/load
+# --------------------------------------------------------------------------- #
+def test_ir_roundtrips_rows_exactly(store_dir):
+    store = _store(store_dir)
+    config = IRConfig()
+    ir = build_ir(store, config)
+    assert ir.n_runs < ir.n_rows            # the corpus actually compacts
+    frame = store.read_all()
+    seen = 0
+    for key, seg in frame.group_streams():
+        if key[0] < 0:
+            continue
+        stream = ir.streams[key]
+        states_ref = classify_series(
+            seg["program_resident"].astype(bool), seg.activity_pct(),
+            seg.comm_gbs(), config.classifier)
+        low_ref = low_activity_series(seg, config.low_config())
+        states, low = stream.expand()
+        np.testing.assert_array_equal(states, states_ref)
+        np.testing.assert_array_equal(low, low_ref)
+        np.testing.assert_array_equal(stream.power, seg["power"])
+        np.testing.assert_array_equal(stream.ts(), seg["timestamp"])
+        # runs are maximal: re-encoding the expansion reproduces the table
+        code = states.astype(np.int16) * 2 + low
+        assert np.count_nonzero(np.diff(code)) + 1 == stream.n_runs
+        # per-run power sums are partial sums of exactly these samples
+        # (a run spanning shard boundaries accumulates per shard, so the
+        # association — not the sample set — may differ from one reduceat)
+        off = stream.run_offsets()
+        np.testing.assert_allclose(
+            stream.power_sum,
+            np.add.reduceat(stream.power, off[:-1]), rtol=1e-12)
+        seen += 1
+    assert seen == len(ir.streams)
+
+
+def test_sidecar_roundtrip_is_lossless(store_dir):
+    store = _store(store_dir)
+    config = IRConfig()
+    ir = build_ir(store, config)
+    path = save_sidecar(ir, store)
+    assert path.exists()
+    loaded = load_sidecar(store, config)
+    assert loaded is not None
+    assert loaded.source_rows == ir.source_rows
+    assert set(loaded.streams) == set(ir.streams)
+    for key, a in ir.streams.items():
+        b = loaded.streams[key]
+        assert (a.host_label, a.platform_id, a.ts_first, a.dt_s) == \
+            (b.host_label, b.platform_id, b.ts_first, b.dt_s)
+        for field in ("state", "low", "length", "power_sum", "power"):
+            np.testing.assert_array_equal(getattr(a, field),
+                                          getattr(b, field))
+
+
+def test_sidecar_invalidation(store_dir):
+    with tempfile.TemporaryDirectory() as d:
+        store = TelemetryStore(d, shard_format="npy_dir")
+        generate_cluster(n_devices=2, horizon_s=1200, seed=5, store=store,
+                         shard_s=600)
+        default_cfg = IRConfig()
+        ir = get_ir(store, default_cfg)
+        assert load_sidecar(store, default_cfg) is not None
+        # a different classifier config hashes to a different sidecar: miss
+        permissive = IRConfig(
+            classifier=ClassifierConfig(activity_threshold_pct=10.0))
+        assert permissive.config_hash() != default_cfg.config_hash()
+        assert load_sidecar(store, permissive) is None
+        ir2 = get_ir(store, permissive)
+        assert ir2.config == permissive
+        # both sidecars now coexist under their own manifest keys
+        assert len(store.manifest["run_ir"]) == 2
+        # appending to the store invalidates (source_rows mismatch)
+        generate_cluster(n_devices=1, horizon_s=900, seed=6, store=store,
+                         shard_s=900)
+        assert load_sidecar(store, default_cfg) is None
+        ir3 = get_ir(store, default_cfg)      # rebuilt from the grown store
+        assert ir3.source_rows == store.total_rows
+        assert ir3.source_rows > ir.source_rows
+        assert load_sidecar(store, default_cfg) is not None
+
+
+def test_irregular_sampling_is_rejected_and_falls_back():
+    frame = TelemetryFrame.from_rows([
+        {"timestamp": float(t), "job_id": 1, "program_resident": 1,
+         "power": 100.0, "sm": 50.0, "hostname": 0, "device_id": 0,
+         "platform": 0}
+        for t in (0.0, 1.0, 2.0, 5.0, 6.0)])      # gap at t=3,4
+    with tempfile.TemporaryDirectory() as d:
+        store = TelemetryStore(d)
+        store.write_shard(frame, host="h0")
+        with pytest.raises(IRUnsupportedError):
+            build_ir(store, IRConfig())
+        # the sweep kernel falls back to the row path instead of raising
+        f = run_sweep(store, [NoOpPolicy(), PowerCapPolicy(cap_fraction=0.5)],
+                      min_job_duration_s=0.0, min_interval_s=1.0,
+                      compact=True)
+        assert f.n_runs == 0 and f.n_rows == 5
+
+
+# --------------------------------------------------------------------------- #
+# trigger index: the run-level decision constant
+# --------------------------------------------------------------------------- #
+def test_downscale_trigger_index_matches_accumulate():
+    for eps in (0.5, 1.0, 2.0, 0.3):
+        for x in (0.5, 1.0, 3.0, 8.0, 15.0):
+            k = downscale_trigger_index(eps, x)
+            folds = np.add.accumulate(np.full(64, eps))
+            ref = int(np.argmax(folds > x)) if folds[-1] > x else 64
+            assert min(k, 64) == ref, (eps, x)
+
+
+# --------------------------------------------------------------------------- #
+# compact == row-exact: time/count metrics bit-identical, energies <= 1e-9
+# --------------------------------------------------------------------------- #
+EXACT_FIELDS = ("name", "params", "n_jobs", "wake_events",
+                "downscale_events", "throttled_time_s")
+FLOAT_FIELDS = ("baseline_energy_j", "counterfactual_energy_j",
+                "energy_saved_j", "saved_fraction", "penalty_s",
+                "penalty_fraction", "exec_idle_energy_fraction_baseline",
+                "exec_idle_energy_fraction_cf")
+
+
+def assert_equivalent(ref, cmp_):
+    assert len(ref.outcomes) == len(cmp_.outcomes)
+    assert ref.n_rows == cmp_.n_rows
+    for a, b in zip(ref.outcomes, cmp_.outcomes):
+        for f in EXACT_FIELDS:
+            assert getattr(a, f) == getattr(b, f), (a.name, a.params, f)
+        for f in FLOAT_FIELDS:
+            # 1e-9 relative; atol floors ratios whose numerators are
+            # themselves ~1e-12 of the fleet totals (pure float-order noise)
+            assert np.isclose(getattr(a, f), getattr(b, f),
+                              rtol=1e-9, atol=1e-9), (a.name, a.params, f)
+        np.testing.assert_allclose(a.per_job_saved_fraction,
+                                   b.per_job_saved_fraction,
+                                   rtol=1e-9, atol=1e-9)
+        np.testing.assert_allclose(a.per_job_penalty_s, b.per_job_penalty_s,
+                                   rtol=1e-9, atol=1e-9)
+
+
+def mixed_grid(rng):
+    """Random mix of all supported families plus configs the IR must route
+    to the row fallback (foreign thresholds, unsupported composite order)."""
+    grid = [NoOpPolicy()]
+    for _ in range(int(rng.integers(1, 4))):
+        grid.append(DownscalePolicy(config=ControllerConfig(
+            threshold_x_s=float(rng.uniform(0.5, 8.0)),
+            cooldown_y_s=float(rng.uniform(1.0, 10.0)),
+            interval_eps_s=float(rng.choice([0.5, 1.0, 2.0])),
+            mode=rng.choice([DownscaleMode.SM_ONLY, DownscaleMode.SM_AND_MEM]),
+        )))
+    for _ in range(int(rng.integers(1, 3))):
+        n_dev = int(rng.choice([2, 4]))
+        grid.append(ParkingPolicy(
+            pool=PoolConfig(n_devices=n_dev, policy=PoolPolicy.CONSOLIDATED,
+                            n_active=int(rng.integers(1, n_dev))),
+            resume_latency_s=float(rng.uniform(2.0, 40.0))))
+    for _ in range(int(rng.integers(1, 3))):
+        grid.append(PowerCapPolicy(
+            cap_fraction=float(rng.uniform(0.3, 0.9))))
+    grid.append(CompositePolicy((
+        ParkingPolicy(pool=PoolConfig(n_devices=4,
+                                      policy=PoolPolicy.CONSOLIDATED,
+                                      n_active=2),
+                      resume_latency_s=float(rng.uniform(2.0, 30.0))),
+        DownscalePolicy(config=ControllerConfig(
+            threshold_x_s=float(rng.uniform(0.5, 8.0)))),
+    )))
+    if rng.random() < 0.5:
+        # foreign low-activity thresholds: unsupported, row fallback
+        grid.append(DownscalePolicy(config=ControllerConfig(
+            activity_threshold=0.03)))
+    if rng.random() < 0.5:
+        # downscale-then-parking: unsupported composite order, row fallback
+        grid.append(CompositePolicy((
+            DownscalePolicy(),
+            ParkingPolicy(pool=PoolConfig(n_devices=2,
+                                          policy=PoolPolicy.CONSOLIDATED,
+                                          n_active=1)),
+        )))
+    order = rng.permutation(len(grid))
+    return [grid[i] for i in order]
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=4, deadline=None)
+def test_compact_matches_row_exact_any_grid_chunking_workers(seed):
+    rng = np.random.default_rng(seed % 100000)
+    grid = mixed_grid(rng)
+    shard_s = int(rng.choice([300, 700, 1500]))
+    with tempfile.TemporaryDirectory() as d:
+        store = TelemetryStore(d)
+        generate_cluster(n_devices=6, horizon_s=1500,
+                         seed=int(rng.integers(0, 100)),
+                         store=store, shard_s=shard_s)
+        assert len({s["host"] for s in store.manifest["shards"]}) > 1
+        ref = run_sweep(store, grid, min_job_duration_s=300, compact=False)
+        for workers in (1, 2):
+            cmp_ = run_sweep(store, grid, workers=workers,
+                             min_job_duration_s=300, compact=True)
+            assert_equivalent(ref, cmp_)
+            assert cmp_.n_runs > 0 and cmp_.n_runs < cmp_.n_rows
+
+
+def test_compact_supports_min_interval_variants(store_dir):
+    store = _store(store_dir)
+    grid = [NoOpPolicy(), DownscalePolicy(), PowerCapPolicy(),
+            ParkingPolicy(pool=PoolConfig(n_devices=4,
+                                          policy=PoolPolicy.CONSOLIDATED,
+                                          n_active=1))]
+    for min_interval in (1.0, 5.0, 10.0):
+        ref = run_sweep(store, grid, min_job_duration_s=0.0,
+                        min_interval_s=min_interval, compact=False)
+        cmp_ = run_sweep(store, grid, min_job_duration_s=0.0,
+                         min_interval_s=min_interval, compact=True)
+        assert_equivalent(ref, cmp_)
+
+
+def test_ir_supported_classification():
+    cfg = IRConfig()
+    assert ir_supported(NoOpPolicy(), cfg)
+    assert ir_supported(DownscalePolicy(), cfg)
+    assert ir_supported(PowerCapPolicy(), cfg)
+    park = ParkingPolicy(pool=PoolConfig(n_devices=2,
+                                         policy=PoolPolicy.CONSOLIDATED,
+                                         n_active=1))
+    assert ir_supported(park, cfg)
+    assert ir_supported(CompositePolicy((park, DownscalePolicy())), cfg)
+    assert not ir_supported(CompositePolicy((DownscalePolicy(), park)), cfg)
+    assert not ir_supported(DownscalePolicy(config=ControllerConfig(
+        activity_threshold=0.03)), cfg)
+
+    class Custom:
+        pass
+    assert not ir_supported(Custom(), cfg)
+
+
+def test_frontier_reports_compaction(store_dir):
+    store = _store(store_dir)
+    f = run_sweep(store, default_policy_grid(dense=False),
+                  min_job_duration_s=0.0)
+    assert f.n_runs > 0
+    assert f.compaction_ratio > 1.0
+    text = format_frontier(f, top=3)
+    assert "compaction" in text and "runs" in text
+    # round-trips through the JSON schema
+    from repro.whatif import frontier_from_dict
+    assert frontier_from_dict(frontier_to_dict(f)).n_runs == f.n_runs
+
+
+# --------------------------------------------------------------------------- #
+# search: IR reuse and warm start
+# --------------------------------------------------------------------------- #
+def test_search_compact_matches_row_and_reuses_ir(store_dir):
+    store = _store(store_dir)
+    row = search_frontier(store, min_job_duration_s=0.0, compact=False)
+    cmp_ = search_frontier(store, min_job_duration_s=0.0, compact=True)
+    # identical search trajectory: same evals, same knee decision
+    assert cmp_.n_evals == row.n_evals
+    assert cmp_.knee.params == row.knee.params
+    assert np.isclose(cmp_.knee.saved_fraction, row.knee.saved_fraction,
+                      rtol=1e-9, atol=1e-12)
+    assert cmp_.frontier.n_runs > 0
+
+
+def test_search_warm_start_seeds_previous_frontier(store_dir):
+    store = _store(store_dir)
+    cold = search_frontier(store, min_job_duration_s=0.0)
+    from repro.whatif import default_families
+    seeds = seed_points(default_families(), cold.frontier)
+    assert any(seeds.values())              # the Pareto set maps back
+    warm = search_frontier(store, min_job_duration_s=0.0,
+                           init_frontier=cold.frontier)
+    # the cold knee is evaluated in round 0 of the warm search
+    warm_round0_keys = warm.history[0].n_evals_total
+    assert any(o.params == cold.knee.params
+               for o in warm.frontier.outcomes[:warm_round0_keys])
+    assert np.isclose(warm.knee.saved_fraction, cold.knee.saved_fraction,
+                      atol=0.01)
+    # warm start also loads from a saved frontier JSON
+    import pathlib
+    from repro.whatif import save_frontier
+    with tempfile.TemporaryDirectory() as d:
+        path = pathlib.Path(d) / "frontier.json"
+        save_frontier(cold.frontier, path)
+        warm2 = search_frontier(store, min_job_duration_s=0.0,
+                                init_frontier=str(path))
+    assert warm2.n_evals == warm.n_evals
+
+
+def test_warm_start_respects_tight_eval_budget(store_dir):
+    """Seeds ride along only as far as the budget allows: a max_evals that
+    exactly covers the coarse grids stays valid with init_frontier."""
+    store = _store(store_dir)
+    from repro.whatif import default_families
+    fams = default_families(composites=False)
+    cold = search_frontier(store, families=fams, min_job_duration_s=0.0)
+    coarse_n = 1 + sum(len(f.coarse_points()) for f in fams)  # + noop
+    warm = search_frontier(store, families=fams, max_evals=coarse_n,
+                           min_job_duration_s=0.0,
+                           init_frontier=cold.frontier)
+    assert warm.n_evals <= coarse_n
+
+
+def test_sidecar_save_preserves_concurrent_appends():
+    """save_sidecar merges its manifest key atomically into the on-disk
+    manifest — shards appended by another handle since this one opened
+    must survive the derived-data write."""
+    with tempfile.TemporaryDirectory() as d:
+        store = TelemetryStore(d, shard_format="npy_dir")
+        generate_cluster(n_devices=2, horizon_s=1200, seed=5, store=store,
+                         shard_s=600)
+        ir = build_ir(store, IRConfig())
+        writer = TelemetryStore(d)          # a concurrent appender
+        generate_cluster(n_devices=1, horizon_s=600, seed=9, store=writer,
+                         shard_s=600)
+        n_shards = len(writer.manifest["shards"])
+        assert n_shards > len(store.manifest["shards"])
+        save_sidecar(ir, store)
+        fresh = TelemetryStore(d)
+        assert len(fresh.manifest["shards"]) == n_shards
+        assert ir.config.config_hash() in fresh.manifest["run_ir"]

@@ -40,7 +40,7 @@ def test_evaluate_matches_run_sweep_outcomes(store_dir):
     assert len(outcomes) == len(grid)
     assert all(not o.pareto for o in outcomes)   # flags belong to sets
     swept = run_sweep(store, grid, min_job_duration_s=0.0)
-    flagged = assemble_frontier(outcomes, swept.n_rows)
+    flagged = assemble_frontier(outcomes, swept.n_rows, swept.n_runs)
     assert frontier_to_dict(flagged) == frontier_to_dict(swept)
 
 
