@@ -17,10 +17,15 @@ class Row:
     derived: float
     target: float | None = None
     ok: bool | None = None
+    #: device count the row was measured on (jax-backend rows: mesh size;
+    #: None = host-only / not device-dependent). Committed baselines carry
+    #: it so a regression on an N-device row is compared like-for-like.
+    devices: int | None = None
 
     def csv(self) -> str:
         us = "" if self.us_per_call is None else f"{self.us_per_call:.1f}"
-        return f"{self.name},{us},{self.derived:.6g}"
+        dev = "" if self.devices is None else str(self.devices)
+        return f"{self.name},{us},{self.derived:.6g},{dev}"
 
 
 def check_abs(value: float, target: tuple[float, float]) -> bool:
@@ -58,7 +63,7 @@ class Bench:
         self.rows: list[Row] = []
 
     def add(self, metric: str, value: float, target=None, mode="abs",
-            seconds: float | None = None):
+            seconds: float | None = None, devices: int | None = None):
         ok = None
         tval = None
         if target is not None:
@@ -66,7 +71,7 @@ class Bench:
             ok = _CHECKS[mode](value, target)
         us = None if seconds is None else seconds * 1e6
         self.rows.append(Row(f"{self.name}/{metric}", us, float(value),
-                             tval, ok))
+                             tval, ok, devices))
 
     def summary(self) -> str:
         n_ok = sum(1 for r in self.rows if r.ok)

@@ -1,0 +1,72 @@
+"""Kernel-suite benchmark: the run-replay cap-bucket scan.
+
+The only Pallas kernel on the telemetry hot path is the PowerCap
+cap-bucket scan (:mod:`repro.kernels.run_replay`); this bench validates
+the dispatcher stack on whatever backend CI has — the interpret-mode
+Pallas kernel and the jnp reference against a NumPy ``searchsorted``
+oracle — and records the reference path's throughput (the path the jax
+replay backend actually uses off-TPU). ``--quick`` keeps the correctness
+gates and shrinks shapes; there are no timing targets in either mode
+(the scan is memory-bound and container noise swamps it).
+
+Run:  PYTHONPATH=src python -m benchmarks.run --only kernels [--quick]
+"""
+from __future__ import annotations
+
+import math
+import time
+
+import numpy as np
+
+from benchmarks import common
+from benchmarks.common import Bench
+
+
+def _np_counts(sorted_p, caps):
+    sp = np.asarray(sorted_p)
+    cv = np.asarray(caps)
+    return np.stack([
+        sp.shape[1] - np.searchsorted(sp[r], cv[r], side="right")
+        for r in range(sp.shape[0])]).astype(np.int32)
+
+
+def bench_kernels() -> Bench:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import run_replay as rr
+
+    quick = common.QUICK
+    rows, n, c = (32, 512, 64) if quick else (256, 4096, 1024)
+
+    b = Bench("kernels")
+    key = jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    sp = jnp.sort(jax.random.normal(k1, (rows, n)) * 100.0, axis=1)
+    caps = jax.random.normal(k2, (rows, c)) * 100.0
+    expect = _np_counts(sp, caps)
+
+    interp = np.asarray(rr.cap_bucket_scan(sp, caps,
+                                           interpret=rr.default_interpret()))
+    refv = np.asarray(rr.cap_bucket_scan_reference(sp, caps))
+    disp = np.asarray(rr.cap_bucket_counts(sp, caps))
+
+    b.add("cap_scan_rows_x_configs", float(rows * c))
+    b.add("cap_scan_matches_oracle",
+          float(np.array_equal(interp, expect)), (1.0, 0.01))
+    b.add("cap_scan_reference_matches_oracle",
+          float(np.array_equal(refv, expect)), (1.0, 0.01))
+    b.add("cap_scan_dispatcher_matches_oracle",
+          float(np.array_equal(disp, expect)), (1.0, 0.01))
+    b.add("cap_scan_default_interpret", float(rr.default_interpret()))
+
+    fn = jax.jit(rr.cap_bucket_counts)
+    fn(sp, caps).block_until_ready()
+    best = math.inf
+    for _ in range(1 if quick else 5):
+        t0 = time.perf_counter()
+        fn(sp, caps).block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    b.add("cap_scan_mlookups_per_s", rows * c / best / 1e6, seconds=best,
+          devices=1)
+    return b

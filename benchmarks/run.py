@@ -50,28 +50,37 @@ def main() -> None:
                          "baselines, e.g. BENCH_fleet_analyze.json)")
     ap.add_argument("--quick", action="store_true",
                     help="CI mode for the throughput benches (fleet, "
-                         "whatif): tiny corpora, timing targets disabled, "
-                         "correctness targets kept. Paper-figure benches "
-                         "ignore it (their targets are paper numbers that "
-                         "only hold at full corpus size) — combine with "
-                         "--only fleet,whatif for a fast CI pass")
+                         "whatif, kernels): tiny corpora, timing targets "
+                         "disabled, correctness targets kept, jax pinned "
+                         "to CPU. Paper-figure benches ignore it (their "
+                         "targets are paper numbers that only hold at full "
+                         "corpus size) — combine with "
+                         "--only fleet,whatif,kernels for a fast CI pass")
     args = ap.parse_args()
 
     if args.quick:
+        import os
+
         from benchmarks import common
         common.QUICK = True
+        # hermetic CI: pin jax to the host CPU before anything imports it,
+        # so the quick jax-backend rows behave identically on machines
+        # with and without accelerators
+        os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
     from benchmarks.fleet_bench import bench_fleet_analyze
+    from benchmarks.kernels_bench import bench_kernels
     from benchmarks.paper_benches import ALL_BENCHES
     from benchmarks.whatif_bench import bench_whatif_search, bench_whatif_sweep
     benches = list(ALL_BENCHES) + [bench_roofline, bench_fleet_analyze,
-                                   bench_whatif_sweep, bench_whatif_search]
+                                   bench_whatif_sweep, bench_whatif_search,
+                                   bench_kernels]
     if args.only:
         keys = args.only.split(",")
         benches = [fn for fn in benches
                    if any(k in fn.__name__ for k in keys)]
 
-    print("name,us_per_call,derived,target,ok")
+    print("name,us_per_call,derived,devices,target,ok")
     summaries = []
     all_rows = []
     all_ok = True
@@ -82,8 +91,8 @@ def main() -> None:
             ok = "" if row.ok is None else str(row.ok)
             print(f"{row.csv()},{target},{ok}", flush=True)
             all_rows.append({"name": row.name, "us_per_call": row.us_per_call,
-                             "derived": row.derived, "target": row.target,
-                             "ok": row.ok})
+                             "derived": row.derived, "devices": row.devices,
+                             "target": row.target, "ok": row.ok})
         summaries.append(bench.summary())
         if any(r.ok is False for r in bench.rows):
             all_ok = False

@@ -29,6 +29,13 @@ dense batched throughput (``compact_speedup_target_3x``).
 ``configs_per_s_batched_dense`` carries a one-sided regression floor
 (``mode="min"``) instead of an informational null target.
 
+The jax replay backend (:mod:`repro.whatif.backend`) adds
+``configs_per_s_compact_dense_jax`` (floored at the committed NumPy
+compact baseline, ``mode="min"``, with the measuring device count in the
+``devices`` column), a ``jax_matches_numpy_oracle`` exactness gate that
+runs in ``--quick`` CI too, and — full mode only — a 10^4-config grid
+replayed end-to-end (``configs_per_s_compact_jax_10k``).
+
 Run:  PYTHONPATH=src python -m benchmarks.run --only whatif \
           [--json BENCH_whatif_sweep.json] [--quick]
 
@@ -73,6 +80,12 @@ QUICK_N_DEVICES = 8
 QUICK_HORIZON_S = 2700
 QUICK_SHARD_S = 900
 
+#: one-sided floor for the jax-backend dense compact sweep: the committed
+#: NumPy ``configs_per_s_compact_dense`` baseline. The acceptance target
+#: is >= 5x this; flooring at 1x lets CI absorb container noise while
+#: still catching a backend that regresses below the path it replaces.
+JAX_DENSE_FLOOR = 500.9266642388074
+
 
 def _timed(fn, reps):
     """(min wall seconds over ``reps`` runs, last result)."""
@@ -107,6 +120,34 @@ def _frontiers_equivalent(ref, cmp_, rtol=1e-9, atol=1e-9) -> bool:
                            rtol=rtol, atol=atol):
             return False
     return True
+
+
+def _grid_10k():
+    """A dense per-platform 10^4-config grid (the arXiv 2004.08177-style
+    deadline-sweep scale): 1 no-op + 2048 Algorithm-1 downscale (32 X x
+    32 Y x 2 modes) + 50 consolidation pools + 7901 power caps."""
+    from repro.core.controller import ControllerConfig, DownscaleMode
+    from repro.core.imbalance import PoolConfig, PoolPolicy
+    from repro.whatif import (DownscalePolicy, NoOpPolicy, ParkingPolicy,
+                              PowerCapPolicy)
+    grid = [NoOpPolicy()]
+    for x in np.linspace(0.5, 16.0, 32):
+        for y in np.linspace(1.0, 12.0, 32):
+            for mode in (DownscaleMode.SM_ONLY, DownscaleMode.SM_AND_MEM):
+                grid.append(DownscalePolicy(config=ControllerConfig(
+                    threshold_x_s=round(float(x), 4),
+                    cooldown_y_s=round(float(y), 4), mode=mode)))
+    for n_devices in (4, 8):
+        for k in range(1, n_devices):
+            for resume_s in (2.0, 5.0, 10.0, 30.0, 60.0):
+                grid.append(ParkingPolicy(
+                    pool=PoolConfig(n_devices=n_devices,
+                                    policy=PoolPolicy.CONSOLIDATED,
+                                    n_active=k),
+                    resume_latency_s=resume_s))
+    for frac in np.linspace(0.2, 0.99, 10_000 - len(grid)):
+        grid.append(PowerCapPolicy(cap_fraction=round(float(frac), 6)))
+    return grid
 
 
 def bench_whatif_sweep() -> Bench:
@@ -154,6 +195,27 @@ def bench_whatif_sweep() -> Bench:
             lambda: run_sweep(store, dense_grid, workers=1,
                               min_job_duration_s=0.0, compact=True), reps_b)
 
+        # jax backend: warm-up pays compilation + pack, then the timed
+        # replays measure the steady state — same protocol as the compact
+        # rows above (the IR cache is already warm)
+        try:
+            import jax as _jax
+
+            import repro.whatif.backend  # noqa: F401
+            n_jax_devices = len(_jax.devices())
+        except Exception:
+            n_jax_devices = 0
+        if n_jax_devices:
+            def jax_sweep(pols):
+                return run_sweep(store, pols, workers=1,
+                                 min_job_duration_s=0.0, backend="jax")
+            jax_sweep(dense_grid)
+            t_jax, jax_front = _timed(lambda: jax_sweep(dense_grid), reps_b)
+            if not quick:
+                grid_10k = _grid_10k()
+                jax_sweep(grid_10k)
+                t_10k, front_10k = _timed(lambda: jax_sweep(grid_10k), 1)
+
     n_cfg = len(grid)
     b.add("rows", float(rows))
     b.add("n_configs", float(n_cfg), (48.0, 0.01))
@@ -197,6 +259,28 @@ def bench_whatif_sweep() -> Bench:
           float(_frontiers_equivalent(dense_row, compact)), (1.0, 0.01))
     b.add("compact_reports_runs", float(compact.n_runs == ir.n_runs),
           (1.0, 0.01))
+
+    # ---- jax backend (jit'd run-level evaluators) rows ----
+    b.add("jax_devices", float(n_jax_devices))
+    if n_jax_devices:
+        b.add("configs_per_s_compact_dense_jax", len(dense_grid) / t_jax,
+              None if quick else (JAX_DENSE_FLOOR, 0.0), mode="min",
+              seconds=t_jax, devices=n_jax_devices)
+        jax_speedup = t_compact / t_jax
+        b.add("jax_speedup_vs_compact_dense", jax_speedup,
+              devices=n_jax_devices)
+        b.add("jax_speedup_target_5x", float(jax_speedup >= 5.0),
+              None if quick else (1.0, 0.01))
+        # the oracle gate runs in --quick too: exactness is corpus-size
+        # independent, so CI always checks it even with timings disabled
+        b.add("jax_matches_numpy_oracle",
+              float(_frontiers_equivalent(compact, jax_front)), (1.0, 0.01))
+        if not quick:
+            b.add("grid10k_configs", float(len(grid_10k)), (10000.0, 0.01))
+            b.add("configs_per_s_compact_jax_10k", len(grid_10k) / t_10k,
+                  seconds=t_10k, devices=n_jax_devices)
+            b.add("grid10k_pareto_set_size",
+                  float(len(front_10k.pareto_set())))
 
     noop = next(o for o in serial.outcomes if o.name == "noop")
     anchored = noop.energy_saved_j == 0.0 and noop.penalty_s == 0.0

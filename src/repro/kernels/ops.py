@@ -1,8 +1,11 @@
 """Jit'd public wrappers for the Pallas kernels.
 
-``interpret`` defaults to True on CPU (this container) and False on TPU,
-where the compiled kernels are the target. The wrappers also adapt between
-the model-code layout (B, S, H, d) and the kernels' head-major layout.
+``interpret`` defaults to True everywhere but TPU (where the compiled
+kernels are the target); ``REPRO_PALLAS_INTERPRET=0/1`` overrides the
+detection (see :func:`repro.kernels.run_replay.default_interpret`), so
+CPU-only CI can force interpret mode regardless of what
+``jax.default_backend()`` reports. The wrappers also adapt between the
+model-code layout (B, S, H, d) and the kernels' head-major layout.
 """
 from __future__ import annotations
 
@@ -13,13 +16,13 @@ import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
 from repro.kernels import decode_attention as _da
+from repro.kernels import run_replay as _rr
 from repro.kernels import rwkv6_scan as _wkv
 from repro.kernels import ssm_scan as _ssm
 from repro.kernels import rmsnorm as _rms
 
-
-def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+#: canonical interpret-mode detection, shared with the run_replay kernel
+_default_interpret = _rr.default_interpret
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
@@ -74,3 +77,11 @@ def rmsnorm(x, weight, eps: float = 1e-6, block_rows: int = 256,
     interpret = _default_interpret() if interpret is None else interpret
     return _rms.rmsnorm(x, weight, eps=eps, block_rows=block_rows,
                         interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def cap_bucket_scan(sorted_p, caps, use_pallas: bool | None = None):
+    """``#{sorted_p[r] > caps[r, c]}`` per row — the run-replay cap scan.
+    ``use_pallas=None`` resolves to the compiled kernel on TPU and the jnp
+    reference elsewhere (:func:`repro.kernels.run_replay.cap_bucket_counts`)."""
+    return _rr.cap_bucket_counts(sorted_p, caps, use_pallas=use_pallas)

@@ -1,0 +1,98 @@
+"""Pallas TPU kernel for the run-level replay's cap-bucket scan.
+
+The PowerCap run evaluator reduces every cap fraction to ``k = #{p >
+cap}`` against a stream's *sorted* per-state power buckets
+(:meth:`repro.whatif.ir.StreamIR.cap_buckets`): clipped energy, throttle
+count and the cube-law penalty are then O(1) gathers into prefix sums.
+This module provides that scan for the JAX backend
+(:mod:`repro.whatif.backend`):
+
+* :func:`cap_bucket_scan` — the Pallas kernel: one sorted row per grid
+  step, a fixed-trip vectorized binary search over the config axis in
+  VMEM (no per-config HBM traffic);
+* :func:`cap_bucket_scan_reference` — the pure-jnp oracle (vmapped
+  ``searchsorted``), which is also the faster choice under XLA:CPU;
+* :func:`cap_bucket_counts` — the dispatcher the backend calls: the
+  compiled Pallas kernel on TPU, the jnp reference elsewhere (the
+  ``_default_interpret()`` pattern from :mod:`repro.kernels.ops`).
+
+Rows may be *front-padded* with ``-inf`` to a common bucket width: since
+``-inf <= cap`` always, padding inflates the searchsorted insertion point
+and ``n - insertion`` still counts exactly the real samples above the cap.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def default_interpret() -> bool:
+    """Run Pallas kernels in interpret mode? True everywhere but TPU, with
+    a ``REPRO_PALLAS_INTERPRET=0/1`` env override for CI and debugging."""
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env.strip().lower() not in ("0", "false", "no", "")
+    return jax.default_backend() != "tpu"
+
+
+def _cap_scan_kernel(sp_ref, caps_ref, k_ref, *, n: int, iters: int):
+    sp = sp_ref[...][0]                       # [Np] ascending
+    caps = caps_ref[...]                      # [1, C]
+    lo = jnp.zeros(caps.shape, dtype=jnp.int32)
+    hi = jnp.full(caps.shape, n, dtype=jnp.int32)
+    # bisect_right with a static trip count: lo converges to the insertion
+    # point (#{p <= cap}) in <= log2(n)+1 halvings; exhausted lanes keep
+    # lo == hi and stop moving
+    for _ in range(iters):
+        cont = lo < hi
+        mid = jnp.minimum((lo + hi) // 2, n - 1)
+        v = jnp.take(sp, mid[0], axis=0)[None, :]
+        go_right = cont & (v <= caps)
+        lo = jnp.where(go_right, mid + 1, lo)
+        hi = jnp.where(cont & ~go_right, mid, hi)
+    k_ref[...] = n - lo
+
+
+def cap_bucket_scan(sorted_p, caps, interpret: bool = False):
+    """``k[r, c] = #{sorted_p[r, :] > caps[r, c]}`` via Pallas.
+
+    ``sorted_p``: [rows, Np] ascending (``-inf`` front-padding allowed);
+    ``caps``: [rows, C]. Returns int32 [rows, C], exactly
+    ``Np - searchsorted(sorted_p[r], caps[r], side="right")``.
+    """
+    rows, n = sorted_p.shape
+    c = caps.shape[1]
+    kernel = functools.partial(_cap_scan_kernel, n=n,
+                               iters=max(n.bit_length(), 1))
+    return pl.pallas_call(
+        kernel,
+        grid=(rows,),
+        in_specs=[
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, c), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, c), jnp.int32),
+        interpret=interpret,
+    )(sorted_p, caps)
+
+
+def cap_bucket_scan_reference(sorted_p, caps):
+    """Pure-jnp oracle: vmapped ``searchsorted(side="right")`` per row."""
+    ub = jax.vmap(lambda sp, cv: jnp.searchsorted(sp, cv, side="right"))(
+        sorted_p, caps)
+    return (sorted_p.shape[1] - ub).astype(jnp.int32)
+
+
+def cap_bucket_counts(sorted_p, caps, use_pallas: bool | None = None):
+    """Backend dispatcher: compiled Pallas kernel on TPU, jnp elsewhere
+    (interpret-mode Pallas is far slower than XLA:CPU searchsorted)."""
+    if use_pallas is None:
+        use_pallas = not default_interpret()
+    if use_pallas:
+        return cap_bucket_scan(sorted_p, caps)
+    return cap_bucket_scan_reference(sorted_p, caps)

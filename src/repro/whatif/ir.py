@@ -36,6 +36,14 @@ dt_s*arange(n)`` exactly, per stream) — the run table stores offsets, not
 timestamps. Irregular streams raise :class:`IRUnsupportedError` and the
 callers (:func:`repro.whatif.sweep.evaluate`) fall back to the row path.
 
+The IR is also the input format of the JAX replay backend
+(:mod:`repro.whatif.backend`): :func:`repro.whatif.backend.pack_ir`
+bridges these ragged per-stream run tables into padded power-of-two
+device buckets, and the jit'd family kernels replay ``(n_configs,
+n_runs)`` blocks under the same bit-exactness contract, with the config
+axis optionally sharded over a mesh
+(:func:`repro.whatif.backend.config_mesh`).
+
 Memory: unlike the row paths (peak ~ one shard), a resident IR holds the
 store's *power column* (~8 bytes/row, 1/25th of the full schema) plus the
 run tables and lazy per-stream aggregates — the price of O(runs)

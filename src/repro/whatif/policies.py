@@ -1210,29 +1210,39 @@ def _run_downscale(stream, plat: PlatformSpec, min_samples: int, dt_s: float,
     risky = np.zeros(n_low, dtype=bool)
     risky[1:] = (ts0s[1:] - busy_after[:-1]) < float(y.max())
 
-    # phase 2 — resolve cooldown suppression sequentially; the loop body is
-    # O(1) numpy ops per run, and only risky runs with a recent fire pay
-    # for the searchsorted (exact row-kernel trigger index)
+    # phase 2 — resolve cooldown suppression sequentially. Only *risky*
+    # runs (busy gap shorter than the family's largest cooldown) can have
+    # phase-1 fires suppressed: with none, every trigger index is the
+    # family constant ``trig`` and the whole sequential pass is skipped.
+    # Inside the loop, only risky runs with a recent fire pay for the
+    # searchsorted (exact row-kernel trigger index)
     i_rows: dict[int, np.ndarray] = {}
-    last_fire = np.full(n_cfg, -1, dtype=np.int64)
-    any_fire = False
-    ts_full = None
-    for k in range(n_low):
-        if any_fire and risky[k]:
-            t_cd = np.where(last_fire >= 0,
-                            busy_after[np.maximum(last_fire, 0)] + y,
-                            -np.inf)
-            if np.any(t_cd > ts0s[k]):
-                if ts_full is None:
-                    ts_full = stream.ts()
-                i_row = np.maximum(trig, np.searchsorted(
-                    ts_full[s0s[k]:e0s[k]], t_cd, side="left"))
-                fire[k] &= i_row < lens[k]
-                i_rows[k] = i_row
-        row = fire[k]
-        if row.any():
-            any_fire = True
-            np.copyto(last_fire, k, where=row)
+    if risky.any():
+        last_fire = np.full(n_cfg, -1, dtype=np.int64)
+        any_fire = False
+        ts_full = None
+        for k in range(n_low):
+            if any_fire and risky[k]:
+                t_cd = np.where(last_fire >= 0,
+                                busy_after[np.maximum(last_fire, 0)] + y,
+                                -np.inf)
+                aff = t_cd > ts0s[k]
+                if aff.any():
+                    if ts_full is None:
+                        ts_full = stream.ts()
+                    # configs whose cooldown ends at or before the run start
+                    # keep the phase-1 trigger index: searchsorted would
+                    # return 0 and max(trig, 0) == trig, so only the
+                    # affected subset pays
+                    i_row = trig.copy()
+                    i_row[aff] = np.maximum(trig[aff], np.searchsorted(
+                        ts_full[s0s[k]:e0s[k]], t_cd[aff], side="left"))
+                    fire[k] &= i_row < lens[k]
+                    i_rows[k] = i_row
+            row = fire[k]
+            if row.any():
+                any_fire = True
+                np.copyto(last_fire, k, where=row)
 
     # phase 3 — bulk event counts and prefix-sum gathers over [K, C]
     n_down = fire.sum(axis=0).astype(np.int64)

@@ -47,7 +47,7 @@ from repro.whatif.policies import (CompositePolicy, DownscalePolicy,
                                    NoOpPolicy, ParkingPolicy, Policy,
                                    PowerCapPolicy)
 from repro.whatif.sweep import (Frontier, PolicyOutcome, assemble_frontier,
-                                _evaluate, _outcome, pareto_flags)
+                                _evaluate_outcomes, pareto_flags)
 
 if TYPE_CHECKING:
     from repro.telemetry.storage import TelemetryStore
@@ -471,6 +471,8 @@ def search_frontier(
     batched: bool = True,
     compact: bool | None = None,
     ir=None,
+    backend: str = "numpy",
+    dist=None,
     init_frontier=None,
     **replayer_kwargs,
 ) -> SearchResult:
@@ -493,7 +495,12 @@ def search_frontier(
     O(rows) build — and every refinement round replays against it, so
     rounds cost O(runs x new configs) instead of re-streaming and
     re-classifying the store (:mod:`repro.whatif.ir`). Pass ``ir=`` to
-    reuse one across searches.
+    reuse one across searches. ``backend="jax"`` additionally runs every
+    IR-capable round on the jit'd run-level evaluators
+    (:mod:`repro.whatif.backend`), config axis optionally sharded over
+    ``dist`` (:func:`repro.whatif.backend.config_mesh`); candidate counts
+    are padded to powers of two there, so refinement rounds of drifting
+    size reuse compilations.
 
     ``init_frontier`` (a :class:`~repro.whatif.sweep.Frontier` or a saved
     frontier JSON path) warm-starts the search: the previous frontier's
@@ -541,14 +548,14 @@ def search_frontier(
         if not cands:
             return 0
         pols = [pol for _, (_, _, pol) in cands]
-        results, rows, runs = _evaluate(
+        outs, rows, runs = _evaluate_outcomes(
             pols, store, workers=workers, hosts=hosts, mmap=mmap,
             batched=batched, replayer_kwargs=replayer_kwargs,
-            compact=compact, ir=ir)
+            compact=compact, ir=ir, backend=backend, dist=dist)
         n_rows = rows
         n_runs = max(n_runs, runs)
-        for (key, (fam_name, pt, _)), res in zip(cands, results):
-            outcomes[key] = _outcome(res)
+        for (key, (fam_name, pt, _)), out in zip(cands, outs):
+            outcomes[key] = out
             point_of[key] = (fam_name, pt)
             order.append(key)
             for ax_name, v in pt.items():

@@ -339,6 +339,104 @@ def _evaluate(
     return [r.finalize() for r in replayers], n_rows, 0
 
 
+def resolve_backend(backend: str) -> str:
+    """Resolve an ``evaluate``/``run_sweep`` ``backend`` argument.
+
+    ``"numpy"`` (the default and the bit-exactness oracle), ``"jax"`` (the
+    :mod:`repro.whatif.backend` accelerator path), or ``"auto"`` — jax when
+    importable, numpy otherwise, so scripts stay portable to machines
+    without the jax toolchain.
+    """
+    if backend == "auto":
+        try:
+            import repro.whatif.backend  # noqa: F401  (probe only)
+        except Exception:
+            return "numpy"
+        return "jax"
+    if backend not in ("numpy", "jax"):
+        raise ValueError(
+            f"unknown backend {backend!r}; use 'numpy', 'jax' or 'auto'")
+    return backend
+
+
+def _evaluate_outcomes(
+    configs: Sequence[Policy],
+    store: "TelemetryStore",
+    workers: int = 1,
+    hosts: Iterable[str] | None = None,
+    mmap: bool = False,
+    batched: bool = True,
+    replayer_kwargs: dict | None = None,
+    compact: bool | None = None,
+    ir=None,
+    backend: str = "numpy",
+    dist=None,
+) -> tuple[list[PolicyOutcome], int, int]:
+    """:func:`_evaluate` lifted to outcomes, with backend dispatch.
+
+    ``backend="jax"`` routes every IR-capable config through
+    :func:`repro.whatif.backend.replay_ir_outcomes` — the jit'd
+    ``(n_configs, n_runs)`` evaluators, config axis optionally sharded
+    over ``dist`` (a :class:`repro.distributed.context.DistContext` from
+    :func:`repro.whatif.backend.config_mesh`) — and the rest through the
+    NumPy row path; stores without a usable IR fall back to NumPy
+    entirely. The NumPy path remains the oracle: time/count metrics are
+    bit-identical across backends, energies/penalties <= 1e-9 relative
+    (tests/test_whatif_backend.py).
+    """
+    configs = list(configs)
+    replayer_kwargs = replayer_kwargs or {}
+    backend = resolve_backend(backend)
+    if backend == "jax" and (compact is None or compact):
+        from repro.whatif import ir as ir_mod
+
+        classifier = replayer_kwargs.get("classifier", None)
+        dt_s = replayer_kwargs.get("dt_s", 1.0)
+        if ir is not None:
+            ir_obj = ir
+        else:
+            from repro.core.states import DEFAULT_CLASSIFIER
+            cfg = ir_mod.ir_config_for(
+                configs, classifier or DEFAULT_CLASSIFIER, dt_s)
+            ir_obj = None
+            if any(ir_mod.ir_supported(p, cfg) for p in configs):
+                try:
+                    ir_obj = ir_mod.get_ir(store, cfg, workers=workers,
+                                           mmap=mmap)
+                except ir_mod.IRUnsupportedError:
+                    ir_obj = None       # e.g. irregular sampling: use rows
+        if ir_obj is not None:
+            sup = [i for i, p in enumerate(configs)
+                   if ir_mod.ir_supported(p, ir_obj.config)]
+            if sup:
+                from repro.whatif import backend as jax_backend
+                ir_kwargs = {k: v for k, v in replayer_kwargs.items()
+                             if k in ("platform_of", "min_job_duration_s",
+                                      "min_interval_s", "classifier", "dt_s")}
+                sup_out, n_rows, n_runs = jax_backend.replay_ir_outcomes(
+                    ir_obj, [configs[i] for i in sup], hosts=hosts,
+                    dist=dist, **ir_kwargs)
+                outcomes: list[PolicyOutcome | None] = [None] * len(configs)
+                for i, out in zip(sup, sup_out):
+                    outcomes[i] = out
+                rest = [i for i in range(len(configs))
+                        if outcomes[i] is None]
+                if rest:
+                    rest_results, _, _ = _evaluate(
+                        [configs[i] for i in rest], store, workers=workers,
+                        hosts=hosts, mmap=mmap, batched=batched,
+                        replayer_kwargs=replayer_kwargs, compact=False)
+                    for i, res in zip(rest, rest_results):
+                        outcomes[i] = _outcome(res)
+                return outcomes, n_rows, n_runs
+        # nothing for the accelerator to do: run the NumPy kernel
+    results, n_rows, n_runs = _evaluate(
+        configs, store, workers=workers, hosts=hosts, mmap=mmap,
+        batched=batched, replayer_kwargs=replayer_kwargs, compact=compact,
+        ir=ir)
+    return [_outcome(r) for r in results], n_rows, n_runs
+
+
 def evaluate(
     configs: Sequence[Policy],
     store: "TelemetryStore",
@@ -348,6 +446,8 @@ def evaluate(
     batched: bool = True,
     compact: bool | None = None,
     ir=None,
+    backend: str = "numpy",
+    dist=None,
     **replayer_kwargs,
 ) -> list[PolicyOutcome]:
     """Evaluate an arbitrary set of policy configs over a store.
@@ -386,14 +486,23 @@ def evaluate(
         ir: a prebuilt :class:`repro.whatif.ir.RunIR` to replay against
             (skips the cache lookup entirely; the closed-loop search passes
             one IR across all refinement rounds).
+        backend: ``"numpy"`` (default, the oracle), ``"jax"`` (jit'd
+            run-level evaluators, :mod:`repro.whatif.backend`) or
+            ``"auto"`` (jax when importable). The jax backend accelerates
+            IR-capable configs on compact replays; everything else runs
+            the NumPy path regardless.
+        dist: optional :class:`repro.distributed.context.DistContext`
+            sharding the jax backend's config axis over a device mesh
+            (see :func:`repro.whatif.backend.config_mesh`); ignored by
+            the NumPy backend. Results are mesh-shape-independent.
         **replayer_kwargs: forwarded to the replayer
             (``min_job_duration_s``, ``platform_of``, ``classifier``, ...).
     """
-    results, _, _ = _evaluate(configs, store, workers=workers, hosts=hosts,
-                              mmap=mmap, batched=batched,
-                              replayer_kwargs=replayer_kwargs,
-                              compact=compact, ir=ir)
-    return [_outcome(r) for r in results]
+    outcomes, _, _ = _evaluate_outcomes(
+        configs, store, workers=workers, hosts=hosts, mmap=mmap,
+        batched=batched, replayer_kwargs=replayer_kwargs, compact=compact,
+        ir=ir, backend=backend, dist=dist)
+    return outcomes
 
 
 def run_sweep(
@@ -405,6 +514,8 @@ def run_sweep(
     batched: bool = True,
     compact: bool | None = None,
     ir=None,
+    backend: str = "numpy",
+    dist=None,
     **replayer_kwargs,
 ) -> Frontier:
     """Replay a fixed policy grid over a store and report the trade-off
@@ -414,14 +525,16 @@ def run_sweep(
     a *budgeted* search of the same knob space instead of a dense dump, see
     :func:`repro.whatif.search.search_frontier`. All other arguments are
     :func:`evaluate`'s; ``run_sweep(compact=False)`` is the retained
-    row-exact verification path for the default compact (run-IR) sweep.
+    row-exact verification path for the default compact (run-IR) sweep,
+    and ``backend="jax"`` runs IR-capable configs on the jit'd run-level
+    evaluators (:mod:`repro.whatif.backend`).
     """
     policies = list(default_policy_grid() if policies is None else policies)
-    results, n_rows, n_runs = _evaluate(
+    outcomes, n_rows, n_runs = _evaluate_outcomes(
         policies, store, workers=workers, hosts=hosts, mmap=mmap,
         batched=batched, replayer_kwargs=replayer_kwargs, compact=compact,
-        ir=ir)
-    return _assemble(results, n_rows, n_runs)
+        ir=ir, backend=backend, dist=dist)
+    return assemble_frontier(outcomes, n_rows, n_runs)
 
 
 def sweep_frame(frame, policies: Sequence[Policy] | None = None,

@@ -1,10 +1,11 @@
-"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs ref.py oracles."""
+"""Per-kernel shape/dtype sweeps: Pallas vs ref.py oracles."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import ref
+from repro.kernels import ops, ref
+from repro.kernels import run_replay as rr
 from repro.kernels.decode_attention import decode_attention
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.rmsnorm import rmsnorm
@@ -12,6 +13,12 @@ from repro.kernels.rwkv6_scan import wkv6
 from repro.kernels.ssm_scan import ssm_scan
 
 KEY = jax.random.PRNGKey(0)
+
+#: the same detection the public ops wrappers use: interpret everywhere
+#: but TPU (``REPRO_PALLAS_INTERPRET`` overrides), so CPU-only CI runs
+#: the whole suite green in interpret mode while TPU CI exercises the
+#: compiled kernels with no test edits.
+INTERPRET = rr.default_interpret()
 
 
 def tol(dtype):
@@ -33,7 +40,7 @@ def test_flash_attention(b, h, kv, s, d, causal, window, dtype):
     k = jax.random.normal(ks[1], (b, kv, s, d), dtype)
     v = jax.random.normal(ks[2], (b, kv, s, d), dtype)
     out = flash_attention(q, k, v, causal=causal, window=window,
-                          block_q=64, block_k=64, interpret=True)
+                          block_q=64, block_k=64, interpret=INTERPRET)
     expect = ref.mha_reference(q, k, v, causal=causal, window=window)
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(expect, np.float32), **tol(dtype))
@@ -44,7 +51,7 @@ def test_flash_attention_uneven_heads():
     q = jax.random.normal(KEY, (1, 6, 128, 64))
     k = jax.random.normal(KEY, (1, 2, 128, 64))
     v = jax.random.normal(KEY, (1, 2, 128, 64))
-    out = flash_attention(q, k, v, block_q=64, block_k=64, interpret=True)
+    out = flash_attention(q, k, v, block_q=64, block_k=64, interpret=INTERPRET)
     expect = ref.mha_reference(q, k, v)
     np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
                                rtol=2e-5, atol=2e-5)
@@ -63,7 +70,7 @@ def test_decode_attention(b, h, kv, s, d, cl, dtype):
     q = jax.random.normal(ks[0], (b, h, d), dtype)
     kc = jax.random.normal(ks[1], (b, kv, s, d), dtype)
     vc = jax.random.normal(ks[2], (b, kv, s, d), dtype)
-    out = decode_attention(q, kc, vc, cl, block_k=256, interpret=True)
+    out = decode_attention(q, kc, vc, cl, block_k=256, interpret=INTERPRET)
     expect = ref.decode_attention_reference(q, kc, vc, cl)
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(expect, np.float32), **tol(dtype))
@@ -83,7 +90,7 @@ def test_wkv6(b, h, s, kd, chunk):
     v = jax.random.normal(ks[2], (b, h, s, kd))
     w = jax.nn.sigmoid(jax.random.normal(ks[3], (b, h, s, kd))) * 0.55 + 0.4
     u = jax.random.normal(ks[4], (h, kd)) * 0.1
-    y, state = wkv6(r, k, v, w, u, chunk=chunk, interpret=True)
+    y, state = wkv6(r, k, v, w, u, chunk=chunk, interpret=INTERPRET)
     ye, se = ref.wkv6_reference(r, k, v, w, u)
     np.testing.assert_allclose(np.asarray(y), np.asarray(ye), rtol=1e-3, atol=1e-3)
     np.testing.assert_allclose(np.asarray(state), np.asarray(se), rtol=1e-3, atol=1e-3)
@@ -97,7 +104,7 @@ def test_wkv6_extreme_decay():
     k = jax.random.normal(ks[1], (b, h, s, kd))
     v = jax.random.normal(ks[2], (b, h, s, kd))
     w = jnp.where(jax.random.bernoulli(ks[3], 0.5, (b, h, s, kd)), 0.999, 1e-4)
-    y, state = wkv6(r, k, v, w, u=jnp.zeros((h, kd)), chunk=32, interpret=True)
+    y, state = wkv6(r, k, v, w, u=jnp.zeros((h, kd)), chunk=32, interpret=INTERPRET)
     assert np.isfinite(np.asarray(y)).all()
     ye, _ = ref.wkv6_reference(r, k, v, w, jnp.zeros((h, kd)))
     np.testing.assert_allclose(np.asarray(y), np.asarray(ye), rtol=1e-3, atol=1e-3)
@@ -116,7 +123,7 @@ def test_ssm_scan(bsz, s, di, n, chunk, bi):
     a = -jnp.exp(jax.random.normal(ks[2], (di, n)) * 0.5)
     b = jax.random.normal(ks[3], (bsz, s, n))
     c = jax.random.normal(ks[4], (bsz, s, n))
-    y, h = ssm_scan(u, dt, a, b, c, chunk=chunk, block_i=bi, interpret=True)
+    y, h = ssm_scan(u, dt, a, b, c, chunk=chunk, block_i=bi, interpret=INTERPRET)
     ye, he = ref.ssm_scan_reference(u, dt, a, b, c)
     np.testing.assert_allclose(np.asarray(y), np.asarray(ye), rtol=2e-3, atol=2e-3)
     np.testing.assert_allclose(np.asarray(h), np.asarray(he), rtol=2e-3, atol=2e-3)
@@ -130,7 +137,70 @@ def test_ssm_scan(bsz, s, di, n, chunk, bi):
 def test_rmsnorm(shape, dtype):
     x = jax.random.normal(KEY, shape, dtype)
     w = jax.random.normal(jax.random.PRNGKey(1), shape[-1:], dtype)
-    out = rmsnorm(x, w, interpret=True)
+    out = rmsnorm(x, w, interpret=INTERPRET)
     expect = ref.rmsnorm_reference(x, w)
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(expect, np.float32), **tol(dtype))
+
+
+# --------------------------------------------------------------------------- #
+# run-replay cap-bucket scan
+# --------------------------------------------------------------------------- #
+def _np_cap_counts(sorted_p, caps):
+    sp = np.asarray(sorted_p)
+    cv = np.asarray(caps)
+    return np.stack([
+        sp.shape[1] - np.searchsorted(sp[r], cv[r], side="right")
+        for r in range(sp.shape[0])]).astype(np.int32)
+
+
+@pytest.mark.parametrize("rows,n,c", [(3, 17, 5), (1, 1, 7), (4, 256, 33),
+                                      (2, 64, 1)])
+def test_cap_bucket_scan(rows, n, c):
+    ks = jax.random.split(KEY, 2)
+    sp = jnp.sort(jax.random.normal(ks[0], (rows, n)) * 100.0, axis=1)
+    caps = jax.random.normal(ks[1], (rows, c)) * 100.0
+    expect = _np_cap_counts(sp, caps)
+    out = rr.cap_bucket_scan(sp, caps, interpret=INTERPRET)
+    np.testing.assert_array_equal(np.asarray(out), expect)
+    np.testing.assert_array_equal(
+        np.asarray(rr.cap_bucket_scan_reference(sp, caps)), expect)
+
+
+def test_cap_bucket_scan_ties_and_padding():
+    """Exact ties follow ``side="right"`` (p > cap strictly), and -inf
+    front-padding — how the replay backend widens ragged power buckets —
+    never changes the counts."""
+    sp = jnp.asarray([[1.0, 2.0, 2.0, 2.0, 3.0, 3.0]])
+    caps = jnp.asarray([[0.5, 2.0, 3.0, 4.0, 1.0]])
+    expect = np.array([[6, 2, 0, 0, 5]], np.int32)
+    for fn in (lambda a, b: rr.cap_bucket_scan(a, b, interpret=INTERPRET),
+               rr.cap_bucket_scan_reference):
+        np.testing.assert_array_equal(np.asarray(fn(sp, caps)), expect)
+        padded = jnp.concatenate(
+            [jnp.full((1, 5), -jnp.inf, sp.dtype), sp], axis=1)
+        np.testing.assert_array_equal(np.asarray(fn(padded, caps)), expect)
+
+
+def test_cap_bucket_counts_dispatcher_and_ops_wrapper():
+    ks = jax.random.split(KEY, 2)
+    sp = jnp.sort(jax.random.normal(ks[0], (5, 40)), axis=1)
+    caps = jax.random.normal(ks[1], (5, 9))
+    expect = _np_cap_counts(sp, caps)
+    np.testing.assert_array_equal(
+        np.asarray(rr.cap_bucket_counts(sp, caps)), expect)
+    np.testing.assert_array_equal(
+        np.asarray(rr.cap_bucket_counts(sp, caps, use_pallas=False)), expect)
+    np.testing.assert_array_equal(
+        np.asarray(ops.cap_bucket_scan(sp, caps)), expect)
+
+
+def test_default_interpret_env_override(monkeypatch):
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    assert rr.default_interpret() is True
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "0")
+    assert rr.default_interpret() is False
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "false")
+    assert rr.default_interpret() is False
+    monkeypatch.delenv("REPRO_PALLAS_INTERPRET")
+    assert rr.default_interpret() is (jax.default_backend() != "tpu")
