@@ -48,6 +48,12 @@ def main() -> None:
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write the result rows as JSON (committed "
                          "baselines, e.g. BENCH_fleet_analyze.json)")
+    ap.add_argument("--obs", default=None, metavar="DIR",
+                    help="enable the repro.obs observability layer for the "
+                         "run and write DIR/metrics.prom (Prometheus text "
+                         "exposition) + DIR/spans.jsonl (span trace); the "
+                         "per-stage breakdown is attached to --json output "
+                         "and a stage tree is printed to stderr")
     ap.add_argument("--quick", action="store_true",
                     help="CI mode for the throughput benches (fleet, "
                          "whatif, kernels): tiny corpora, timing targets "
@@ -68,6 +74,10 @@ def main() -> None:
         # with and without accelerators
         os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
+    import repro.obs as obs
+    if args.obs:
+        obs.enable()
+
     from benchmarks.fleet_bench import bench_fleet_analyze
     from benchmarks.kernels_bench import bench_kernels
     from benchmarks.paper_benches import ALL_BENCHES
@@ -85,7 +95,9 @@ def main() -> None:
     all_rows = []
     all_ok = True
     for fn in benches:
-        bench = fn()
+        # no-op span when --obs is absent (obs stays disabled)
+        with obs.span("bench." + fn.__name__):
+            bench = fn()
         for row in bench.rows:
             target = "" if row.target is None else f"{row.target:.6g}"
             ok = "" if row.ok is None else str(row.ok)
@@ -97,9 +109,18 @@ def main() -> None:
         if any(r.ok is False for r in bench.rows):
             all_ok = False
 
+    payload = {"rows": all_rows, "all_ok": all_ok}
+    if args.obs:
+        obs_dir = pathlib.Path(args.obs)
+        obs.write_textfile(obs_dir / "metrics.prom")
+        obs.dump_spans_jsonl(obs_dir / "spans.jsonl")
+        payload["stages"] = obs.stage_breakdown()
+        print("\n== stage tree ==", file=sys.stderr)
+        print(obs.stage_report(min_dur_s=1e-3), file=sys.stderr)
+
     if args.json:
         pathlib.Path(args.json).write_text(
-            json.dumps({"rows": all_rows, "all_ok": all_ok}, indent=1) + "\n")
+            json.dumps(payload, indent=1) + "\n")
 
     print("\n== validation summary ==", file=sys.stderr)
     for s in summaries:

@@ -36,6 +36,16 @@ compact baseline, ``mode="min"``, with the measuring device count in the
 runs in ``--quick`` CI too, and — full mode only — a 10^4-config grid
 replayed end-to-end (``configs_per_s_compact_jax_10k``).
 
+The observability layer (:mod:`repro.obs`) adds its acceptance gates:
+``obs_overhead_le_5pct`` (obs-on vs obs-off dense compact sweep, min-of-5),
+``obs_bit_identical`` (frontier dicts equal either way),
+``obs_prom_lint_errors`` (the exposition parses), ``obs_distinct_metrics``
+(>= 15 ``repro_*`` families when the whole run is instrumented via
+``run.py --obs``), the span-derived jax stage split
+(``jax_kernel_stage_s`` / ``jax_assembly_stage_s`` — the vectorized
+host-assembly evidence), and ``jax_mesh_matches_single_device`` when >1
+device is visible (the CI lane forces 4).
+
 Run:  PYTHONPATH=src python -m benchmarks.run --only whatif \
           [--json BENCH_whatif_sweep.json] [--quick]
 
@@ -67,6 +77,11 @@ SHARD_S = HORIZON_S
 #: ratios are unstable; the minimum is the standard de-noised estimate
 REPS_BATCHED = 3
 REPS_SERIAL = 2
+
+#: min-of-N reps for the obs-overhead pair (off vs on): the <= 5% gate
+#: compares two sub-second timings, so it needs more de-noising than the
+#: throughput rows
+REPS_OBS = 5
 
 #: one-sided throughput floor for the dense batched row path (configs/s on
 #: the full corpus; committed baseline ~29, floor at ~1/3 to absorb
@@ -216,6 +231,54 @@ def bench_whatif_sweep() -> Bench:
                 jax_sweep(grid_10k)
                 t_10k, front_10k = _timed(lambda: jax_sweep(grid_10k), 1)
 
+        # ---- observability contract: overhead, bit-identity, exposition.
+        # Save/restore the enabled flag (run.py --obs may have turned obs
+        # on globally) and never reset the registry — it may hold the
+        # whole run's metrics.
+        import repro.obs as obs
+
+        def compact_sweep():
+            return run_sweep(store, dense_grid, workers=1,
+                             min_job_duration_s=0.0, compact=True)
+
+        reps_obs = 1 if quick else REPS_OBS
+        prev_obs = obs.enabled()
+        obs.disable()
+        t_obs_off, front_obs_off = _timed(compact_sweep, reps_obs)
+        obs.enable()
+        t_obs_on, front_obs_on = _timed(compact_sweep, reps_obs)
+
+        # per-stage split of the jax replay (kernels vs host assembly),
+        # from the spans of one obs-on sweep — the vectorized-assembly
+        # before/after evidence rides in the bench JSON
+        jax_kernel_s = jax_assembly_s = 0.0
+        if n_jax_devices:
+            n0 = len(obs.spans())
+            jax_sweep(grid_10k if not quick else dense_grid)
+            totals = obs.stage_totals(obs.spans()[n0:])
+            jax_kernel_s = totals.get("backend.kernels",
+                                      {}).get("total_s", 0.0)
+            jax_assembly_s = totals.get("backend.assembly",
+                                        {}).get("total_s", 0.0)
+            # config-mesh lane: shard the config axis over every visible
+            # device; must match the single-device sweep under the oracle
+            # contract (counts exact, energies <= 1e-9) and record the
+            # device count in the gauge CI asserts on
+            mesh_matches = 0.0
+            if n_jax_devices > 1:
+                from repro.whatif.backend import config_mesh
+                mesh_front = run_sweep(store, dense_grid, workers=1,
+                                       min_job_duration_s=0.0,
+                                       backend="jax", dist=config_mesh())
+                mesh_matches = float(
+                    _frontiers_equivalent(jax_front, mesh_front))
+
+        obs_prom_errors = len(obs.lint_exposition(obs.render_prometheus()))
+        n_obs_metrics = len([n for n in obs.REGISTRY.names()
+                             if n.startswith("repro_")])
+        if not prev_obs:
+            obs.disable()
+
     n_cfg = len(grid)
     b.add("rows", float(rows))
     b.add("n_configs", float(n_cfg), (48.0, 0.01))
@@ -281,6 +344,32 @@ def bench_whatif_sweep() -> Bench:
                   seconds=t_10k, devices=n_jax_devices)
             b.add("grid10k_pareto_set_size",
                   float(len(front_10k.pareto_set())))
+
+    # ---- observability rows (tentpole acceptance gates) ----
+    obs_overhead = t_obs_on / t_obs_off - 1.0
+    b.add("obs_overhead_frac", obs_overhead,
+          seconds=t_obs_on)
+    b.add("obs_overhead_le_5pct", float(obs_overhead <= 0.05),
+          None if quick else (1.0, 0.01))
+    b.add("obs_bit_identical",
+          float(frontier_to_dict(front_obs_on)
+                == frontier_to_dict(front_obs_off)), (1.0, 0.01))
+    b.add("obs_prom_lint_errors", float(obs_prom_errors), (0.0, 0.5))
+    # the >= 15 gate needs the whole run instrumented (run.py --obs); a
+    # bare bench only enables obs for the overhead window above, so the
+    # count is informational there
+    b.add("obs_distinct_metrics", float(n_obs_metrics),
+          (15.0, 0.0) if prev_obs else None, mode="min")
+    if n_jax_devices:
+        b.add("jax_kernel_stage_s", jax_kernel_s, seconds=jax_kernel_s)
+        b.add("jax_assembly_stage_s", jax_assembly_s,
+              seconds=jax_assembly_s)
+        if jax_kernel_s + jax_assembly_s > 0:
+            b.add("jax_assembly_fraction",
+                  jax_assembly_s / (jax_kernel_s + jax_assembly_s))
+        if n_jax_devices > 1:
+            b.add("jax_mesh_matches_single_device", mesh_matches,
+                  (1.0, 0.01), devices=n_jax_devices)
 
     noop = next(o for o in serial.outcomes if o.name == "noop")
     anchored = noop.energy_saved_j == 0.0 and noop.penalty_s == 0.0

@@ -14,21 +14,24 @@ staying under my performance-penalty budget?* This demo asks it closed-loop:
    devices AND downscale the ones that keep serving
    (:class:`repro.whatif.CompositePolicy`).
 3. Print the searched frontier, the knee, and the best config inside a
-   1%-of-active-time penalty budget.
+   1%-of-active-time penalty budget — plus the :mod:`repro.obs` stage tree
+   for the whole ``ingest_to_knee`` trace (how stale is the answer, and
+   where did the time go: IR build vs replay rounds).
 
 Run:  PYTHONPATH=src python examples/whatif_search.py [--devices 16]
           [--hours 6] [--workers 2] [--max-evals 100]
-          [--penalty-budget-pct 1.0]
+          [--penalty-budget-pct 1.0] [--trace-out spans.jsonl]
 """
 import argparse
 import tempfile
 import time
 
+import repro.obs as obs
 from repro.cluster import generate_cluster
 from repro.core.energy import energy_kwh
 from repro.telemetry import TelemetryStore
-from repro.whatif import (PenaltyBudget, format_frontier, save_frontier,
-                          search_frontier)
+from repro.whatif import (PenaltyBudget, format_frontier, format_search_trace,
+                          save_frontier, search_frontier)
 
 
 def main() -> None:
@@ -41,7 +44,11 @@ def main() -> None:
                     help="max modeled stall, %% of recorded active time")
     ap.add_argument("--out", default=None,
                     help="optional path for the searched-frontier JSON")
+    ap.add_argument("--trace-out", default=None,
+                    help="optional path for the span trace JSONL")
     args = ap.parse_args()
+
+    obs.enable()
 
     with tempfile.TemporaryDirectory() as d:
         store = TelemetryStore(d)
@@ -54,8 +61,14 @@ def main() -> None:
         budget = PenaltyBudget(
             max_penalty_fraction=args.penalty_budget_pct / 100.0)
         t0 = time.perf_counter()
-        res = search_frontier(store, budget=budget, max_evals=args.max_evals,
-                              workers=args.workers, min_job_duration_s=7200)
+        # one end-to-end span: IR build (inside the first evaluate) +
+        # every search round — its duration is the staleness of the knee
+        with obs.span("ingest_to_knee") as root:
+            res = search_frontier(store, budget=budget,
+                                  max_evals=args.max_evals,
+                                  workers=args.workers,
+                                  min_job_duration_s=7200)
+            root.set(evals=res.n_evals, rounds=res.n_rounds)
         dt = time.perf_counter() - t0
         print(f"searched {res.n_evals} configs in {res.n_rounds} rounds "
               f"({dt:.1f}s, converged={res.converged}) — a dense sweep of "
@@ -82,9 +95,16 @@ def main() -> None:
         print(f"no evaluated config fits a {args.penalty_budget_pct:.2g}% "
               f"penalty budget")
 
+    print()
+    print(format_search_trace(res.frontier))
+    print("\nstage tree (knee staleness = root span):")
+    print(obs.format_span_tree(min_dur_s=1e-3))
+
     if args.out:
         print(f"searched frontier written to "
               f"{save_frontier(res.frontier, args.out)}")
+    if args.trace_out:
+        print(f"span trace written to {obs.dump_spans_jsonl(args.trace_out)}")
 
 
 if __name__ == "__main__":

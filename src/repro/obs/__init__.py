@@ -1,0 +1,50 @@
+"""Self-observability for the repro pipeline: metrics + spans + exporters.
+
+The paper's argument is that fleets burn energy in states nobody measures;
+this package makes sure *our own* engine is not a black box.  Default-off,
+near-free when disabled, and guaranteed not to change any result
+(bit-identical frontiers with obs on or off — the production contract).
+
+Quick start::
+
+    import repro.obs as obs
+
+    obs.enable()
+    with obs.span("ingest_to_knee"):
+        result = search_frontier(store, max_evals=64)
+    print(obs.stage_report())                  # human stage tree
+    obs.write_textfile("reports/metrics.prom")  # Prometheus exposition
+    obs.dump_spans_jsonl("reports/spans.jsonl")
+
+Layout: :mod:`~repro.obs.metrics` (registry: counters / gauges /
+log-bucket histograms), :mod:`~repro.obs.spans` (hierarchical traces +
+process-pool transport), :mod:`~repro.obs.prom` (text exposition, linter,
+stdlib HTTP endpoint), :mod:`~repro.obs.report` (stage-tree reports).
+"""
+from repro.obs.metrics import (REGISTRY, Counter, Gauge, Histogram,
+                               MetricsRegistry, counter, default_buckets,
+                               disable, enable, enabled, gauge, observe)
+from repro.obs.prom import (lint_exposition, render_prometheus,
+                            start_http_server, write_textfile)
+from repro.obs.report import stage_breakdown, stage_report
+from repro.obs.spans import (SpanNode, SpanRecord, absorb, call_with_obs,
+                             clear_spans, dump_spans_jsonl, format_span_tree,
+                             load_spans_jsonl, span, span_tree, spans,
+                             stage_totals, worker_token)
+
+
+def reset() -> None:
+    """Clear all recorded metrics and spans (does not change enabled)."""
+    REGISTRY.reset()
+    clear_spans()
+
+
+__all__ = [
+    "REGISTRY", "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "SpanNode", "SpanRecord", "absorb", "call_with_obs", "clear_spans",
+    "counter", "default_buckets", "disable", "dump_spans_jsonl", "enable",
+    "enabled", "format_span_tree", "gauge", "lint_exposition",
+    "load_spans_jsonl", "observe", "render_prometheus", "reset", "span",
+    "span_tree", "spans", "stage_breakdown", "stage_report", "stage_totals",
+    "start_http_server", "worker_token", "write_textfile",
+]

@@ -18,10 +18,12 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import time
 from typing import TYPE_CHECKING, Iterable
 
 import numpy as np
 
+import repro.obs as obs
 from repro.core.energy import EnergyBreakdown, StreamingIntegrator, integrate, merge
 from repro.core.intervals import Interval, extract_intervals
 from repro.core.states import ClassifierConfig, DEFAULT_CLASSIFIER, DeviceState, classify_series
@@ -137,6 +139,10 @@ class FleetAccumulator:
             return
         self.n_chunks += 1
         self.n_rows += len(chunk)
+        obs.counter("repro_analyze_rows_total", float(len(chunk)),
+                    help="telemetry rows folded into fleet analysis")
+        obs.counter("repro_analyze_chunks_total",
+                    help="telemetry chunks (shards) folded into fleet analysis")
 
         job_ids = chunk["job_id"]
         neg = job_ids < 0
@@ -279,7 +285,8 @@ def _pool_context():
         return multiprocessing.get_context("spawn")
 
 
-def map_shard_partitions(store, hosts, workers, worker, extra_args, merge):
+def map_shard_partitions(store, hosts, workers, worker, extra_args, merge,
+                         stage: str = "pipeline"):
     """Run ``worker(root, shard_files, *extra_args)`` over host-label
     partitions of a store and fold the results with ``merge(acc, part)``.
 
@@ -290,23 +297,38 @@ def map_shard_partitions(store, hosts, workers, worker, extra_args, merge):
     (``math.fsum`` pieces, sorted stream keys) any worker count is
     bit-identical to the serial pass. With one partition or ``workers <= 1``
     the worker runs in-process.
+
+    When observability is enabled (:mod:`repro.obs`), each pool submission
+    is wrapped in :func:`repro.obs.call_with_obs`: the worker runs under a
+    ``{stage}.partition`` span in its own process, and its spans/metrics
+    are folded back into the parent trace in submit order.  Obs off, the
+    wrapper is a pure passthrough, and merge order is unchanged either way.
     """
     # materialize: `hosts` may be a one-shot iterable, and it is consumed
     # both by partition_hosts and by the serial fallback below
     hosts = list(hosts) if hosts is not None else None
     partitions = store.partition_hosts(workers, hosts) if workers > 1 else []
     if len(partitions) <= 1:
-        return worker(str(store.root), store.shard_files(hosts), *extra_args)
+        obs.gauge("repro_pool_workers", 1.0, stage=stage,
+                  help="process-pool fan-out per stage (1 = in-process)")
+        with obs.span(f"{stage}.partition", serial=True):
+            return worker(str(store.root), store.shard_files(hosts),
+                          *extra_args)
     from concurrent.futures import ProcessPoolExecutor
     ctx = _pool_context()   # forkserver/spawn; never forks the JAX parent
+    obs.gauge("repro_pool_workers", float(len(partitions)), stage=stage,
+              help="process-pool fan-out per stage (1 = in-process)")
+    token = obs.worker_token(f"{stage}.partition")
     result = None
     with ProcessPoolExecutor(max_workers=len(partitions),
                              mp_context=ctx) as pool:
-        futures = [pool.submit(worker, str(store.root),
-                               store.shard_files(part), *extra_args)
+        futures = [pool.submit(obs.call_with_obs, token, worker,
+                               str(store.root), store.shard_files(part),
+                               *extra_args)
                    for part in partitions]
         for fut in futures:
-            part = fut.result()
+            part, payload = fut.result()
+            obs.absorb(payload)
             result = part if result is None else merge(result, part)
     return result
 
@@ -356,10 +378,25 @@ def analyze_store(
         config=config,
         dt_s=dt_s,
     )
-    acc = map_shard_partitions(
-        store, hosts, workers, _accumulate_shards, (mmap, acc_kwargs),
-        merge=lambda a, b: a.merge(b))
-    return acc.finalize()
+    t0 = time.perf_counter()
+    with obs.span("analyze_store", workers=workers):
+        acc = map_shard_partitions(
+            store, hosts, workers, _accumulate_shards, (mmap, acc_kwargs),
+            merge=lambda a, b: a.merge(b), stage="analyze")
+        n_rows, n_chunks = acc.n_rows, acc.n_chunks
+        with obs.span("analyze.finalize"):
+            result = acc.finalize()
+    if obs.enabled():
+        dt = max(time.perf_counter() - t0, 1e-12)
+        obs.observe("repro_analyze_seconds", dt,
+                    help="wall time of analyze_store calls")
+        obs.gauge("repro_analyze_rows_per_s", n_rows / dt,
+                  help="row throughput of the last analyze_store")
+        obs.gauge("repro_analyze_shards_per_s", n_chunks / dt,
+                  help="shard throughput of the last analyze_store")
+        obs.gauge("repro_analyze_jobs", float(len(result.jobs)),
+                  help="jobs surviving the min-duration filter")
+    return result
 
 
 def per_job_fraction_cdf(jobs: Iterable[JobAnalysis]) -> dict[str, np.ndarray]:

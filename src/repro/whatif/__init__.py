@@ -92,6 +92,7 @@ from repro.whatif.search import (  # noqa: F401
 )
 from repro.whatif.report import (  # noqa: F401
     format_frontier,
+    format_search_trace,
     frontier_from_dict,
     frontier_to_dict,
     load_frontier,

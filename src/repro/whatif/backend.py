@@ -41,8 +41,8 @@ NumPy path* (same arrays bit-for-bit), and the final fleet fold mirrors
 """
 from __future__ import annotations
 
+import collections.abc
 import dataclasses
-import math
 from typing import Iterable, Mapping, Sequence
 
 import numpy as np
@@ -51,6 +51,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+import repro.obs as obs
 from repro.core.energy import EnergyBreakdown
 from repro.core.power_model import ClockLevel, PlatformSpec
 from repro.core.states import ClassifierConfig, DEFAULT_CLASSIFIER, DeviceState
@@ -67,15 +68,51 @@ _EXEC = int(DeviceState.EXECUTION_IDLE)
 _ACTIVE = int(DeviceState.ACTIVE)
 _STATES = (_DEEP, _EXEC, _ACTIVE)
 
+class _TraceCountsView(collections.abc.Mapping):
+    """Read-only live view of per-kernel jit trace counts.
+
+    Retrace telemetry lives in the ``repro_backend_jit_traces_total``
+    counter family of :data:`repro.obs.REGISTRY` (recorded *always-on*:
+    the counts are a behavioural contract — the pack_ir property tests
+    assert a replay retraces at most once per distinct padding bucket —
+    so they bypass the default-off gate). This mapping keeps the
+    historical ``dict(TRACE_COUNTS)`` call sites and test assertions
+    working over the registry-backed counts.
+    """
+
+    _NAME = "repro_backend_jit_traces_total"
+
+    def _snapshot(self) -> dict[str, int]:
+        fam = obs.REGISTRY.family(self._NAME)
+        if fam is None:
+            return {}
+        return {dict(key).get("kernel", ""): int(m.value)
+                for key, m in fam.metrics.items()}
+
+    def __getitem__(self, name: str) -> int:
+        return self._snapshot()[name]
+
+    def __iter__(self):
+        return iter(self._snapshot())
+
+    def __len__(self) -> int:
+        return len(self._snapshot())
+
+    def __repr__(self) -> str:
+        return f"TRACE_COUNTS({self._snapshot()!r})"
+
+
 #: retrace telemetry: kernel name -> number of jit traces so far. Each
 #: kernel body bumps its counter at *trace* time only, so after warmup a
-#: replay adds zero — the pack_ir property tests assert the count stays
-#: <= the number of distinct padding buckets.
-TRACE_COUNTS: dict[str, int] = {}
+#: replay adds zero.
+TRACE_COUNTS = _TraceCountsView()
 
 
 def _mark_trace(name: str) -> None:
-    TRACE_COUNTS[name] = TRACE_COUNTS.get(name, 0) + 1
+    # always-on: talks to the registry directly, never the gated helpers
+    obs.REGISTRY.counter(
+        _TraceCountsView._NAME,
+        "jit kernel traces, bumped at trace time only", kernel=name).inc()
 
 
 def _pow2(n: int, floor: int) -> int:
@@ -344,6 +381,22 @@ def pack_ir(ir, min_samples: int, min_job_duration_s: float = 2 * 3600.0,
             bucket_of[i] = len(buckets)
             pos_in_bucket[i] = r
         buckets.append(PackedBucket(key=bk, idx=idx, arrays=arrays))
+
+    if obs.enabled():
+        obs.counter("repro_backend_pack_total",
+                    help="pack_ir cache misses (full repacks)")
+        obs.gauge("repro_backend_pack_buckets", float(len(buckets)),
+                  help="padding buckets in the most recent pack")
+        real = sum(d["sizes"][0] for d in per_stream)
+        padded = sum(b.key[0] * b.idx.size for b in buckets)
+        obs.gauge("repro_backend_pack_padding_waste_ratio",
+                  1.0 - real / padded if padded else 0.0,
+                  help="scan-axis cells lost to pow2 padding, most recent "
+                       "pack")
+        for b in buckets:
+            obs.observe("repro_backend_pack_bucket_occupancy",
+                        float(b.idx.size),
+                        help="streams sharing one padding bucket")
 
     packed = PackedIR(
         streams=kept, platforms=plats, buckets=buckets,
@@ -750,9 +803,9 @@ def replay_ir_outcomes(
     The device-side counterpart of :func:`repro.whatif.replay.replay_ir`
     + :func:`repro.whatif.sweep._outcome` fused: family kernels produce
     ``[n_streams, n_configs]`` counts/savings on device, and the fleet
-    assembly on the host replays the NumPy reduction *order* (left folds
-    over sorted streams, ``math.fsum`` penalties), so time/count metrics
-    are bit-identical and energies/penalties <= 1e-9 relative. Every
+    assembly on the host replays the NumPy reduction *order* (vectorized
+    axis-0 left folds over sorted streams), so time/count metrics are
+    bit-identical and energies/penalties <= 1e-9 relative. Every
     policy must be IR-capable (:func:`repro.whatif.ir.ir_supported`) —
     the sweep kernel routes anything else through the row path.
 
@@ -776,11 +829,20 @@ def replay_ir_outcomes(
     if n_cfg == 0:
         return [], n_rows, n_runs
 
-    packed = pack_ir(ir, min_samples, min_job_duration_s=min_job_duration_s,
-                     hosts=hosts, platform_of=platform_of,
-                     pad_floor=pad_floor)
+    with obs.span("backend.pack", streams=len(selected)):
+        packed = pack_ir(ir, min_samples,
+                         min_job_duration_s=min_job_duration_s,
+                         hosts=hosts, platform_of=platform_of,
+                         pad_floor=pad_floor)
     s = packed.n_streams
     dt = dt_s
+
+    if obs.enabled():
+        n_dev = (dist.mesh.size if dist is not None and dist.mesh is not None
+                 else len(jax.devices()))
+        obs.gauge("repro_backend_devices", float(n_dev),
+                  help="devices the config axis runs over (mesh size when "
+                       "sharded, visible devices otherwise)")
 
     # per-(stream, config) accumulators, initialised to the baseline
     cf_time = np.repeat(packed.base_time[:, :, None], n_cfg, axis=2)
@@ -790,7 +852,8 @@ def replay_ir_outcomes(
     downs = np.zeros((s, n_cfg), np.int64)
     thr = np.zeros((s, n_cfg), np.int64)
 
-    with jax.experimental.enable_x64():
+    with obs.span("backend.kernels", configs=n_cfg, streams=s), \
+         jax.experimental.enable_x64():
         dt_j = jnp.asarray(dt, jnp.float64)
         for batch, idxs in make_batches(policies):
             ci = np.asarray(idxs, dtype=np.int64)
@@ -859,68 +922,72 @@ def replay_ir_outcomes(
                     f"got {type(batch).__name__}")
 
     # ---- fleet assembly: replicate the NumPy reduction order ---------- #
-    # merge() is a per-state left fold over jobs in sorted-stream order
-    fleet_t = np.zeros((3, n_cfg))
-    fleet_e = np.zeros((3, n_cfg))
-    fleet_bt = np.zeros(3)
-    fleet_be = np.zeros(3)
-    for i in range(s):
-        fleet_t += cf_time[i]
-        fleet_e += cf_energy[i]
-        fleet_bt += packed.base_time[i]
-        fleet_be += packed.base_energy[i]
+    # merge() is a per-state left fold over jobs in sorted-stream order.
+    # ``np.sum`` over the outer axis of a C-order array reduces one
+    # stream-row at a time — the same left fold, so times stay bitwise
+    # identical to the explicit per-stream loop this replaces. Penalties
+    # use the same axis-0 fold (all terms non-negative, so the naive sum
+    # sits well inside the <= 1e-9 oracle tolerance fsum used to meet).
+    with obs.span("backend.assembly", configs=n_cfg, streams=s):
+        fleet_t = cf_time.sum(axis=0)
+        fleet_e = cf_energy.sum(axis=0)
+        fleet_bt = packed.base_time.sum(axis=0)
+        fleet_be = packed.base_energy.sum(axis=0)
 
-    def _total(per_state):
-        # sum(dict.values()) == left fold over DeviceState insertion order
-        tot = np.zeros(per_state.shape[1:])
-        for j in range(3):
-            tot = tot + per_state[j]
-        return tot
+        def _total(per_state):
+            # sum(dict.values()) == left fold over DeviceState order
+            tot = np.zeros(per_state.shape[1:])
+            for j in range(3):
+                tot = tot + per_state[j]
+            return tot
 
-    base_tot = float(_total(fleet_be[:, None])[0]) if s else 0.0
-    cf_tot = _total(fleet_e)
-    penalty_s = np.array([math.fsum(pen[:, c]) for c in range(n_cfg)])
-    wake_tot = wakes.sum(axis=0)
-    down_tot = downs.sum(axis=0)
-    thr_tot = thr.sum(axis=0)
+        base_tot = float(_total(fleet_be[:, None])[0]) if s else 0.0
+        cf_tot = _total(fleet_e)
+        penalty_s = pen.sum(axis=0)
+        wake_tot = wakes.sum(axis=0)
+        down_tot = downs.sum(axis=0)
+        thr_tot = thr.sum(axis=0)
 
-    jb_tot = _total(np.swapaxes(packed.base_energy, 0, 1))    # [S]
-    jc_tot = _total(np.swapaxes(cf_energy, 0, 1))             # [S, C]
-    with np.errstate(invalid="ignore", divide="ignore"):
-        jb_col = jb_tot[:, None]
-        saved_jobs = np.where(jb_col != 0.0, (jb_col - jc_tot) / jb_col, 0.0)
-    saved_cdf = np.sort(saved_jobs, axis=0)
-    pen_cdf = np.sort(pen, axis=0)
+        jb_tot = _total(np.swapaxes(packed.base_energy, 0, 1))    # [S]
+        jc_tot = _total(np.swapaxes(cf_energy, 0, 1))             # [S, C]
+        with np.errstate(invalid="ignore", divide="ignore"):
+            jb_col = jb_tot[:, None]
+            saved_jobs = np.where(jb_col != 0.0,
+                                  (jb_col - jc_tot) / jb_col, 0.0)
+        # one transpose+tolist per CDF instead of a Python float() loop
+        # per (config, stream) cell — same float64 values either way
+        saved_rows = np.sort(saved_jobs, axis=0).T.tolist()       # [C][S]
+        pen_rows = np.sort(pen, axis=0).T.tolist()                # [C][S]
 
-    active_t = float(fleet_bt[2]) if s else 0.0
-    base_exec_den = float(fleet_be[1] + fleet_be[2]) if s else 0.0
-    base_exec_frac = (float(fleet_be[1]) / base_exec_den
-                      if base_exec_den else 0.0)
-    cf_exec_den = fleet_e[1] + fleet_e[2]
+        active_t = float(fleet_bt[2]) if s else 0.0
+        base_exec_den = float(fleet_be[1] + fleet_be[2]) if s else 0.0
+        base_exec_frac = (float(fleet_be[1]) / base_exec_den
+                          if base_exec_den else 0.0)
+        cf_exec_den = fleet_e[1] + fleet_e[2]
 
-    outcomes = []
-    for c, pol in enumerate(policies):
-        cf_total = float(cf_tot[c])
-        saved = base_tot - cf_total
-        p_s = float(penalty_s[c])
-        outcomes.append(PolicyOutcome(
-            name=pol.name,
-            params=pol.describe(),
-            n_jobs=s,
-            baseline_energy_j=base_tot,
-            counterfactual_energy_j=cf_total,
-            energy_saved_j=saved,
-            saved_fraction=saved / base_tot if base_tot else 0.0,
-            penalty_s=p_s,
-            penalty_fraction=p_s / active_t if active_t else 0.0,
-            wake_events=int(wake_tot[c]),
-            downscale_events=int(down_tot[c]),
-            throttled_time_s=float(int(thr_tot[c]) * dt),
-            exec_idle_energy_fraction_baseline=base_exec_frac,
-            exec_idle_energy_fraction_cf=(
-                float(fleet_e[1, c]) / float(cf_exec_den[c])
-                if s and cf_exec_den[c] else 0.0),
-            per_job_saved_fraction=tuple(float(v) for v in saved_cdf[:, c]),
-            per_job_penalty_s=tuple(float(v) for v in pen_cdf[:, c]),
-        ))
+        outcomes = []
+        for c, pol in enumerate(policies):
+            cf_total = float(cf_tot[c])
+            saved = base_tot - cf_total
+            p_s = float(penalty_s[c])
+            outcomes.append(PolicyOutcome(
+                name=pol.name,
+                params=pol.describe(),
+                n_jobs=s,
+                baseline_energy_j=base_tot,
+                counterfactual_energy_j=cf_total,
+                energy_saved_j=saved,
+                saved_fraction=saved / base_tot if base_tot else 0.0,
+                penalty_s=p_s,
+                penalty_fraction=p_s / active_t if active_t else 0.0,
+                wake_events=int(wake_tot[c]),
+                downscale_events=int(down_tot[c]),
+                throttled_time_s=float(int(thr_tot[c]) * dt),
+                exec_idle_energy_fraction_baseline=base_exec_frac,
+                exec_idle_energy_fraction_cf=(
+                    float(fleet_e[1, c]) / float(cf_exec_den[c])
+                    if s and cf_exec_den[c] else 0.0),
+                per_job_saved_fraction=tuple(saved_rows[c]),
+                per_job_penalty_s=tuple(pen_rows[c]),
+            ))
     return outcomes, n_rows, n_runs

@@ -50,6 +50,11 @@ run tables and lazy per-stream aggregates — the price of O(runs)
 replays. The in-process cache is a small LRU (``_IR_CACHE_MAX``); for a
 corpus whose power column alone exceeds RAM, sweep with
 ``compact=False`` to stay fully out-of-core.
+
+Observability: build time, compaction ratio and every cache-ladder
+outcome (memory/sidecar hit, invalidation, negative-cache hit) are
+recorded under the ``repro_ir_*`` metrics when :mod:`repro.obs` is
+enabled — see the README "Observability" section for the full table.
 """
 from __future__ import annotations
 
@@ -57,10 +62,12 @@ import dataclasses
 import hashlib
 import json
 import pathlib
+import time
 from typing import TYPE_CHECKING, Iterable, Mapping
 
 import numpy as np
 
+import repro.obs as obs
 from repro.core.controller import ControllerConfig
 from repro.core.energy import EnergyBreakdown, integrate_runs
 from repro.core.states import (ClassifierConfig, DEFAULT_CLASSIFIER,
@@ -399,6 +406,8 @@ class IRBuilder:
     def update(self, chunk: "TelemetryFrame", host_label: str = "") -> None:
         if len(chunk) == 0:
             return
+        obs.counter("repro_ir_build_rows_total", float(len(chunk)),
+                    help="telemetry rows run-length encoded by IRBuilder")
         for key, seg in chunk.group_streams():
             if key[0] < 0:
                 continue
@@ -514,10 +523,24 @@ def build_ir(store: "TelemetryStore", config: IRConfig | None = None,
     """
     from repro.telemetry.pipeline import map_shard_partitions
     config = config or IRConfig()
-    builder = map_shard_partitions(
-        store, None, workers, _build_partition, (config, mmap),
-        merge=lambda a, b: a.merge(b))
-    return builder.finalize(source_rows=store.total_rows)
+    t0 = time.perf_counter()
+    with obs.span("ir.build", workers=workers):
+        builder = map_shard_partitions(
+            store, None, workers, _build_partition, (config, mmap),
+            merge=lambda a, b: a.merge(b), stage="ir_build")
+        ir = builder.finalize(source_rows=store.total_rows)
+    if obs.enabled():
+        obs.counter("repro_ir_builds_total", help="fresh IR builds")
+        obs.observe("repro_ir_build_seconds", time.perf_counter() - t0,
+                    help="wall time of build_ir")
+        obs.gauge("repro_ir_runs", float(ir.n_runs),
+                  help="runs in the last-built IR")
+        obs.gauge("repro_ir_rows", float(ir.n_rows),
+                  help="source rows of the last-built IR")
+        if ir.n_runs:
+            obs.gauge("repro_ir_compaction_ratio", ir.compaction_ratio,
+                      help="rows per run in the last-built IR")
+    return ir
 
 
 # --------------------------------------------------------------------------- #
@@ -639,6 +662,8 @@ def load_sidecar(store: "TelemetryStore",
     if entry is None:
         return None
     if int(entry["source_rows"]) != store.total_rows:
+        obs.counter("repro_ir_cache_invalidations_total", level="sidecar",
+                    help="cached IRs rejected as stale")
         return None
     path = store.root / entry["file"]
     if not path.exists():
@@ -647,6 +672,8 @@ def load_sidecar(store: "TelemetryStore",
         meta = json.loads(str(z["meta"]))
         loaded_cfg = IRConfig.from_dict(meta["config"])
         if loaded_cfg != config:
+            obs.counter("repro_ir_cache_invalidations_total", level="sidecar",
+                        help="cached IRs rejected as stale")
             return None
         run_off = np.concatenate([[0], np.cumsum(z["n_runs"])]).astype(np.int64)
         row_off = np.concatenate([[0], np.cumsum(z["n_rows"])]).astype(np.int64)
@@ -697,14 +724,26 @@ def get_ir(store: "TelemetryStore", config: IRConfig | None = None,
                  config.config_hash())
     failed = _IR_UNSUPPORTED.get(cache_key)
     if failed is not None and failed[0] == store.total_rows:
+        obs.counter("repro_ir_negative_cache_hits_total",
+                    help="IR builds skipped via the unsupported-store cache")
         raise IRUnsupportedError(failed[1])
     ir = _IR_CACHE.get(cache_key)
-    if ir is not None and ir.source_rows == store.total_rows:
-        _IR_CACHE.pop(cache_key)
-        _IR_CACHE[cache_key] = ir       # refresh LRU recency
-        return ir
+    if ir is not None:
+        if ir.source_rows == store.total_rows:
+            obs.counter("repro_ir_cache_hits_total", level="memory",
+                        help="IR acquisitions served from a cache level")
+            _IR_CACHE.pop(cache_key)
+            _IR_CACHE[cache_key] = ir       # refresh LRU recency
+            return ir
+        obs.counter("repro_ir_cache_invalidations_total", level="memory",
+                    help="cached IRs rejected as stale")
     ir = load_sidecar(store, config)
-    if ir is None:
+    if ir is not None:
+        obs.counter("repro_ir_cache_hits_total", level="sidecar",
+                    help="IR acquisitions served from a cache level")
+    else:
+        obs.counter("repro_ir_cache_misses_total",
+                    help="IR acquisitions that required a fresh build")
         try:
             ir = build_ir(store, config, workers=workers, mmap=mmap)
         except IRUnsupportedError as e:

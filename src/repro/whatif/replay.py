@@ -36,6 +36,7 @@ from typing import TYPE_CHECKING, Any, Iterable, Mapping, Sequence
 
 import numpy as np
 
+import repro.obs as obs
 from repro.core.energy import (BatchedStreamingIntegrator, EnergyBreakdown,
                                StreamingIntegrator, merge)
 from repro.core.power_model import PlatformSpec, get_platform
@@ -744,21 +745,30 @@ def replay_ir(
         from concurrent.futures import ProcessPoolExecutor
 
         from repro.telemetry.pipeline import _pool_context
+        obs.gauge("repro_pool_workers", float(n_parts), stage="replay_ir",
+                  help="process-pool fan-out per stage (1 = in-process)")
+        token = obs.worker_token("replay_ir.partition")
         pieces = []
         with ProcessPoolExecutor(max_workers=n_parts,
                                  mp_context=_pool_context()) as pool:
-            futures = [pool.submit(_replay_ir_streams, part, policies,
+            futures = [pool.submit(obs.call_with_obs, token,
+                                   _replay_ir_streams, part, policies,
                                    platform_of, min_job_duration_s,
                                    min_samples, dt_s)
                        for part in parts]
-            pieces = [f.result() for f in futures]
+            pieces = []
+            for f in futures:
+                piece, payload = f.result()
+                obs.absorb(payload)
+                pieces.append(piece)
         jobs = [[j for piece in pieces for j in piece[0][gi]]
                 for gi in range(len(policies))]
         n_rows = sum(piece[1] for piece in pieces)
     else:
-        jobs, n_rows = _replay_ir_streams(
-            streams, policies, platform_of, min_job_duration_s,
-            min_samples, dt_s)
+        with obs.span("replay_ir.streams", configs=len(policies)):
+            jobs, n_rows = _replay_ir_streams(
+                streams, policies, platform_of, min_job_duration_s,
+                min_samples, dt_s)
     results = []
     base_fleet = None       # the kept-job set is config-independent, so the
     for gi, pol in enumerate(policies):     # fleet baseline merges once

@@ -23,6 +23,7 @@ def frontier_to_dict(frontier: Frontier) -> dict:
         "n_rows": frontier.n_rows,
         "n_jobs": frontier.n_jobs,
         "n_runs": frontier.n_runs,
+        "trace": [dict(t) for t in frontier.trace],
         "outcomes": [dataclasses.asdict(o) for o in frontier.outcomes],
     }
 
@@ -36,7 +37,8 @@ def frontier_from_dict(payload: dict) -> Frontier:
         outcomes.append(PolicyOutcome(**o))
     return Frontier(outcomes=tuple(outcomes),
                     n_rows=payload["n_rows"], n_jobs=payload["n_jobs"],
-                    n_runs=payload.get("n_runs", 0))
+                    n_runs=payload.get("n_runs", 0),
+                    trace=tuple(dict(t) for t in payload.get("trace", ())))
 
 
 def save_frontier(frontier: Frontier, path: str | pathlib.Path,
@@ -58,6 +60,36 @@ def save_frontier(frontier: Frontier, path: str | pathlib.Path,
 
 def load_frontier(path: str | pathlib.Path) -> Frontier:
     return frontier_from_dict(json.loads(pathlib.Path(path).read_text()))
+
+
+def format_search_trace(frontier: Frontier) -> str:
+    """Render the search convergence trace (one line per round).
+
+    The trace is recorded unconditionally by
+    :func:`repro.whatif.search.search_frontier` — it contains only
+    deterministic replay results, no wall-clock — so this works on any
+    searched frontier, observability on or off. Swept (non-searched)
+    frontiers have an empty trace.
+    """
+    if not frontier.trace:
+        return "search trace: empty (frontier was swept, not searched)"
+    rounds: dict[int, list[dict]] = {}
+    for t in frontier.trace:
+        rounds.setdefault(int(t["round"]), []).append(t)
+    lines = [f"search trace: {len(frontier.trace)} evals over "
+             f"{len(rounds)} rounds",
+             f"{'round':>5} {'evals':>6} {'cum':>5} {'best saved %':>12} "
+             f"{'families':<32}"]
+    best = 0.0
+    cum = 0
+    for r in sorted(rounds):
+        evs = rounds[r]
+        cum += len(evs)
+        best = max(best, max(t["saved_fraction"] for t in evs))
+        fams = sorted({t["family"] for t in evs})
+        lines.append(f"{r:5d} {len(evs):6d} {cum:5d} {best:12.2%} "
+                     f"{', '.join(fams):<32}")
+    return "\n".join(lines)
 
 
 def _label_params(name: str, p: dict) -> str:

@@ -32,6 +32,13 @@ Typical use::
         max_penalty_fraction=0.01))     # <= 1% of recorded active time
     print(result.best.params, result.knee.params)
     print(format_frontier(result.frontier, top=10))
+
+Observability: the search runs under a ``whatif.search`` span with one
+``search.round`` child per refinement round, and records per-round evals,
+knee movement, budget consumption and warm-seed hits as ``repro_search_*``
+metrics when :mod:`repro.obs` is enabled. Independently of obs, every
+search emits a deterministic eval-by-eval convergence trace in
+``result.frontier.trace`` (see :class:`repro.whatif.sweep.Frontier`).
 """
 from __future__ import annotations
 
@@ -41,6 +48,7 @@ import json
 import math
 from typing import TYPE_CHECKING, Callable, Iterable, Sequence
 
+import repro.obs as obs
 from repro.core.controller import ControllerConfig, DownscaleMode
 from repro.core.imbalance import PoolConfig, PoolPolicy
 from repro.whatif.policies import (CompositePolicy, DownscalePolicy,
@@ -524,7 +532,39 @@ def search_frontier(
         raise ValueError(f"duplicate family names: {names}")
     if compact is None:
         compact = batched
+    with obs.span("whatif.search", backend=backend, max_evals=max_evals):
+        return _search_loop(
+            store, budget, families, max_evals, max_rounds, knee_tol,
+            knee_patience, anchors_per_family, include_noop, workers, hosts,
+            mmap, batched, compact, ir, backend, dist, init_frontier,
+            replayer_kwargs)
 
+
+def _search_loop(
+    store: "TelemetryStore",
+    budget: PenaltyBudget | None,
+    families: Sequence[PolicyFamily],
+    max_evals: int,
+    max_rounds: int,
+    knee_tol: float,
+    knee_patience: int,
+    anchors_per_family: int,
+    include_noop: bool,
+    workers: int,
+    hosts: Iterable[str] | None,
+    mmap: bool,
+    batched: bool,
+    compact: bool,
+    ir,
+    backend: str,
+    dist,
+    init_frontier,
+    replayer_kwargs: dict,
+) -> SearchResult:
+    """The :func:`search_frontier` loop body (arguments already resolved).
+
+    Split out so the public entry point can hold the ``whatif.search``
+    observability span without re-indenting the whole driver."""
     # evaluation state, keyed by the built policy's canonical describe()
     outcomes: dict[str, PolicyOutcome] = {}
     point_of: dict[str, tuple[str, dict]] = {}     # key -> (family, point)
@@ -532,6 +572,11 @@ def search_frontier(
     tried: dict[tuple[str, str], set[float]] = {}  # (family, axis) -> values
     n_rows = 0
     n_runs = 0
+    round_no = 0
+    # deterministic convergence record (one entry per eval, all rounds) —
+    # replay results only, no wall-clock, so frontiers stay bit-identical
+    # with obs on or off
+    trace: list[dict] = []
 
     def build_candidates(fam: PolicyFamily, points: list[dict]):
         cands = []
@@ -548,19 +593,31 @@ def search_frontier(
         if not cands:
             return 0
         pols = [pol for _, (_, _, pol) in cands]
-        outs, rows, runs = _evaluate_outcomes(
-            pols, store, workers=workers, hosts=hosts, mmap=mmap,
-            batched=batched, replayer_kwargs=replayer_kwargs,
-            compact=compact, ir=ir, backend=backend, dist=dist)
+        with obs.span("search.round", round=round_no, new=len(cands)):
+            outs, rows, runs = _evaluate_outcomes(
+                pols, store, workers=workers, hosts=hosts, mmap=mmap,
+                batched=batched, replayer_kwargs=replayer_kwargs,
+                compact=compact, ir=ir, backend=backend, dist=dist)
         n_rows = rows
         n_runs = max(n_runs, runs)
         for (key, (fam_name, pt, _)), out in zip(cands, outs):
             outcomes[key] = out
             point_of[key] = (fam_name, pt)
             order.append(key)
+            trace.append({"i": len(order) - 1, "round": round_no,
+                          "family": fam_name,
+                          "saved_fraction": out.saved_fraction,
+                          "penalty_s": out.penalty_s})
             for ax_name, v in pt.items():
                 if isinstance(v, (int, float)) and not isinstance(v, bool):
                     tried.setdefault((fam_name, ax_name), set()).add(float(v))
+        obs.counter("repro_search_evals_total", float(len(cands)),
+                    help="policy configs evaluated by the closed-loop search")
+        obs.counter("repro_search_rounds_total",
+                    help="search evaluation rounds (round 0 included)")
+        obs.gauge("repro_search_budget_remaining",
+                  float(max_evals - len(order)),
+                  help="eval budget left after the last search round")
         return len(cands)
 
     # ---------------- round 0: coarse grids (+ warm-start seeds) -------- #
@@ -585,7 +642,12 @@ def search_frontier(
             c for fam in families
             for c in build_candidates(fam, seeds.get(fam.name, []))
             if c[0] not in round0_keys]
-        round0.extend(seed_cands[:max_evals - len(round0)])
+        seed_cands = seed_cands[:max_evals - len(round0)]
+        if seed_cands:
+            obs.counter("repro_search_warm_seed_hits_total",
+                        float(len(seed_cands)),
+                        help="warm-start seeds admitted into round 0")
+        round0.extend(seed_cands)
 
     # the IR is acquired by round 0's evaluate and held in the process
     # cache (repro.whatif.ir.get_ir), so every later refinement round —
@@ -599,6 +661,14 @@ def search_frontier(
         knee_saved_fraction=knee.saved_fraction, knee_penalty_s=knee.penalty_s,
         knee_params=knee.params))
 
+    def record_knee(k: PolicyOutcome) -> None:
+        obs.gauge("repro_search_knee_saved_fraction", k.saved_fraction,
+                  help="saved fraction at the current Pareto knee")
+        obs.gauge("repro_search_knee_penalty_s", k.penalty_s,
+                  help="penalty seconds at the current Pareto knee")
+
+    record_knee(knee)
+
     # ---------------- refinement rounds ---------------- #
     def close(a: float, b: float) -> bool:
         return abs(a - b) <= knee_tol * max(abs(a), abs(b), 1e-12)
@@ -607,6 +677,7 @@ def search_frontier(
     stable = 0
     by_fam: dict[str, list[str]] = {}
     while len(history) - 1 < max_rounds:
+        round_no = len(history)
         all_outcomes = [outcomes[k] for k in order]
         flags = pareto_flags([o.energy_saved_j for o in all_outcomes],
                              [o.penalty_s for o in all_outcomes])
@@ -660,6 +731,7 @@ def search_frontier(
         new = evaluate_round(candidates[:room])
         prev = knee
         knee = find_knee(list(outcomes.values()))
+        record_knee(knee)
         history.append(RoundRecord(
             n_new=new, n_evals_total=len(order),
             knee_saved_fraction=knee.saved_fraction,
@@ -672,10 +744,14 @@ def search_frontier(
                 break
         else:
             stable = 0
+            obs.counter("repro_search_knee_moves_total",
+                        help="refinement rounds that moved the knee beyond "
+                             "knee_tol")
         if new < len(candidates):      # budget truncated the round
             break
 
-    frontier = assemble_frontier([outcomes[k] for k in order], n_rows, n_runs)
+    frontier = assemble_frontier([outcomes[k] for k in order], n_rows, n_runs,
+                                 trace=trace)
     final_outcomes = list(frontier.outcomes)
     knee = find_knee(final_outcomes)
     if budget is None:

@@ -30,11 +30,14 @@ and the cross-stream reductions are exact (``math.fsum``) or order-fixed
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import time
 from typing import TYPE_CHECKING, Iterable, Sequence
 
 import numpy as np
 
+import repro.obs as obs
 from repro.core.controller import ControllerConfig, DownscaleMode
 from repro.core.imbalance import PoolConfig, PoolPolicy
 from repro.telemetry.pipeline import map_shard_partitions
@@ -135,12 +138,21 @@ class Frontier:
     the compact path (0 otherwise): ``n_rows / n_runs`` is the corpus's
     compaction ratio — a direct view of how idle-dominated (and therefore
     run-compressible) the fleet telemetry is.
+
+    ``trace`` is the closed-loop search's eval-by-eval convergence record
+    (empty for fixed-grid sweeps): one dict per evaluated config, in
+    evaluation order — ``{"i", "round", "family", "saved_fraction",
+    "penalty_s"}`` — deliberately containing only deterministic replay
+    results (no wall-clock), so frontiers stay **bit-identical** whether
+    observability is on or off. Render with
+    :func:`repro.whatif.report.format_search_trace`.
     """
 
     outcomes: tuple[PolicyOutcome, ...]
     n_rows: int
     n_jobs: int
     n_runs: int = 0
+    trace: tuple[dict, ...] = ()
 
     @property
     def compaction_ratio(self) -> float:
@@ -167,18 +179,20 @@ def pareto_flags(saved: Sequence[float], penalty: Sequence[float]) -> list[bool]
 
 
 def assemble_frontier(outcomes: Sequence[PolicyOutcome],
-                      n_rows: int = 0, n_runs: int = 0) -> Frontier:
+                      n_rows: int = 0, n_runs: int = 0,
+                      trace: Sequence[dict] = ()) -> Frontier:
     """Build a :class:`Frontier` from already-evaluated outcomes, recomputing
     the Pareto flags over exactly this set (any flags carried in are
     discarded). The closed-loop search accumulates outcomes across
-    refinement rounds and re-assembles after every round."""
+    refinement rounds and re-assembles after every round (passing its
+    convergence ``trace``)."""
     flags = pareto_flags([o.energy_saved_j for o in outcomes],
                          [o.penalty_s for o in outcomes])
     flagged = tuple(dataclasses.replace(o, pareto=f)
                     for o, f in zip(outcomes, flags))
     n_jobs = max((o.n_jobs for o in flagged), default=0)
     return Frontier(outcomes=flagged, n_rows=n_rows, n_jobs=n_jobs,
-                    n_runs=n_runs)
+                    n_runs=n_runs, trace=tuple(trace))
 
 
 def _outcome(result: ReplayResult) -> PolicyOutcome:
@@ -301,6 +315,9 @@ def _evaluate(
                 ir_kwargs = {k: v for k, v in replayer_kwargs.items()
                              if k in ("platform_of", "min_job_duration_s",
                                       "min_interval_s", "classifier", "dt_s")}
+                obs.counter("repro_replay_configs_total", float(len(sup)),
+                            path="compact",
+                            help="policy configs replayed, by execution path")
                 sup_results = replay_ir(
                     ir_obj, [configs[i] for i in sup], hosts=hosts,
                     workers=workers, **ir_kwargs)
@@ -309,6 +326,10 @@ def _evaluate(
                     results[i] = res
                 rest = [i for i in range(len(configs)) if results[i] is None]
                 if rest:
+                    obs.counter("repro_replay_row_fallback_configs_total",
+                                float(len(rest)),
+                                help="configs the IR could not cover "
+                                     "(row-path fallback)")
                     rest_results, _, _ = _evaluate(
                         [configs[i] for i in rest], store, workers=workers,
                         hosts=hosts, mmap=mmap, batched=batched,
@@ -321,9 +342,13 @@ def _evaluate(
                 return results, n_rows, n_runs
 
     if batched:
+        obs.counter("repro_replay_configs_total", float(len(configs)),
+                    path="row_batched",
+                    help="policy configs replayed, by execution path")
         replayer = map_shard_partitions(
             store, hosts, workers, _replay_partition_batched,
-            (configs, mmap, replayer_kwargs), merge=lambda a, b: a.merge(b))
+            (configs, mmap, replayer_kwargs), merge=lambda a, b: a.merge(b),
+            stage="sweep")
         n_rows = replayer.n_rows          # finalize() resets the counter
         return replayer.finalize(), n_rows, 0
 
@@ -332,9 +357,12 @@ def _evaluate(
             dst.merge(src)
         return a
 
+    obs.counter("repro_replay_configs_total", float(len(configs)),
+                path="row_serial",
+                help="policy configs replayed, by execution path")
     replayers = map_shard_partitions(
         store, hosts, workers, _replay_partition,
-        (configs, mmap, replayer_kwargs), merge=merge_lists)
+        (configs, mmap, replayer_kwargs), merge=merge_lists, stage="sweep")
     n_rows = replayers[0].n_rows if replayers else 0
     return [r.finalize() for r in replayers], n_rows, 0
 
@@ -360,6 +388,44 @@ def resolve_backend(backend: str) -> str:
 
 
 def _evaluate_outcomes(
+    configs: Sequence[Policy],
+    store: "TelemetryStore",
+    workers: int = 1,
+    hosts: Iterable[str] | None = None,
+    mmap: bool = False,
+    batched: bool = True,
+    replayer_kwargs: dict | None = None,
+    compact: bool | None = None,
+    ir=None,
+    backend: str = "numpy",
+    dist=None,
+) -> tuple[list[PolicyOutcome], int, int]:
+    """Observability wrapper around :func:`_evaluate_outcomes_impl`: every
+    evaluate call runs under a ``whatif.evaluate`` span, with per-family
+    config counts and a throughput gauge recorded when :mod:`repro.obs` is
+    enabled. Pure pass-through otherwise — outcomes are bit-identical with
+    obs on or off."""
+    configs = list(configs)
+    t0 = time.perf_counter()
+    with obs.span("whatif.evaluate", configs=len(configs), backend=backend):
+        out = _evaluate_outcomes_impl(
+            configs, store, workers=workers, hosts=hosts, mmap=mmap,
+            batched=batched, replayer_kwargs=replayer_kwargs,
+            compact=compact, ir=ir, backend=backend, dist=dist)
+    if obs.enabled():
+        dt = max(time.perf_counter() - t0, 1e-12)
+        obs.observe("repro_replay_seconds", dt,
+                    help="wall time of evaluate calls")
+        obs.gauge("repro_replay_configs_per_s", len(configs) / dt,
+                  help="config throughput of the last evaluate")
+        for fam, n in collections.Counter(p.name for p in configs).items():
+            obs.counter("repro_replay_family_configs_total", float(n),
+                        family=fam,
+                        help="policy configs replayed, by policy family")
+    return out
+
+
+def _evaluate_outcomes_impl(
     configs: Sequence[Policy],
     store: "TelemetryStore",
     workers: int = 1,
@@ -413,6 +479,9 @@ def _evaluate_outcomes(
                 ir_kwargs = {k: v for k, v in replayer_kwargs.items()
                              if k in ("platform_of", "min_job_duration_s",
                                       "min_interval_s", "classifier", "dt_s")}
+                obs.counter("repro_replay_configs_total", float(len(sup)),
+                            path="jax",
+                            help="policy configs replayed, by execution path")
                 sup_out, n_rows, n_runs = jax_backend.replay_ir_outcomes(
                     ir_obj, [configs[i] for i in sup], hosts=hosts,
                     dist=dist, **ir_kwargs)
@@ -422,6 +491,10 @@ def _evaluate_outcomes(
                 rest = [i for i in range(len(configs))
                         if outcomes[i] is None]
                 if rest:
+                    obs.counter("repro_replay_row_fallback_configs_total",
+                                float(len(rest)),
+                                help="configs the IR could not cover "
+                                     "(row-path fallback)")
                     rest_results, _, _ = _evaluate(
                         [configs[i] for i in rest], store, workers=workers,
                         hosts=hosts, mmap=mmap, batched=batched,

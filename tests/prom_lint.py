@@ -1,0 +1,61 @@
+"""Prometheus text-exposition linter CLI over :func:`repro.obs.lint_exposition`.
+
+CI runs the quick bench with ``--obs`` and lints the resulting exposition::
+
+    PYTHONPATH=src python tests/prom_lint.py reports/obs_ci/metrics.prom \
+        --require repro_backend_devices=4
+
+``--require name=value`` additionally asserts that a sample with that exact
+name (no labels) or any labelled variant of it equals ``value`` — used to pin
+the device-count gauge in the forced-4-device CI lane. Exit code 0 iff the
+exposition parses and every requirement holds.
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import re
+import sys
+
+
+def check_file(path: str, requirements: list[str]) -> list[str]:
+    """Lint ``path``; returns all problems (empty list == clean)."""
+    from repro.obs import lint_exposition
+
+    text = pathlib.Path(path).read_text()
+    problems = list(lint_exposition(text))
+
+    for req in requirements:
+        name, _, want = req.partition("=")
+        pat = re.compile(rf"^{re.escape(name)}(?:\{{[^}}]*\}})? (.+)$",
+                         re.MULTILINE)
+        values = [float(m.group(1)) for m in pat.finditer(text)]
+        if not values:
+            problems.append(f"required metric {name!r} not found")
+        elif not any(v == float(want) for v in values):
+            problems.append(
+                f"required {name}={want}, exposition has {values}")
+    return problems
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("path", help="Prometheus text-exposition file")
+    ap.add_argument("--require", action="append", default=[],
+                    metavar="NAME=VALUE",
+                    help="assert a sample of NAME equals VALUE (repeatable)")
+    args = ap.parse_args()
+
+    problems = check_file(args.path, args.require)
+    for p in problems:
+        print(f"prom_lint: {p}", file=sys.stderr)
+    if not problems:
+        n = len({line.split("{")[0].split(" ")[0]
+                 for line in pathlib.Path(args.path).read_text().splitlines()
+                 if line and not line.startswith("#")})
+        print(f"prom_lint: OK ({n} distinct sample names)")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
