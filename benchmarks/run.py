@@ -77,6 +77,9 @@ def main() -> None:
     import repro.obs as obs
     if args.obs:
         obs.enable()
+        # zero-register the degradation ladder so a fault-free exposition
+        # still carries the families (CI lints on presence)
+        obs.init_degradation_metrics()
 
     from benchmarks.fleet_bench import bench_fleet_analyze
     from benchmarks.kernels_bench import bench_kernels
@@ -117,6 +120,16 @@ def main() -> None:
         payload["stages"] = obs.stage_breakdown()
         print("\n== stage tree ==", file=sys.stderr)
         print(obs.stage_report(min_dur_s=1e-3), file=sys.stderr)
+        # degradation ladder: quarantines / retries / fallbacks / coverage —
+        # all zero (or 1.0 coverage) on a healthy run, by construction
+        fam_names = {name for name, _, _ in obs.DEGRADATION_FAMILIES}
+        print("\n== degradation ladder ==", file=sys.stderr)
+        for line in obs.render_prometheus().splitlines():
+            if line.startswith("#"):
+                continue
+            sample_name = line.split("{")[0].split(" ")[0]
+            if sample_name in fam_names:
+                print("  " + line, file=sys.stderr)
 
     if args.json:
         pathlib.Path(args.json).write_text(

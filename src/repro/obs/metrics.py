@@ -250,3 +250,48 @@ def observe(name: str, value: float, help: str = "", **labels) -> None:
     if not STATE.enabled:
         return
     REGISTRY.histogram(name, help, **labels).observe(value)
+
+
+# ------------------------------------------------- degradation-ladder metrics
+#: the robustness layer's metric families (name, kind, help) — preregistered
+#: zero-valued by :func:`init_degradation_metrics` so expositions always
+#: carry them even on fault-free runs (CI asserts presence; see
+#: tests/prom_lint.py --require and the README "Robustness" section).
+DEGRADATION_FAMILIES: tuple[tuple[str, str, str], ...] = (
+    ("repro_fallbacks_total", "counter",
+     "degradation-ladder transitions, labelled {from, to, reason}"),
+    ("repro_shards_quarantined_total", "counter",
+     "telemetry shards skipped or quarantined, by reason"),
+    ("repro_shards_repaired_total", "counter",
+     "telemetry shards repaired by the hygiene layer, by reason"),
+    ("repro_partition_retries_total", "counter",
+     "pool partition attempts that crashed/hung and were retried or degraded"),
+    ("repro_coverage_fraction", "gauge",
+     "rows analyzed / rows on disk for the last run, by stage"),
+)
+
+
+def fallback(frm: str, to: str, reason: str, amount: float = 1.0) -> None:
+    """Record one degradation-ladder transition (``repro_fallbacks_total``):
+    jax -> numpy, compact -> row, sidecar -> rebuild, pool -> in_process,
+    manifest -> rescan. ``from`` is a Python keyword, hence the dict
+    unpacking. Gated like every module helper — free when obs is off."""
+    if not STATE.enabled:
+        return
+    REGISTRY.counter(
+        "repro_fallbacks_total", DEGRADATION_FAMILIES[0][2],
+        **{"from": frm, "to": to, "reason": reason}).inc(amount)
+
+
+def init_degradation_metrics() -> None:
+    """Pre-register the robustness families (zero-valued, unlabelled) so a
+    fault-free exposition still exposes them — dashboards and the CI linter
+    can then assert on presence instead of guessing whether a zero means
+    'no faults' or 'not instrumented'."""
+    if not STATE.enabled:
+        return
+    for name, kind, help_text in DEGRADATION_FAMILIES:
+        if kind == "counter":
+            REGISTRY.counter(name, help_text)
+        else:
+            REGISTRY.gauge(name, help_text)

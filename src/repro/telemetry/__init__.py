@@ -8,8 +8,22 @@ from repro.telemetry.pipeline import (  # noqa: F401
     classify_frame,
     per_job_fraction_cdf,
     tail_share,
+    DEFAULT_FAULT_TOLERANCE,
+    FaultTolerance,
     FleetAccumulator,
     JobAnalysis,
     FleetAnalysis,
 )
-from repro.telemetry.storage import TelemetryStore  # noqa: F401
+from repro.telemetry.storage import (  # noqa: F401
+    ShardReadError,
+    TelemetryStore,
+)
+from repro.telemetry.hygiene import (  # noqa: F401
+    HygieneContract,
+    ShardVerdict,
+    check_frame,
+    dcgm_to_frame,
+    ingest_dcgm,
+    ingest_frame,
+    scrub_store,
+)

@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import os
 import time
 from typing import TYPE_CHECKING, Iterable
 
@@ -56,6 +57,8 @@ class FleetAnalysis:
     fleet: EnergyBreakdown              # job-attributed samples only
     unattributed_energy_j: float        # samples with job_id < 0 (Fig 3a 7%)
     n_intervals: int
+    coverage: float = 1.0               # rows analyzed / rows on disk
+    skipped: tuple = ()                 # shard skip records (strict=False)
 
     @property
     def in_execution_time_fraction(self) -> float:
@@ -285,10 +288,144 @@ def _pool_context():
         return multiprocessing.get_context("spawn")
 
 
+@dataclasses.dataclass(frozen=True)
+class FaultTolerance:
+    """Fault-supervisor policy for process-pool stages.
+
+    ``max_retries`` bounds how many times a *crashed* (BrokenProcessPool) or
+    *timed-out* partition is resubmitted — with exponential backoff starting
+    at ``backoff_s`` — before it degrades to in-process execution in the
+    parent (recorded as a ``pool -> in_process`` fallback). ``timeout_s``
+    is the wall-clock budget for one pool round (``None`` = never time out;
+    hung workers then hang the stage, exactly as before this layer existed).
+    Worker-raised exceptions are *not* retried: a deterministic error (a
+    corrupt shard under ``strict=True``, a bad config) propagates
+    immediately with its original type.
+    """
+
+    max_retries: int = 2
+    timeout_s: float | None = None
+    backoff_s: float = 0.05
+
+
+DEFAULT_FAULT_TOLERANCE = FaultTolerance()
+
+
+def _fault_plan() -> str | None:
+    """The active fault-plan path, captured in the *parent* at submission
+    time. It must travel as a task argument, not ambiently: forkserver
+    children inherit the fork server's environment from when it first
+    launched, so a plan installed later would be invisible to them."""
+    return os.environ.get("REPRO_FAULT_PLAN")   # == faults.ENV_PLAN
+
+
+def _partition_body(stage, plan, worker, root, shard_files, *extra):
+    """Pool submission wrapper: give the fault-injection harness its hook,
+    then run the worker. The plan check keeps the harness import (and any
+    file reads) entirely off the production path."""
+    if plan:
+        from repro.testing import faults
+        faults.check(stage, plan)
+    return worker(root, shard_files, *extra)
+
+
+def _shutdown_pool(pool, hard: bool) -> None:
+    if hard:
+        # hung or crashed round: terminate live workers (a hung worker
+        # never exits on its own) and abandon queued futures
+        for proc in list((getattr(pool, "_processes", None) or {}).values()):
+            try:
+                proc.terminate()
+            except Exception:
+                pass
+        pool.shutdown(wait=False, cancel_futures=True)
+    else:
+        pool.shutdown(wait=True)
+
+
+def run_supervised(fn, task_args: list[tuple], stage: str,
+                   fault: FaultTolerance | None = None) -> list:
+    """Run ``fn(*args)`` for each args-tuple in a process pool under the
+    bounded-retry fault supervisor; returns results **in task order**.
+
+    Crash/hang handling: a task whose worker dies (``BrokenProcessPool``)
+    or exceeds ``fault.timeout_s`` is retried in a fresh pool up to
+    ``fault.max_retries`` times with exponential backoff, then degraded to
+    in-process execution in the parent — so one bad worker can no longer
+    take down an entire ``analyze_store``/``run_sweep``. Note a broken pool
+    fails *every* in-flight task of that round; innocent tasks are simply
+    retried and succeed. Worker-raised exceptions propagate immediately
+    (they are deterministic; retrying cannot help). Obs payloads are
+    absorbed in task order after all tasks settle, preserving the
+    bit-identical obs-on/obs-off contract.
+    """
+    from concurrent.futures import TimeoutError as FutTimeout
+    from concurrent.futures import ProcessPoolExecutor
+    from concurrent.futures.process import BrokenProcessPool
+
+    fault = fault or DEFAULT_FAULT_TOLERANCE
+    n = len(task_args)
+    results: dict[int, object] = {}
+    payloads: dict[int, object] = {}
+    attempts = [0] * n
+    token = obs.worker_token(f"{stage}.partition")
+    pending = list(range(n))
+    while pending:
+        pool = ProcessPoolExecutor(max_workers=len(pending),
+                                   mp_context=_pool_context())
+        futures = {i: pool.submit(obs.call_with_obs, token, fn, *task_args[i])
+                   for i in pending}
+        deadline = (time.monotonic() + fault.timeout_s
+                    if fault.timeout_s is not None else None)
+        failed: list[tuple[int, BaseException]] = []
+        error: BaseException | None = None
+        for i in pending:
+            if error is not None:
+                futures[i].cancel()
+                continue
+            try:
+                budget = (None if deadline is None
+                          else max(deadline - time.monotonic(), 0.0))
+                results[i], payloads[i] = futures[i].result(timeout=budget)
+            except (BrokenProcessPool, FutTimeout) as e:
+                failed.append((i, e))
+            except BaseException as e:
+                error = e               # worker-raised: not retryable
+        _shutdown_pool(pool, hard=bool(failed) or error is not None)
+        if error is not None:
+            raise error
+        pending = []
+        backoff_round = 0
+        for i, exc in failed:
+            attempts[i] += 1
+            reason = type(exc).__name__
+            obs.counter("repro_partition_retries_total",
+                        stage=stage, reason=reason,
+                        help="pool partition attempts that crashed/hung and "
+                             "were retried or degraded")
+            if attempts[i] <= fault.max_retries:
+                pending.append(i)
+                backoff_round = max(backoff_round, attempts[i])
+            else:
+                obs.fallback("pool", "in_process", reason)
+                with obs.span(f"{stage}.partition", degraded=True):
+                    results[i] = fn(*task_args[i])
+                payloads[i] = None
+        if pending and fault.backoff_s > 0:
+            time.sleep(min(fault.backoff_s * (2 ** (backoff_round - 1)), 2.0))
+    for i in range(n):
+        obs.absorb(payloads.get(i))
+    return [results[i] for i in range(n)]
+
+
 def map_shard_partitions(store, hosts, workers, worker, extra_args, merge,
-                         stage: str = "pipeline"):
+                         stage: str = "pipeline",
+                         fault: FaultTolerance | None = None):
     """Run ``worker(root, shard_files, *extra_args)`` over host-label
     partitions of a store and fold the results with ``merge(acc, part)``.
+    Every worker body returns ``(obj, skips)`` — its result plus the shard
+    skip records its ``strict=False`` reads produced — and this returns the
+    folded ``(result, skips)`` with skips concatenated in partition order.
 
     The shared scaffold of ``analyze_store(workers=N)`` and
     ``repro.whatif.sweep.run_sweep``. Determinism contract: partitions are
@@ -297,6 +434,11 @@ def map_shard_partitions(store, hosts, workers, worker, extra_args, merge,
     (``math.fsum`` pieces, sorted stream keys) any worker count is
     bit-identical to the serial pass. With one partition or ``workers <= 1``
     the worker runs in-process.
+
+    Pool rounds run under the :func:`run_supervised` fault supervisor
+    (crashed/hung partitions retry with backoff, then degrade to
+    in-process; policy via ``fault``, default
+    :data:`DEFAULT_FAULT_TOLERANCE`).
 
     When observability is enabled (:mod:`repro.obs`), each pool submission
     is wrapped in :func:`repro.obs.call_with_obs`: the worker runs under a
@@ -312,25 +454,21 @@ def map_shard_partitions(store, hosts, workers, worker, extra_args, merge,
         obs.gauge("repro_pool_workers", 1.0, stage=stage,
                   help="process-pool fan-out per stage (1 = in-process)")
         with obs.span(f"{stage}.partition", serial=True):
-            return worker(str(store.root), store.shard_files(hosts),
-                          *extra_args)
-    from concurrent.futures import ProcessPoolExecutor
-    ctx = _pool_context()   # forkserver/spawn; never forks the JAX parent
+            return _partition_body(stage, _fault_plan(), worker,
+                                   str(store.root),
+                                   store.shard_files(hosts), *extra_args)
     obs.gauge("repro_pool_workers", float(len(partitions)), stage=stage,
               help="process-pool fan-out per stage (1 = in-process)")
-    token = obs.worker_token(f"{stage}.partition")
-    result = None
-    with ProcessPoolExecutor(max_workers=len(partitions),
-                             mp_context=ctx) as pool:
-        futures = [pool.submit(obs.call_with_obs, token, worker,
-                               str(store.root), store.shard_files(part),
-                               *extra_args)
-                   for part in partitions]
-        for fut in futures:
-            part, payload = fut.result()
-            obs.absorb(payload)
-            result = part if result is None else merge(result, part)
-    return result
+    parts = run_supervised(
+        _partition_body,
+        [(stage, _fault_plan(), worker, str(store.root),
+          store.shard_files(part), *extra_args) for part in partitions],
+        stage=stage, fault=fault)
+    result, skips = None, []
+    for part, part_skips in parts:
+        skips.extend(part_skips)
+        result = part if result is None else merge(result, part)
+    return result, skips
 
 
 def _accumulate_shards(
@@ -338,15 +476,23 @@ def _accumulate_shards(
     shard_files: list[str],
     mmap: bool,
     acc_kwargs: dict,
-) -> FleetAccumulator:
+    strict: bool = True,
+    verify: bool = False,
+) -> tuple[FleetAccumulator, list[dict]]:
     """Process-pool worker body: accumulate one shard subset (must stay
-    module-level picklable)."""
+    module-level picklable). Returns ``(accumulator, skip_records)`` —
+    under ``strict=False`` unreadable shards are skipped and recorded
+    instead of raising (see :meth:`TelemetryStore.read_shard_or_skip`)."""
     from repro.telemetry.storage import TelemetryStore
     store = TelemetryStore(root)
     acc = FleetAccumulator(**acc_kwargs)
+    skips: list[dict] = []
     for name in shard_files:
-        acc.update(store.read_shard(name, mmap=mmap))
-    return acc
+        frame = store.read_shard_or_skip(name, skips, mmap=mmap,
+                                         strict=strict, verify=verify)
+        if frame is not None:
+            acc.update(frame)
+    return acc, skips
 
 
 def analyze_store(
@@ -358,6 +504,9 @@ def analyze_store(
     dt_s: float = 1.0,
     workers: int = 1,
     mmap: bool = False,
+    strict: bool = True,
+    verify: bool = False,
+    fault: FaultTolerance | None = None,
 ) -> FleetAnalysis:
     """Streaming fleet analysis: one shard in memory at a time.
 
@@ -371,7 +520,15 @@ def analyze_store(
     ``unattributed_energy_j`` (see :meth:`FleetAccumulator.merge`).
     ``mmap=True`` memory-maps ``npy_dir`` shards (zero-copy reads; see
     :meth:`TelemetryStore.iter_shards`).
+
+    Robustness: ``strict=False`` skips unreadable shards instead of raising
+    — the result is bit-identical to analyzing the clean subset, with the
+    skipped shards recorded in ``result.skipped`` and ``result.coverage``
+    reporting rows analyzed / rows on disk. ``verify=True`` additionally
+    checksums every shard against the manifest. ``fault`` tunes the pool's
+    crash/hang supervisor (see :class:`FaultTolerance`).
     """
+    hosts = list(hosts) if hosts is not None else None
     acc_kwargs = dict(
         min_job_duration_s=min_job_duration_s,
         min_interval_s=min_interval_s,
@@ -380,12 +537,21 @@ def analyze_store(
     )
     t0 = time.perf_counter()
     with obs.span("analyze_store", workers=workers):
-        acc = map_shard_partitions(
-            store, hosts, workers, _accumulate_shards, (mmap, acc_kwargs),
-            merge=lambda a, b: a.merge(b), stage="analyze")
+        acc, skips = map_shard_partitions(
+            store, hosts, workers, _accumulate_shards,
+            (mmap, acc_kwargs, strict, verify),
+            merge=lambda a, b: a.merge(b), stage="analyze", fault=fault)
         n_rows, n_chunks = acc.n_rows, acc.n_chunks
         with obs.span("analyze.finalize"):
             result = acc.finalize()
+        expected = store.rows_on_disk(hosts)
+        coverage = (1.0 if expected <= 0
+                    else max(0.0, 1.0 - sum(s["rows"] for s in skips)
+                             / expected))
+        result = dataclasses.replace(result, coverage=coverage,
+                                     skipped=tuple(skips))
+        obs.gauge("repro_coverage_fraction", coverage, stage="analyze",
+                  help="rows analyzed / rows on disk for the last run")
     if obs.enabled():
         dt = max(time.perf_counter() - t0, 1e-12)
         obs.observe("repro_analyze_seconds", dt,

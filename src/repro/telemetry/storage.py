@@ -27,19 +27,109 @@ manifest under ``manifest["run_ir"][<classifier-config hash>]`` with the
 to a different sidecar, and appending shards invalidates (``source_rows``
 no longer matches, so :func:`repro.whatif.ir.get_ir` rebuilds). Sidecars
 are derived data — deleting the files and the manifest key is always safe.
+
+Robustness (see the README "Robustness & dirty telemetry" section)
+------------------------------------------------------------------
+Real telemetry shards get truncated, bit-flipped and orphaned. Every write
+that could tear (manifest, ``npz`` shard, sidecar) goes through temp-file +
+:func:`atomic_replace`; every read raises a single typed
+:class:`ShardReadError` carrying a machine-readable ``reason``
+(``missing_file`` / ``corrupt`` / ``checksum_mismatch``) instead of leaking
+``FileNotFoundError`` / ``zipfile.BadZipFile``. ``write_shard`` records a
+sha256 per shard (``verify=True`` reads recompute it), ``iter_shards`` /
+``read_shard_or_skip`` take ``strict=False`` to skip bad shards with
+coverage accounting, :meth:`TelemetryStore.quarantine_shard` moves a bad
+shard into ``quarantine/`` with a manifest record, and a corrupt manifest
+JSON is recovered by rescanning the shard files on disk. The repair /
+quarantine *policies* live in :mod:`repro.telemetry.hygiene`.
 """
 from __future__ import annotations
 
+import hashlib
 import json
+import os
 import pathlib
+import re
+import shutil
+import zipfile
+import zlib
 from typing import Iterable, Iterator
 
 import numpy as np
 
+import repro.obs as obs
 from repro.telemetry.records import FIELDS, TelemetryFrame
 
 MANIFEST_NAME = "manifest.json"
 SHARD_FORMATS = ("npz", "npy_dir")
+QUARANTINE_DIR = "quarantine"
+_SHARD_STEM_RE = re.compile(r"^telemetry_(?P<host>.+)_d(?P<day>\d{3})_\d{5}$")
+
+
+class ShardReadError(RuntimeError):
+    """One shard could not be read. ``reason`` is machine-readable —
+    ``missing_file`` (manifest/disk drift), ``corrupt`` (truncated or
+    bit-flipped archive, ragged columns), ``checksum_mismatch`` (recorded
+    sha256 disagrees with the bytes on disk)."""
+
+    def __init__(self, shard: str, reason: str, detail: str = ""):
+        self.shard = shard
+        self.reason = reason
+        msg = f"shard {shard!r}: {reason}"
+        super().__init__(msg + (f" ({detail})" if detail else ""))
+
+
+def atomic_replace(tmp: pathlib.Path, dst: pathlib.Path) -> None:
+    """The single commit point of every storage write (manifest, ``npz``
+    shard, run-IR sidecar): rename a fully-written temp file over the
+    destination. Kept module-level — and always called as
+    ``storage.atomic_replace`` / a module global, never ``from``-imported —
+    so the fault-injection harness can simulate a kill at the rename
+    boundary by patching one name (:func:`repro.testing.faults.dying_renames`)."""
+    os.replace(str(tmp), str(dst))
+
+
+def _write_atomic_text(path: pathlib.Path, text: str) -> None:
+    tmp = path.with_name(path.name + ".tmp")
+    tmp.write_text(text)
+    atomic_replace(tmp, path)
+
+
+def _write_atomic_npz(path: pathlib.Path, arrays: dict) -> None:
+    # savez_compressed on an open handle: a string temp path without the
+    # .npz suffix would get one silently appended
+    tmp = path.with_name(path.name + ".tmp")
+    with open(tmp, "wb") as fh:
+        np.savez_compressed(fh, **arrays)
+    atomic_replace(tmp, path)
+
+
+#: reader-side exceptions that mean "this archive is damaged", mapped to
+#: ShardReadError(reason="corrupt"): truncated zip central directory
+#: (BadZipFile), truncated .npy payload / ragged columns (ValueError),
+#: deflate stream damage (zlib.error), short reads (EOFError/OSError)
+_CORRUPT_ERRORS = (zipfile.BadZipFile, ValueError, zlib.error, EOFError,
+                   OSError, KeyError)
+
+
+def checksum_shard(path: pathlib.Path) -> str:
+    """sha256 of a shard's bytes; ``npy_dir`` shards hash the sorted
+    ``(column file name, column sha256)`` pairs so the digest is stable
+    against directory-listing order."""
+    if path.is_dir():
+        outer = hashlib.sha256()
+        for col in sorted(p.name for p in path.glob("*.npy")):
+            outer.update(f"{col}:{_file_sha256(path / col)}\n".encode())
+        return outer.hexdigest()
+    return _file_sha256(path)
+
+
+def _file_sha256(path: pathlib.Path) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as fh:
+        for block in iter(lambda: fh.read(1 << 20), b""):
+            h.update(block)
+    return h.hexdigest()
 
 
 class TelemetryStore:
@@ -56,7 +146,17 @@ class TelemetryStore:
         self.root.mkdir(parents=True, exist_ok=True)
         self._manifest_path = self.root / MANIFEST_NAME
         if self._manifest_path.exists():
-            self.manifest = json.loads(self._manifest_path.read_text())
+            try:
+                manifest = json.loads(self._manifest_path.read_text())
+                if not isinstance(manifest, dict) \
+                        or not isinstance(manifest.get("shards"), list):
+                    raise ValueError("manifest is not a shard mapping")
+                self.manifest = manifest
+            except (ValueError, OSError) as e:
+                # poisoned/truncated manifest JSON: rebuild it from the
+                # shard files on disk rather than failing the whole store
+                obs.fallback("manifest", "rescan", type(e).__name__)
+                self.manifest = self._recover_manifest()
         else:
             self.manifest = {"shards": []}
         persisted = self.manifest.get("shard_format")
@@ -70,8 +170,56 @@ class TelemetryStore:
             self.shard_format = shard_format
         self.manifest["shard_format"] = self.shard_format
 
+    def _recover_manifest(self) -> dict:
+        """Rebuild a manifest by rescanning ``telemetry_*`` shard files on
+        disk: readable shards are re-listed (rows and sha256 recomputed),
+        unreadable ones are moved to the quarantine area. The recovered
+        manifest is flushed immediately, marked ``{"recovered": true}``."""
+        shards: list[dict] = []
+        quarantine: list[dict] = []
+        fmt = None
+        for path in sorted(self.root.iterdir()):
+            stem = path.name[:-4] if path.name.endswith(".npz") else path.name
+            m = _SHARD_STEM_RE.match(stem)
+            if m is None or path.name.endswith(".tmp"):
+                continue
+            entry = {"file": path.name, "host": m.group("host"),
+                     "day": int(m.group("day")),
+                     "format": "npy_dir" if path.is_dir() else "npz"}
+            try:
+                rows = len(self._read_shard_file(path))
+            except ShardReadError as e:
+                entry["reason"] = e.reason
+                quarantine.append(entry)
+                self._move_to_quarantine(path)
+                continue
+            entry["rows"] = rows
+            entry["sha256"] = checksum_shard(path)
+            fmt = fmt or entry["format"]
+            shards.append(entry)
+        manifest: dict = {"shards": shards, "recovered": True}
+        if quarantine:
+            manifest["quarantine"] = quarantine
+        if fmt is not None:
+            manifest["shard_format"] = fmt
+        _write_atomic_text(self._manifest_path,
+                           json.dumps(manifest, indent=1))
+        return manifest
+
+    def _move_to_quarantine(self, path: pathlib.Path) -> None:
+        qdir = self.root / QUARANTINE_DIR
+        qdir.mkdir(exist_ok=True)
+        try:
+            shutil.move(str(path), str(qdir / path.name))
+        except OSError:
+            pass                        # drift: file vanished under us
+
     def save_manifest(self) -> None:
-        self._manifest_path.write_text(json.dumps(self.manifest, indent=1))
+        """Persist the manifest atomically (temp file + rename): a process
+        killed mid-save leaves the previous manifest intact, never a torn
+        JSON (tests/test_robustness.py kill-mid-write suite)."""
+        _write_atomic_text(self._manifest_path,
+                           json.dumps(self.manifest, indent=1))
 
     def merge_manifest_key(self, key: str, subkey: str, value) -> None:
         """Atomically merge ``manifest[key][subkey] = value`` into the
@@ -85,11 +233,16 @@ class TelemetryStore:
             current = json.loads(self._manifest_path.read_text())
         except (OSError, ValueError):
             current = self.manifest
-        current.setdefault(key, {})[subkey] = value
-        tmp = self._manifest_path.with_name(MANIFEST_NAME + ".tmp")
-        tmp.write_text(json.dumps(current, indent=1))
-        tmp.replace(self._manifest_path)
-        self.manifest.setdefault(key, {})[subkey] = value
+        if not isinstance(current, dict) \
+                or not isinstance(current.get("shards"), list):
+            current = self.manifest      # poisoned on-disk copy: ours wins
+        if not isinstance(current.get(key), dict):
+            current[key] = {}            # tolerate a poisoned subtree
+        current[key][subkey] = value
+        _write_atomic_text(self._manifest_path, json.dumps(current, indent=1))
+        if not isinstance(self.manifest.get(key), dict):
+            self.manifest[key] = {}
+        self.manifest[key][subkey] = value
 
     def write_shard(self, frame: TelemetryFrame, host: str = "host0",
                     day: int = 0, flush_manifest: bool = True) -> pathlib.Path:
@@ -98,27 +251,52 @@ class TelemetryStore:
         ``flush_manifest=False`` and call :meth:`save_manifest` once at the
         end — rewriting the growing JSON manifest per shard is O(shards^2)."""
         stem = f"telemetry_{host}_d{day:03d}_{len(self.manifest['shards']):05d}"
+        path = self._write_shard_file(stem, frame)
+        self.manifest["shards"].append(
+            {"file": path.name, "host": host, "day": day, "rows": len(frame),
+             "format": self.shard_format, "sha256": checksum_shard(path)})
+        if flush_manifest:
+            self.save_manifest()
+        return path
+
+    def _write_shard_file(self, stem: str,
+                          frame: TelemetryFrame) -> pathlib.Path:
         if self.shard_format == "npy_dir":
             path = self.root / stem
             # overwrite semantics matching the npz branch: a leftover shard
             # dir (e.g. from a crashed bulk write that never flushed its
-            # manifest) is replaced, stale columns included
+            # manifest) is replaced, stale columns included. Directory
+            # shards cannot be renamed into place atomically; a crash here
+            # leaves a dir the manifest never references, which the orphan
+            # scan (verify_manifest) surfaces.
             path.mkdir(exist_ok=True)
             for stale in path.glob("*.npy"):
                 stale.unlink()
             for f, col in frame.columns.items():
                 np.save(path / f"{f}.npy", col)
-            name = stem
-        else:
-            name = f"{stem}.npz"
-            path = self.root / name
-            np.savez_compressed(path, **frame.columns)
-        self.manifest["shards"].append(
-            {"file": name, "host": host, "day": day, "rows": len(frame),
-             "format": self.shard_format})
-        if flush_manifest:
-            self.save_manifest()
+            return path
+        path = self.root / f"{stem}.npz"
+        _write_atomic_npz(path, frame.columns)
         return path
+
+    def rewrite_shard(self, name: str, frame: TelemetryFrame) -> pathlib.Path:
+        """Replace an existing shard's contents in place (the hygiene
+        layer's repair writer): same file name, manifest entry updated with
+        the new row count and checksum."""
+        entry = self._shard_entry(name)
+        if entry is None:
+            raise KeyError(f"shard {name!r} is not in the manifest")
+        stem = name[:-4] if name.endswith(".npz") else name
+        path = self._write_shard_file(stem, frame)
+        entry["rows"] = len(frame)
+        entry["sha256"] = checksum_shard(path)
+        return path
+
+    def _shard_entry(self, name: str) -> dict | None:
+        for s in self.manifest["shards"]:
+            if s["file"] == name:
+                return s
+        return None
 
     def append(self, frame: TelemetryFrame, host: str = "host0",
                flush_manifest: bool = True) -> pathlib.Path | None:
@@ -134,24 +312,77 @@ class TelemetryStore:
         return self.write_shard(frame, host=host, day=day,
                                 flush_manifest=flush_manifest)
 
-    def read_shard(self, name: str, mmap: bool = False) -> TelemetryFrame:
+    def read_shard(self, name: str, mmap: bool = False,
+                   verify: bool = False) -> TelemetryFrame:
         """Read one shard by manifest name.
 
         ``mmap=True`` memory-maps ``npy_dir`` columns (zero-copy until a
         column is actually gathered); ``npz`` shards are deflate-compressed,
         which cannot be mapped, so they fall back to a normal load.
+
+        A missing or unreadable shard raises :class:`ShardReadError` with a
+        machine-readable ``reason`` (never a raw ``FileNotFoundError`` /
+        ``BadZipFile``). ``verify=True`` additionally recomputes the shard's
+        sha256 against the one recorded at write time (shards written before
+        checksums existed just skip the check) — the only way a bit-flip in
+        an *uncompressed* ``npy_dir`` column is detectable, since raw
+        ``np.load`` has no payload CRC.
         """
         path = self.root / name
-        if path.is_dir():
-            mode = "r" if mmap else None
-            return TelemetryFrame({
-                f: np.load(path / f"{f}.npy", mmap_mode=mode)
-                for f in FIELDS if (path / f"{f}.npy").exists()})
-        with np.load(path) as z:
-            return TelemetryFrame({f: z[f] for f in FIELDS if f in z})
+        try:
+            if path.is_dir():
+                if verify:
+                    self._verify_checksum(name, path)
+                mode = "r" if mmap else None
+                return TelemetryFrame({
+                    f: np.load(path / f"{f}.npy", mmap_mode=mode)
+                    for f in FIELDS if (path / f"{f}.npy").exists()})
+            if not path.exists():
+                raise ShardReadError(name, "missing_file",
+                                     "manifest entry with no file on disk")
+            if verify:
+                self._verify_checksum(name, path)
+            with np.load(path) as z:
+                return TelemetryFrame({f: z[f] for f in FIELDS if f in z})
+        except ShardReadError:
+            raise
+        except _CORRUPT_ERRORS as e:
+            raise ShardReadError(
+                name, "corrupt", f"{type(e).__name__}: {e}") from e
+
+    def _verify_checksum(self, name: str, path: pathlib.Path) -> None:
+        entry = self._shard_entry(name)
+        recorded = entry.get("sha256") if entry else None
+        if recorded and checksum_shard(path) != recorded:
+            raise ShardReadError(name, "checksum_mismatch",
+                                 "bytes on disk differ from write-time sha256")
+
+    def read_shard_or_skip(self, name: str, skips: list,
+                           mmap: bool = False, strict: bool = True,
+                           verify: bool = False) -> TelemetryFrame | None:
+        """:meth:`read_shard`, but with ``strict=False`` a bad shard returns
+        ``None`` and appends a skip record ``{"file", "host", "rows",
+        "reason"}`` to ``skips`` (rows from the manifest — the coverage
+        denominator the pipelines account against). The shared read step of
+        every fault-tolerant worker body."""
+        try:
+            return self.read_shard(name, mmap=mmap, verify=verify)
+        except ShardReadError as e:
+            if strict:
+                raise
+            entry = self._shard_entry(name) or {}
+            skips.append({"file": name, "host": entry.get("host", ""),
+                          "rows": int(entry.get("rows", 0)),
+                          "reason": e.reason})
+            obs.counter("repro_shards_quarantined_total", reason=e.reason,
+                        help="telemetry shards skipped or quarantined, "
+                             "by reason")
+            return None
 
     def iter_shards(self, hosts: Iterable[str] | None = None,
-                    mmap: bool = False) -> Iterator[TelemetryFrame]:
+                    mmap: bool = False, strict: bool = True,
+                    verify: bool = False,
+                    skips: list | None = None) -> Iterator[TelemetryFrame]:
         """Yield shard frames one at a time, in manifest (append) order.
 
         The streaming analysis path (``telemetry.pipeline.analyze_store``)
@@ -162,11 +393,64 @@ class TelemetryStore:
         ``np.memmap``-backed columns — cold columns are never read off disk
         (note ``TelemetryFrame.group_streams`` gathers every column it
         sorts, so the win is for passes that slice or subset columns).
+
+        ``strict=False`` skips missing/corrupt shards instead of raising,
+        appending one record per skip to ``skips`` (when given) so callers
+        can account coverage; ``verify=True`` checks recorded sha256s.
         """
         hosts = set(hosts) if hosts is not None else None
+        sink = skips if skips is not None else []
         for s in self.manifest["shards"]:
             if hosts is None or s["host"] in hosts:
-                yield self.read_shard(s["file"], mmap=mmap)
+                frame = self.read_shard_or_skip(
+                    s["file"], sink, mmap=mmap, strict=strict, verify=verify)
+                if frame is not None:
+                    yield frame
+
+    def quarantine_shard(self, name: str, reason: str,
+                         flush_manifest: bool = True) -> None:
+        """Move a shard out of the readable set: file relocated to
+        ``quarantine/``, manifest entry moved from ``shards`` to the
+        ``quarantine`` list (with the reason), so analysis never sees it
+        again but a human can inspect or restore it."""
+        entry = self._shard_entry(name)
+        if entry is not None:
+            self.manifest["shards"].remove(entry)
+        record = dict(entry or {"file": name})
+        record["reason"] = reason
+        self.manifest.setdefault("quarantine", []).append(record)
+        self._move_to_quarantine(self.root / name)
+        obs.counter("repro_shards_quarantined_total", reason=reason,
+                    help="telemetry shards skipped or quarantined, by reason")
+        if flush_manifest:
+            self.save_manifest()
+
+    def verify_manifest(self) -> list[dict]:
+        """Detect manifest<->disk drift without reading shard payloads:
+        returns one record per problem — ``{"file", "reason":
+        "missing_file"}`` for a manifest entry whose file vanished,
+        ``{"file", "reason": "orphan_file"}`` for a ``telemetry_*`` file
+        with no manifest entry (e.g. a crashed bulk write). Clean store ==
+        empty list."""
+        drift: list[dict] = []
+        known = {s["file"] for s in self.manifest["shards"]}
+        for s in self.manifest["shards"]:
+            path = self.root / s["file"]
+            if not (path.exists() or path.is_dir()):
+                drift.append({"file": s["file"], "host": s.get("host", ""),
+                              "rows": int(s.get("rows", 0)),
+                              "reason": "missing_file"})
+        for path in sorted(self.root.iterdir()):
+            stem = path.name[:-4] if path.name.endswith(".npz") else path.name
+            if (_SHARD_STEM_RE.match(stem) and not path.name.endswith(".tmp")
+                    and path.name not in known):
+                drift.append({"file": path.name, "reason": "orphan_file"})
+        return drift
+
+    def _read_shard_file(self, path: pathlib.Path) -> TelemetryFrame:
+        """Read a shard by path only (no manifest entry required) — the
+        manifest-recovery scan's reader."""
+        return self.read_shard(path.name)
 
     def read_all(self, hosts: Iterable[str] | None = None) -> TelemetryFrame:
         return TelemetryFrame.concat(list(self.iter_shards(hosts)))
@@ -206,3 +490,10 @@ class TelemetryStore:
     @property
     def total_rows(self) -> int:
         return sum(s["rows"] for s in self.manifest["shards"])
+
+    def rows_on_disk(self, hosts: Iterable[str] | None = None) -> int:
+        """Manifest row total, optionally host-filtered — the denominator of
+        every coverage fraction (rows analyzed / rows on disk)."""
+        host_filter = set(hosts) if hosts is not None else None
+        return sum(s["rows"] for s in self.manifest["shards"]
+                   if host_filter is None or s["host"] in host_filter)

@@ -1,0 +1,6 @@
+"""Deterministic test harnesses for the robustness layer.
+
+:mod:`repro.testing.faults` injects file corruption, crashing/hanging pool
+workers and kill-mid-write into the pipelines — driving
+``tests/test_robustness.py`` and the CI chaos lane.
+"""

@@ -1,0 +1,181 @@
+"""Deterministic fault injection for the robustness layer.
+
+Three families of faults, all reproducible (no randomness, no wall-clock):
+
+* **File corruptors** — :func:`truncate_file`, :func:`bitflip_file`,
+  :func:`poison_json`, :func:`corrupt_npy_dir` damage shard/manifest bytes
+  in place, the way a full disk, a torn copy or silent media corruption
+  would.
+* **Worker faults** — a *fault plan* written to disk and advertised via the
+  ``REPRO_FAULT_PLAN`` environment variable; the pipeline captures the path
+  in the parent and ships it to pool children as a task argument
+  (forkserver children keep the fork server's original environment, so the
+  env var alone would go stale). :func:`check` is the pool submission hook
+  (:func:`repro.telemetry.pipeline._partition_body`); a stage listed in the
+  plan's ``crash`` list makes the *first* worker to claim the marker file
+  die with ``os._exit`` (an un-catchable hard crash, exactly what an
+  OOM-kill looks like to the pool), ``hang`` sleeps instead. Markers are
+  claimed with ``O_CREAT | O_EXCL``, so each fault fires exactly once per
+  plan — retried attempts succeed, which is what lets tests assert the
+  supervisor's retry path deterministically. The installer's own process
+  never faults (``installer_pid`` guard), so degraded in-process execution
+  is safe.
+* **Kill-mid-write** — :func:`dying_renames` patches
+  :func:`repro.telemetry.storage.atomic_replace` (the single commit point
+  of every manifest/shard/sidecar write) to raise, simulating a process
+  killed after the temp file is written but before the rename commits.
+
+Everything here is stdlib-only and import-free on the hot path: pipelines
+only import this module when ``REPRO_FAULT_PLAN`` is set.
+"""
+from __future__ import annotations
+
+import contextlib
+import json
+import os
+import pathlib
+import time
+
+#: environment variable holding the fault-plan path; also hardcoded in
+#: repro.telemetry.pipeline._partition_body so the pipeline never imports
+#: this module unless a plan is active
+ENV_PLAN = "REPRO_FAULT_PLAN"
+#: exit status of an injected crash (distinguishable from a real segfault)
+CRASH_EXIT_CODE = 13
+
+
+# --------------------------------------------------------------------------- #
+# File corruptors
+# --------------------------------------------------------------------------- #
+def truncate_file(path: str | pathlib.Path, keep_fraction: float = 0.5) -> None:
+    """Cut a file to ``keep_fraction`` of its bytes (min 1) — a torn write
+    or full-disk copy. Deterministic for a given input."""
+    path = pathlib.Path(path)
+    data = path.read_bytes()
+    path.write_bytes(data[:max(1, int(len(data) * keep_fraction))])
+
+
+def bitflip_file(path: str | pathlib.Path, offset: int | None = None,
+                 bit: int = 0) -> None:
+    """Flip one bit in place (default: the middle byte) — silent media
+    corruption. Against an ``npz`` the zip CRC catches it at read; against
+    a raw ``npy`` only a recorded sha256 can (``read_shard(verify=True)``)."""
+    path = pathlib.Path(path)
+    data = bytearray(path.read_bytes())
+    if not data:
+        return
+    i = len(data) // 2 if offset is None else offset
+    data[i] ^= 1 << bit
+    path.write_bytes(bytes(data))
+
+
+def poison_json(path: str | pathlib.Path) -> None:
+    """Overwrite a JSON file with a truncated, unparseable payload."""
+    pathlib.Path(path).write_text('{"shards": [{"file": "tele')
+
+
+def corrupt_npy_dir(path: str | pathlib.Path,
+                    column: str = "power.npy") -> None:
+    """Truncate one column file of an ``npy_dir`` shard."""
+    truncate_file(pathlib.Path(path) / column)
+
+
+# --------------------------------------------------------------------------- #
+# Worker fault plan (crash / hang inside pool workers)
+# --------------------------------------------------------------------------- #
+def install_plan(plan_dir: str | pathlib.Path, crash: tuple | list = (),
+                 hang: tuple | list = (), hang_s: float = 60.0) -> pathlib.Path:
+    """Write a fault plan and export ``REPRO_FAULT_PLAN`` so pool children
+    (which inherit the environment) pick it up. ``crash``/``hang`` list the
+    pipeline stage names (``"analyze"``, ``"sweep"``, ``"ir_build"``,
+    ``"replay_ir"``) whose first worker submission should die/stall."""
+    plan_dir = pathlib.Path(plan_dir)
+    plan_dir.mkdir(parents=True, exist_ok=True)
+    plan = {"installer_pid": os.getpid(), "dir": str(plan_dir),
+            "crash": list(crash), "hang": list(hang),
+            "hang_s": float(hang_s)}
+    path = plan_dir / "fault_plan.json"
+    path.write_text(json.dumps(plan))
+    os.environ[ENV_PLAN] = str(path)
+    return path
+
+
+def clear_plan() -> None:
+    os.environ.pop(ENV_PLAN, None)
+
+
+@contextlib.contextmanager
+def plan(plan_dir: str | pathlib.Path, **kwargs):
+    """``with faults.plan(tmpdir, crash=["analyze"]): ...`` — install a
+    fault plan for the duration of the block."""
+    install_plan(plan_dir, **kwargs)
+    try:
+        yield
+    finally:
+        clear_plan()
+
+
+def _claim(marker: pathlib.Path) -> bool:
+    """Atomically claim a fire-once marker (O_CREAT|O_EXCL): exactly one
+    process ever wins, so each planned fault fires once."""
+    try:
+        fd = os.open(marker, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+    except FileExistsError:
+        return False
+    os.close(fd)
+    return True
+
+
+def check(stage: str, plan_path: str | None = None) -> None:
+    """Fault hook, called at the top of every pool worker submission.
+    No-op unless a plan is installed, the caller is *not* the installing
+    process (so degraded in-process retries never kill the parent), and the
+    stage's fire-once marker is still unclaimed.
+
+    ``plan_path`` is normally passed explicitly, captured by the parent at
+    submission time (see ``pipeline._fault_plan``) — forkserver workers
+    inherit the fork server's original environment, so the env var alone
+    cannot be trusted inside a pool child."""
+    plan_path = plan_path or os.environ.get(ENV_PLAN)
+    if not plan_path:
+        return
+    try:
+        spec = json.loads(pathlib.Path(plan_path).read_text())
+    except (OSError, ValueError):
+        return
+    if os.getpid() == spec.get("installer_pid"):
+        return
+    plan_dir = pathlib.Path(spec.get("dir", "."))
+    if stage in spec.get("crash", ()) and _claim(
+            plan_dir / f"crash_{stage}.fired"):
+        os._exit(CRASH_EXIT_CODE)
+    if stage in spec.get("hang", ()) and _claim(
+            plan_dir / f"hang_{stage}.fired"):
+        time.sleep(float(spec.get("hang_s", 60.0)))
+
+
+# --------------------------------------------------------------------------- #
+# Kill-mid-write
+# --------------------------------------------------------------------------- #
+class SimulatedKill(RuntimeError):
+    """Raised in place of the atomic rename — the write never commits."""
+
+
+@contextlib.contextmanager
+def dying_renames():
+    """Make every :func:`repro.telemetry.storage.atomic_replace` raise
+    :class:`SimulatedKill`: the temp file is fully written, the rename never
+    happens — the observable state of a process killed at the commit
+    boundary. Atomicity tests assert the destination is untouched."""
+    from repro.telemetry import storage
+
+    original = storage.atomic_replace
+
+    def die(tmp, dst):
+        raise SimulatedKill(f"killed before rename of {dst}")
+
+    storage.atomic_replace = die
+    try:
+        yield
+    finally:
+        storage.atomic_replace = original

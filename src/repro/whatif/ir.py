@@ -55,6 +55,14 @@ Observability: build time, compaction ratio and every cache-ladder
 outcome (memory/sidecar hit, invalidation, negative-cache hit) are
 recorded under the ``repro_ir_*`` metrics when :mod:`repro.obs` is
 enabled — see the README "Observability" section for the full table.
+
+Robustness (README "Robustness & dirty telemetry"): sidecar writes commit
+through :func:`repro.telemetry.storage.atomic_replace` (kill-mid-write
+leaves the previous sidecar intact); a corrupt or unparseable sidecar is
+deleted and rebuilt from the shards (``sidecar -> rebuild`` fallback),
+never raised to the caller; IRs built with ``strict=False`` record the
+shards they skipped (:attr:`RunIR.skipped`) and are refused by strict
+cache hits, so a degraded IR can never silently serve a strict caller.
 """
 from __future__ import annotations
 
@@ -63,6 +71,8 @@ import hashlib
 import json
 import pathlib
 import time
+import zipfile
+import zlib
 from typing import TYPE_CHECKING, Iterable, Mapping
 
 import numpy as np
@@ -344,6 +354,7 @@ class RunIR:
     config: IRConfig
     streams: dict[tuple[int, int, int], StreamIR]
     source_rows: int
+    skipped: tuple = ()      # shard skip records from a strict=False build
 
     @property
     def n_rows(self) -> int:
@@ -501,34 +512,47 @@ class IRBuilder:
 
 
 def _build_partition(root: str, shard_files: list[str], config: IRConfig,
-                     mmap: bool) -> IRBuilder:
+                     mmap: bool, strict: bool = True,
+                     verify: bool = False) -> tuple[IRBuilder, list[dict]]:
     """Process-pool worker body (module-level picklable)."""
     from repro.telemetry.storage import TelemetryStore
     store = TelemetryStore(root)
     host_of = {s["file"]: s["host"] for s in store.manifest["shards"]}
     builder = IRBuilder(config)
+    skips: list[dict] = []
     for name in shard_files:
-        builder.update(store.read_shard(name, mmap=mmap),
-                       host_label=host_of[name])
-    return builder
+        frame = store.read_shard_or_skip(name, skips, mmap=mmap,
+                                         strict=strict, verify=verify)
+        if frame is not None:
+            builder.update(frame, host_label=host_of.get(name, ""))
+    return builder, skips
 
 
 def build_ir(store: "TelemetryStore", config: IRConfig | None = None,
-             workers: int = 1, mmap: bool = False) -> RunIR:
+             workers: int = 1, mmap: bool = False, strict: bool = True,
+             verify: bool = False, fault=None) -> RunIR:
     """One O(rows) pass over the store: group, classify, low-flag, RLE.
 
     ``workers > 1`` partitions by host label exactly like the sweep; the
     result is identical for any worker count (per-stream decomposition is
     independent, streams are reassembled in sorted order).
+
+    ``strict=False`` skips unreadable shards (recorded in
+    :attr:`RunIR.skipped`) instead of raising — note a skipped mid-stream
+    shard usually makes its streams irregular, so the build then raises
+    :class:`IRUnsupportedError` and callers replay through the row path,
+    exactly as they would on the clean shard subset.
     """
     from repro.telemetry.pipeline import map_shard_partitions
     config = config or IRConfig()
     t0 = time.perf_counter()
     with obs.span("ir.build", workers=workers):
-        builder = map_shard_partitions(
-            store, None, workers, _build_partition, (config, mmap),
-            merge=lambda a, b: a.merge(b), stage="ir_build")
+        builder, skips = map_shard_partitions(
+            store, None, workers, _build_partition,
+            (config, mmap, strict, verify),
+            merge=lambda a, b: a.merge(b), stage="ir_build", fault=fault)
         ir = builder.finalize(source_rows=store.total_rows)
+        ir.skipped = tuple(skips)
     if obs.enabled():
         obs.counter("repro_ir_builds_total", help="fresh IR builds")
         obs.observe("repro_ir_build_seconds", time.perf_counter() - t0,
@@ -620,7 +644,8 @@ def save_sidecar(ir: RunIR, store: "TelemetryStore") -> pathlib.Path:
     """
     streams = [ir.streams[k] for k in sorted(ir.streams)]
     meta = json.dumps({"config": ir.config.to_dict(),
-                       "source_rows": ir.source_rows})
+                       "source_rows": ir.source_rows,
+                       "skipped": list(ir.skipped)})
     arrays = {
         "meta": np.array(meta),
         "job": np.array([s.key[0] for s in streams], dtype=np.int64),
@@ -644,7 +669,10 @@ def save_sidecar(ir: RunIR, store: "TelemetryStore") -> pathlib.Path:
     }
     name = sidecar_name(ir.config)
     path = store.root / name
-    np.savez_compressed(path, **arrays)
+    # commit through storage.atomic_replace: a process killed mid-write
+    # leaves the previous sidecar (or none) fully intact, never a torn file
+    from repro.telemetry import storage as storage_mod
+    storage_mod._write_atomic_npz(path, arrays)
     entry = {"file": name, "source_rows": ir.source_rows,
              "config": ir.config.to_dict()}
     # atomic single-key merge: a concurrent appender's shard entries must
@@ -653,49 +681,79 @@ def save_sidecar(ir: RunIR, store: "TelemetryStore") -> pathlib.Path:
     return path
 
 
+#: everything a torn/bit-flipped sidecar or poisoned manifest subtree can
+#: raise through np.load/json/entry access — all mapped to "rebuild"
+_SIDECAR_ERRORS = (zipfile.BadZipFile, zlib.error, ValueError, KeyError,
+                   TypeError, OSError, EOFError)
+
+
 def load_sidecar(store: "TelemetryStore",
                  config: IRConfig) -> RunIR | None:
     """Load a sidecar if a *fresh* one exists: the manifest must key this
     config's hash and the persisted ``source_rows`` must still equal the
-    store's row count (an appended store silently invalidates)."""
-    entry = store.manifest.get(MANIFEST_KEY, {}).get(config.config_hash())
-    if entry is None:
+    store's row count (an appended store silently invalidates).
+
+    Tolerant by construction: a poisoned manifest subtree, a missing file,
+    or a corrupt/truncated archive (``BadZipFile``, CRC errors, bad JSON
+    meta) is counted as a ``sidecar -> rebuild`` fallback, the bad file is
+    deleted, and ``None`` is returned so the caller rebuilds from shards —
+    derived data is never allowed to take down the pipeline."""
+    raw = store.manifest.get(MANIFEST_KEY)
+    entry = raw.get(config.config_hash()) if isinstance(raw, dict) else None
+    if not isinstance(entry, dict):
         return None
-    if int(entry["source_rows"]) != store.total_rows:
-        obs.counter("repro_ir_cache_invalidations_total", level="sidecar",
-                    help="cached IRs rejected as stale")
-        return None
-    path = store.root / entry["file"]
-    if not path.exists():
-        return None
-    with np.load(path, allow_pickle=False) as z:
-        meta = json.loads(str(z["meta"]))
-        loaded_cfg = IRConfig.from_dict(meta["config"])
-        if loaded_cfg != config:
+    try:
+        if int(entry["source_rows"]) != store.total_rows:
             obs.counter("repro_ir_cache_invalidations_total", level="sidecar",
                         help="cached IRs rejected as stale")
             return None
-        run_off = np.concatenate([[0], np.cumsum(z["n_runs"])]).astype(np.int64)
-        row_off = np.concatenate([[0], np.cumsum(z["n_rows"])]).astype(np.int64)
-        streams: dict[tuple[int, int, int], StreamIR] = {}
-        for i in range(z["job"].shape[0]):
-            r0, r1 = run_off[i], run_off[i + 1]
-            p0, p1 = row_off[i], row_off[i + 1]
-            key = (int(z["job"][i]), int(z["host"][i]), int(z["dev"][i]))
-            streams[key] = StreamIR(
-                key=key,
-                host_label=str(z["host_label"][i]),
-                platform_id=int(z["platform"][i]),
-                ts_first=float(z["ts_first"][i]),
-                dt_s=config.dt_s,
-                state=z["state"][r0:r1].astype(np.int8),
-                low=z["low"][r0:r1].astype(bool),
-                length=z["length"][r0:r1].astype(np.int64),
-                power_sum=np.array(z["power_sum"][r0:r1]),
-                power=np.array(z["power"][p0:p1]),
-            )
+        path = store.root / str(entry["file"])
+    except _SIDECAR_ERRORS:
+        obs.fallback("sidecar", "rebuild", "bad_manifest_entry")
+        return None
+    if not path.exists():
+        return None
+    try:
+        with np.load(path, allow_pickle=False) as z:
+            meta = json.loads(str(z["meta"]))
+            src_rows = int(meta["source_rows"])
+            skipped = tuple(meta.get("skipped", ()))
+            loaded_cfg = IRConfig.from_dict(meta["config"])
+            if loaded_cfg != config:
+                obs.counter("repro_ir_cache_invalidations_total",
+                            level="sidecar",
+                            help="cached IRs rejected as stale")
+                return None
+            run_off = np.concatenate(
+                [[0], np.cumsum(z["n_runs"])]).astype(np.int64)
+            row_off = np.concatenate(
+                [[0], np.cumsum(z["n_rows"])]).astype(np.int64)
+            streams: dict[tuple[int, int, int], StreamIR] = {}
+            for i in range(z["job"].shape[0]):
+                r0, r1 = run_off[i], run_off[i + 1]
+                p0, p1 = row_off[i], row_off[i + 1]
+                key = (int(z["job"][i]), int(z["host"][i]), int(z["dev"][i]))
+                streams[key] = StreamIR(
+                    key=key,
+                    host_label=str(z["host_label"][i]),
+                    platform_id=int(z["platform"][i]),
+                    ts_first=float(z["ts_first"][i]),
+                    dt_s=config.dt_s,
+                    state=z["state"][r0:r1].astype(np.int8),
+                    low=z["low"][r0:r1].astype(bool),
+                    length=z["length"][r0:r1].astype(np.int64),
+                    power_sum=np.array(z["power_sum"][r0:r1]),
+                    power=np.array(z["power"][p0:p1]),
+                )
+    except _SIDECAR_ERRORS as e:
+        obs.fallback("sidecar", "rebuild", type(e).__name__)
+        try:
+            path.unlink(missing_ok=True)
+        except OSError:
+            pass
+        return None
     return RunIR(config=config, streams=streams,
-                 source_rows=int(meta["source_rows"]))
+                 source_rows=src_rows, skipped=skipped)
 
 
 #: in-process cache: (resolved store root, config hash) -> RunIR. An IR
@@ -711,14 +769,20 @@ _IR_UNSUPPORTED: dict[tuple[str, str], tuple[int, str]] = {}
 
 def get_ir(store: "TelemetryStore", config: IRConfig | None = None,
            workers: int = 1, mmap: bool = False,
-           persist: bool = True) -> RunIR:
+           persist: bool = True, strict: bool = True,
+           verify: bool = False, fault=None) -> RunIR:
     """The IR acquisition ladder: in-memory cache, then sidecar, then a
     fresh build (persisted back as a sidecar unless ``persist=False`` or
     the store root is not writable). Every level validates freshness
     against ``store.total_rows``; a store whose build failed
     (:class:`IRUnsupportedError`, e.g. irregular sampling) re-raises from
     a negative cache until the store changes, so callers that fall back to
-    the row path don't pay a doomed O(rows) build per call."""
+    the row path don't pay a doomed O(rows) build per call.
+
+    Cache hits additionally require that a cached IR built with skipped
+    shards (``strict=False`` on a dirty store) is never served to a
+    ``strict=True`` caller — degraded derived data must not silently
+    masquerade as complete."""
     config = config or IRConfig()
     cache_key = (str(pathlib.Path(store.root).resolve()),
                  config.config_hash())
@@ -729,7 +793,7 @@ def get_ir(store: "TelemetryStore", config: IRConfig | None = None,
         raise IRUnsupportedError(failed[1])
     ir = _IR_CACHE.get(cache_key)
     if ir is not None:
-        if ir.source_rows == store.total_rows:
+        if ir.source_rows == store.total_rows and not (ir.skipped and strict):
             obs.counter("repro_ir_cache_hits_total", level="memory",
                         help="IR acquisitions served from a cache level")
             _IR_CACHE.pop(cache_key)
@@ -738,6 +802,10 @@ def get_ir(store: "TelemetryStore", config: IRConfig | None = None,
         obs.counter("repro_ir_cache_invalidations_total", level="memory",
                     help="cached IRs rejected as stale")
     ir = load_sidecar(store, config)
+    if ir is not None and ir.skipped and strict:
+        obs.counter("repro_ir_cache_invalidations_total", level="sidecar",
+                    help="cached IRs rejected as stale")
+        ir = None
     if ir is not None:
         obs.counter("repro_ir_cache_hits_total", level="sidecar",
                     help="IR acquisitions served from a cache level")
@@ -745,7 +813,8 @@ def get_ir(store: "TelemetryStore", config: IRConfig | None = None,
         obs.counter("repro_ir_cache_misses_total",
                     help="IR acquisitions that required a fresh build")
         try:
-            ir = build_ir(store, config, workers=workers, mmap=mmap)
+            ir = build_ir(store, config, workers=workers, mmap=mmap,
+                          strict=strict, verify=verify, fault=fault)
         except IRUnsupportedError as e:
             _IR_UNSUPPORTED[cache_key] = (store.total_rows, str(e))
             raise

@@ -695,6 +695,7 @@ def replay_ir(
     dt_s: float = 1.0,
     hosts: Iterable[str] | None = None,
     workers: int = 1,
+    fault=None,
 ) -> list[ReplayResult]:
     """Replay a whole policy grid against a :class:`repro.whatif.ir.RunIR`.
 
@@ -742,25 +743,18 @@ def replay_ir(
             i = loads.index(min(loads))
             parts[i].extend(by_host[h])
             loads[i] += sum(s.n_rows for s in by_host[h])
-        from concurrent.futures import ProcessPoolExecutor
-
-        from repro.telemetry.pipeline import _pool_context
+        from repro.telemetry.pipeline import (_fault_plan, _partition_body,
+                                              run_supervised)
         obs.gauge("repro_pool_workers", float(n_parts), stage="replay_ir",
                   help="process-pool fan-out per stage (1 = in-process)")
-        token = obs.worker_token("replay_ir.partition")
-        pieces = []
-        with ProcessPoolExecutor(max_workers=n_parts,
-                                 mp_context=_pool_context()) as pool:
-            futures = [pool.submit(obs.call_with_obs, token,
-                                   _replay_ir_streams, part, policies,
-                                   platform_of, min_job_duration_s,
-                                   min_samples, dt_s)
-                       for part in parts]
-            pieces = []
-            for f in futures:
-                piece, payload = f.result()
-                obs.absorb(payload)
-                pieces.append(piece)
+        # same crash/hang supervisor as the shard pipelines; _partition_body
+        # gives the fault harness its "replay_ir" stage hook
+        pieces = run_supervised(
+            _partition_body,
+            [("replay_ir", _fault_plan(), _replay_ir_streams, part, policies,
+              platform_of, min_job_duration_s, min_samples, dt_s)
+             for part in parts],
+            stage="replay_ir", fault=fault)
         jobs = [[j for piece in pieces for j in piece[0][gi]]
                 for gi in range(len(policies))]
         n_rows = sum(piece[1] for piece in pieces)

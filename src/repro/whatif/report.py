@@ -23,6 +23,7 @@ def frontier_to_dict(frontier: Frontier) -> dict:
         "n_rows": frontier.n_rows,
         "n_jobs": frontier.n_jobs,
         "n_runs": frontier.n_runs,
+        "coverage": frontier.coverage,
         "trace": [dict(t) for t in frontier.trace],
         "outcomes": [dataclasses.asdict(o) for o in frontier.outcomes],
     }
@@ -38,6 +39,7 @@ def frontier_from_dict(payload: dict) -> Frontier:
     return Frontier(outcomes=tuple(outcomes),
                     n_rows=payload["n_rows"], n_jobs=payload["n_jobs"],
                     n_runs=payload.get("n_runs", 0),
+                    coverage=payload.get("coverage", 1.0),
                     trace=tuple(dict(t) for t in payload.get("trace", ())))
 
 

@@ -482,6 +482,9 @@ def search_frontier(
     backend: str = "numpy",
     dist=None,
     init_frontier=None,
+    strict: bool = True,
+    verify: bool = False,
+    fault=None,
     **replayer_kwargs,
 ) -> SearchResult:
     """Budgeted closed-loop knob search over a telemetry store.
@@ -523,6 +526,11 @@ def search_frontier(
     Returns a :class:`SearchResult`; its ``frontier`` holds every evaluated
     config with the Pareto subset flagged, ``best`` answers the operator's
     budget question directly.
+
+    ``strict`` / ``verify`` / ``fault`` are :func:`repro.whatif.sweep
+    .evaluate`'s dirty-telemetry knobs: ``strict=False`` skips unreadable
+    shards (the returned frontier's ``coverage`` reports the replayed
+    fraction), ``fault`` tunes the pool crash/hang supervisor.
     """
     if max_evals < 1:
         raise ValueError(f"max_evals must be >= 1, got {max_evals}")
@@ -532,12 +540,13 @@ def search_frontier(
         raise ValueError(f"duplicate family names: {names}")
     if compact is None:
         compact = batched
+    hosts = list(hosts) if hosts is not None else None
     with obs.span("whatif.search", backend=backend, max_evals=max_evals):
         return _search_loop(
             store, budget, families, max_evals, max_rounds, knee_tol,
             knee_patience, anchors_per_family, include_noop, workers, hosts,
             mmap, batched, compact, ir, backend, dist, init_frontier,
-            replayer_kwargs)
+            replayer_kwargs, strict=strict, verify=verify, fault=fault)
 
 
 def _search_loop(
@@ -560,6 +569,9 @@ def _search_loop(
     dist,
     init_frontier,
     replayer_kwargs: dict,
+    strict: bool = True,
+    verify: bool = False,
+    fault=None,
 ) -> SearchResult:
     """The :func:`search_frontier` loop body (arguments already resolved).
 
@@ -573,6 +585,7 @@ def _search_loop(
     n_rows = 0
     n_runs = 0
     round_no = 0
+    last_skips: list[dict] = []
     # deterministic convergence record (one entry per eval, all rounds) —
     # replay results only, no wall-clock, so frontiers stay bit-identical
     # with obs on or off
@@ -589,17 +602,20 @@ def _search_loop(
         return cands
 
     def evaluate_round(cands) -> int:
-        nonlocal n_rows, n_runs
+        nonlocal n_rows, n_runs, last_skips
         if not cands:
             return 0
         pols = [pol for _, (_, _, pol) in cands]
         with obs.span("search.round", round=round_no, new=len(cands)):
-            outs, rows, runs = _evaluate_outcomes(
+            outs, rows, runs, skips = _evaluate_outcomes(
                 pols, store, workers=workers, hosts=hosts, mmap=mmap,
                 batched=batched, replayer_kwargs=replayer_kwargs,
-                compact=compact, ir=ir, backend=backend, dist=dist)
+                compact=compact, ir=ir, backend=backend, dist=dist,
+                strict=strict, verify=verify, fault=fault)
         n_rows = rows
         n_runs = max(n_runs, runs)
+        if skips:
+            last_skips = skips
         for (key, (fam_name, pt, _)), out in zip(cands, outs):
             outcomes[key] = out
             point_of[key] = (fam_name, pt)
@@ -750,8 +766,12 @@ def _search_loop(
         if new < len(candidates):      # budget truncated the round
             break
 
+    from repro.whatif.sweep import _coverage_of
+    coverage = _coverage_of(store, hosts, last_skips)
+    obs.gauge("repro_coverage_fraction", coverage, stage="search",
+              help="rows analyzed / rows on disk for the last run")
     frontier = assemble_frontier([outcomes[k] for k in order], n_rows, n_runs,
-                                 trace=trace)
+                                 trace=trace, coverage=coverage)
     final_outcomes = list(frontier.outcomes)
     knee = find_knee(final_outcomes)
     if budget is None:

@@ -153,6 +153,9 @@ class Frontier:
     n_jobs: int
     n_runs: int = 0
     trace: tuple[dict, ...] = ()
+    #: rows replayed / rows on disk — 1.0 unless shards were skipped under
+    #: ``strict=False`` (see README "Robustness & dirty telemetry")
+    coverage: float = 1.0
 
     @property
     def compaction_ratio(self) -> float:
@@ -180,7 +183,8 @@ def pareto_flags(saved: Sequence[float], penalty: Sequence[float]) -> list[bool]
 
 def assemble_frontier(outcomes: Sequence[PolicyOutcome],
                       n_rows: int = 0, n_runs: int = 0,
-                      trace: Sequence[dict] = ()) -> Frontier:
+                      trace: Sequence[dict] = (),
+                      coverage: float = 1.0) -> Frontier:
     """Build a :class:`Frontier` from already-evaluated outcomes, recomputing
     the Pareto flags over exactly this set (any flags carried in are
     discarded). The closed-loop search accumulates outcomes across
@@ -192,7 +196,7 @@ def assemble_frontier(outcomes: Sequence[PolicyOutcome],
                     for o, f in zip(outcomes, flags))
     n_jobs = max((o.n_jobs for o in flagged), default=0)
     return Frontier(outcomes=flagged, n_rows=n_rows, n_jobs=n_jobs,
-                    n_runs=n_runs, trace=tuple(trace))
+                    n_runs=n_runs, trace=tuple(trace), coverage=coverage)
 
 
 def _outcome(result: ReplayResult) -> PolicyOutcome:
@@ -232,15 +236,21 @@ def _replay_partition(
     policies: Sequence[Policy],
     mmap: bool,
     replayer_kwargs: dict,
-) -> list[PolicyReplayer]:
+    strict: bool = True,
+    verify: bool = False,
+) -> tuple[list[PolicyReplayer], list[dict]]:
     """Stream one shard subset through every policy's replayer (worker body;
     must stay module-level picklable). The reference oracle path."""
     from repro.telemetry.storage import TelemetryStore
     store = TelemetryStore(root)
     replayers = [PolicyReplayer(p, **replayer_kwargs) for p in policies]
+    skips: list[dict] = []
     for name in shard_files:
-        replay_chunk(replayers, store.read_shard(name, mmap=mmap))
-    return replayers
+        frame = store.read_shard_or_skip(name, skips, mmap=mmap,
+                                         strict=strict, verify=verify)
+        if frame is not None:
+            replay_chunk(replayers, frame)
+    return replayers, skips
 
 
 def _replay_partition_batched(
@@ -249,15 +259,58 @@ def _replay_partition_batched(
     policies: Sequence[Policy],
     mmap: bool,
     replayer_kwargs: dict,
-) -> BatchedPolicyReplayer:
+    strict: bool = True,
+    verify: bool = False,
+) -> tuple[BatchedPolicyReplayer, list[dict]]:
     """Stream one shard subset through the config-axis batched replayer
     (worker body; must stay module-level picklable)."""
     from repro.telemetry.storage import TelemetryStore
     store = TelemetryStore(root)
     replayer = BatchedPolicyReplayer(policies, **replayer_kwargs)
+    skips: list[dict] = []
     for name in shard_files:
-        replayer.update(store.read_shard(name, mmap=mmap))
-    return replayer
+        frame = store.read_shard_or_skip(name, skips, mmap=mmap,
+                                         strict=strict, verify=verify)
+        if frame is not None:
+            replayer.update(frame)
+    return replayer, skips
+
+
+def _ir_skips(ir_obj, hosts: Iterable[str] | None) -> list[dict]:
+    """The IR's recorded shard skips, filtered to the replayed host set."""
+    if not ir_obj.skipped:
+        return []
+    host_set = set(hosts) if hosts is not None else None
+    return [dict(s) for s in ir_obj.skipped
+            if host_set is None or s.get("host") in host_set]
+
+
+def _merge_skips(*skip_lists: Sequence[dict]) -> list[dict]:
+    """Concatenate skip-record lists, deduplicating by shard file (the IR
+    and a row-fallback recursion may both report the same bad shard)."""
+    seen: set = set()
+    out: list[dict] = []
+    for lst in skip_lists:
+        for s in lst:
+            key = s.get("file")
+            if key in seen:
+                continue
+            seen.add(key)
+            out.append(s)
+    return out
+
+
+def _coverage_of(store: "TelemetryStore", hosts: Iterable[str] | None,
+                 skips: Sequence[dict]) -> float:
+    """Rows replayed / rows on disk for the host selection (1.0 when no
+    shards were skipped or the store is empty)."""
+    if not skips:
+        return 1.0
+    expected = store.rows_on_disk(hosts)
+    if expected <= 0:
+        return 1.0
+    return max(0.0, 1.0 - sum(float(s.get("rows", 0)) for s in skips)
+               / expected)
 
 
 def _evaluate(
@@ -270,11 +323,14 @@ def _evaluate(
     replayer_kwargs: dict | None = None,
     compact: bool | None = None,
     ir=None,
-) -> tuple[list[ReplayResult], int, int]:
+    strict: bool = True,
+    verify: bool = False,
+    fault=None,
+) -> tuple[list[ReplayResult], int, int, list[dict]]:
     """Kernel body shared by :func:`evaluate` / :func:`run_sweep`: one
     :class:`ReplayResult` per config in input order, plus the replayed
-    job-attributed row count and (when the compact path ran) the IR's run
-    count.
+    job-attributed row count, (when the compact path ran) the IR's run
+    count, and the shard skip records of a ``strict=False`` replay.
 
     ``compact=None`` resolves to ``batched`` — the row-exact reference
     paths (``batched=False`` / ``compact=False``) stay byte-for-byte what
@@ -282,7 +338,8 @@ def _evaluate(
     against the run axis (:func:`repro.whatif.replay.replay_ir`); the rest
     — custom policies, mismatched thresholds, unsupported composites —
     stream the store through the row path, and an irregularly-sampled
-    store falls back entirely.
+    store falls back entirely (a ``compact -> row`` fallback in the
+    degradation ladder).
     """
     configs = list(configs)
     replayer_kwargs = replayer_kwargs or {}
@@ -305,9 +362,11 @@ def _evaluate(
             if any(ir_mod.ir_supported(p, cfg) for p in configs):
                 try:
                     ir_obj = ir_mod.get_ir(store, cfg, workers=workers,
-                                           mmap=mmap)
+                                           mmap=mmap, strict=strict,
+                                           verify=verify, fault=fault)
                 except ir_mod.IRUnsupportedError:
                     ir_obj = None       # e.g. irregular sampling: use rows
+                    obs.fallback("compact", "row", "ir_unsupported")
         if ir_obj is not None:
             sup = [i for i, p in enumerate(configs)
                    if ir_mod.ir_supported(p, ir_obj.config)]
@@ -320,7 +379,8 @@ def _evaluate(
                             help="policy configs replayed, by execution path")
                 sup_results = replay_ir(
                     ir_obj, [configs[i] for i in sup], hosts=hosts,
-                    workers=workers, **ir_kwargs)
+                    workers=workers, fault=fault, **ir_kwargs)
+                skips = _ir_skips(ir_obj, hosts)
                 results: list[ReplayResult | None] = [None] * len(configs)
                 for i, res in zip(sup, sup_results):
                     results[i] = res
@@ -330,27 +390,29 @@ def _evaluate(
                                 float(len(rest)),
                                 help="configs the IR could not cover "
                                      "(row-path fallback)")
-                    rest_results, _, _ = _evaluate(
+                    rest_results, _, _, rest_skips = _evaluate(
                         [configs[i] for i in rest], store, workers=workers,
                         hosts=hosts, mmap=mmap, batched=batched,
-                        replayer_kwargs=replayer_kwargs, compact=False)
+                        replayer_kwargs=replayer_kwargs, compact=False,
+                        strict=strict, verify=verify, fault=fault)
                     for i, res in zip(rest, rest_results):
                         results[i] = res
+                    skips = _merge_skips(skips, rest_skips)
                 selected = ir_obj.select(hosts)
                 n_rows = sum(s.n_rows for s in selected)
                 n_runs = sum(s.n_runs for s in selected)
-                return results, n_rows, n_runs
+                return results, n_rows, n_runs, skips
 
     if batched:
         obs.counter("repro_replay_configs_total", float(len(configs)),
                     path="row_batched",
                     help="policy configs replayed, by execution path")
-        replayer = map_shard_partitions(
+        replayer, skips = map_shard_partitions(
             store, hosts, workers, _replay_partition_batched,
-            (configs, mmap, replayer_kwargs), merge=lambda a, b: a.merge(b),
-            stage="sweep")
+            (configs, mmap, replayer_kwargs, strict, verify),
+            merge=lambda a, b: a.merge(b), stage="sweep", fault=fault)
         n_rows = replayer.n_rows          # finalize() resets the counter
-        return replayer.finalize(), n_rows, 0
+        return replayer.finalize(), n_rows, 0, skips
 
     def merge_lists(a: list[PolicyReplayer], b: list[PolicyReplayer]):
         for dst, src in zip(a, b):
@@ -360,11 +422,12 @@ def _evaluate(
     obs.counter("repro_replay_configs_total", float(len(configs)),
                 path="row_serial",
                 help="policy configs replayed, by execution path")
-    replayers = map_shard_partitions(
+    replayers, skips = map_shard_partitions(
         store, hosts, workers, _replay_partition,
-        (configs, mmap, replayer_kwargs), merge=merge_lists, stage="sweep")
+        (configs, mmap, replayer_kwargs, strict, verify),
+        merge=merge_lists, stage="sweep", fault=fault)
     n_rows = replayers[0].n_rows if replayers else 0
-    return [r.finalize() for r in replayers], n_rows, 0
+    return [r.finalize() for r in replayers], n_rows, 0, skips
 
 
 def resolve_backend(backend: str) -> str:
@@ -399,7 +462,10 @@ def _evaluate_outcomes(
     ir=None,
     backend: str = "numpy",
     dist=None,
-) -> tuple[list[PolicyOutcome], int, int]:
+    strict: bool = True,
+    verify: bool = False,
+    fault=None,
+) -> tuple[list[PolicyOutcome], int, int, list[dict]]:
     """Observability wrapper around :func:`_evaluate_outcomes_impl`: every
     evaluate call runs under a ``whatif.evaluate`` span, with per-family
     config counts and a throughput gauge recorded when :mod:`repro.obs` is
@@ -411,7 +477,8 @@ def _evaluate_outcomes(
         out = _evaluate_outcomes_impl(
             configs, store, workers=workers, hosts=hosts, mmap=mmap,
             batched=batched, replayer_kwargs=replayer_kwargs,
-            compact=compact, ir=ir, backend=backend, dist=dist)
+            compact=compact, ir=ir, backend=backend, dist=dist,
+            strict=strict, verify=verify, fault=fault)
     if obs.enabled():
         dt = max(time.perf_counter() - t0, 1e-12)
         obs.observe("repro_replay_seconds", dt,
@@ -437,7 +504,10 @@ def _evaluate_outcomes_impl(
     ir=None,
     backend: str = "numpy",
     dist=None,
-) -> tuple[list[PolicyOutcome], int, int]:
+    strict: bool = True,
+    verify: bool = False,
+    fault=None,
+) -> tuple[list[PolicyOutcome], int, int, list[dict]]:
     """:func:`_evaluate` lifted to outcomes, with backend dispatch.
 
     ``backend="jax"`` routes every IR-capable config through
@@ -449,6 +519,13 @@ def _evaluate_outcomes_impl(
     entirely. The NumPy path remains the oracle: time/count metrics are
     bit-identical across backends, energies/penalties <= 1e-9 relative
     (tests/test_whatif_backend.py).
+
+    Degradation ladder: a jax-backend failure (missing toolchain at call
+    time, device loss, a kernel error) is not fatal — it is counted as a
+    ``jax -> numpy`` fallback and the same configs replay through the
+    NumPy compact kernel, which itself degrades ``compact -> row`` on an
+    IR-unsupported store. The NumPy oracle contract makes every rung
+    result-equivalent, so degradations change latency, never answers.
     """
     configs = list(configs)
     replayer_kwargs = replayer_kwargs or {}
@@ -468,46 +545,60 @@ def _evaluate_outcomes_impl(
             if any(ir_mod.ir_supported(p, cfg) for p in configs):
                 try:
                     ir_obj = ir_mod.get_ir(store, cfg, workers=workers,
-                                           mmap=mmap)
+                                           mmap=mmap, strict=strict,
+                                           verify=verify, fault=fault)
                 except ir_mod.IRUnsupportedError:
                     ir_obj = None       # e.g. irregular sampling: use rows
+                    obs.fallback("compact", "row", "ir_unsupported")
         if ir_obj is not None:
             sup = [i for i, p in enumerate(configs)
                    if ir_mod.ir_supported(p, ir_obj.config)]
             if sup:
-                from repro.whatif import backend as jax_backend
                 ir_kwargs = {k: v for k, v in replayer_kwargs.items()
                              if k in ("platform_of", "min_job_duration_s",
                                       "min_interval_s", "classifier", "dt_s")}
-                obs.counter("repro_replay_configs_total", float(len(sup)),
-                            path="jax",
-                            help="policy configs replayed, by execution path")
-                sup_out, n_rows, n_runs = jax_backend.replay_ir_outcomes(
-                    ir_obj, [configs[i] for i in sup], hosts=hosts,
-                    dist=dist, **ir_kwargs)
-                outcomes: list[PolicyOutcome | None] = [None] * len(configs)
-                for i, out in zip(sup, sup_out):
-                    outcomes[i] = out
-                rest = [i for i in range(len(configs))
-                        if outcomes[i] is None]
-                if rest:
-                    obs.counter("repro_replay_row_fallback_configs_total",
-                                float(len(rest)),
-                                help="configs the IR could not cover "
-                                     "(row-path fallback)")
-                    rest_results, _, _ = _evaluate(
-                        [configs[i] for i in rest], store, workers=workers,
-                        hosts=hosts, mmap=mmap, batched=batched,
-                        replayer_kwargs=replayer_kwargs, compact=False)
-                    for i, res in zip(rest, rest_results):
-                        outcomes[i] = _outcome(res)
-                return outcomes, n_rows, n_runs
-        # nothing for the accelerator to do: run the NumPy kernel
-    results, n_rows, n_runs = _evaluate(
+                try:
+                    from repro.whatif import backend as jax_backend
+                    sup_out, n_rows, n_runs = jax_backend.replay_ir_outcomes(
+                        ir_obj, [configs[i] for i in sup], hosts=hosts,
+                        dist=dist, **ir_kwargs)
+                except Exception as e:
+                    obs.fallback("jax", "numpy", type(e).__name__)
+                    sup_out = None
+                if sup_out is not None:
+                    obs.counter("repro_replay_configs_total",
+                                float(len(sup)), path="jax",
+                                help="policy configs replayed, by execution "
+                                     "path")
+                    skips = _ir_skips(ir_obj, hosts)
+                    outcomes: list[PolicyOutcome | None] = \
+                        [None] * len(configs)
+                    for i, out in zip(sup, sup_out):
+                        outcomes[i] = out
+                    rest = [i for i in range(len(configs))
+                            if outcomes[i] is None]
+                    if rest:
+                        obs.counter(
+                            "repro_replay_row_fallback_configs_total",
+                            float(len(rest)),
+                            help="configs the IR could not cover "
+                                 "(row-path fallback)")
+                        rest_results, _, _, rest_skips = _evaluate(
+                            [configs[i] for i in rest], store,
+                            workers=workers, hosts=hosts, mmap=mmap,
+                            batched=batched,
+                            replayer_kwargs=replayer_kwargs, compact=False,
+                            strict=strict, verify=verify, fault=fault)
+                        for i, res in zip(rest, rest_results):
+                            outcomes[i] = _outcome(res)
+                        skips = _merge_skips(skips, rest_skips)
+                    return outcomes, n_rows, n_runs, skips
+        # nothing for the accelerator to do (or it failed): NumPy kernel
+    results, n_rows, n_runs, skips = _evaluate(
         configs, store, workers=workers, hosts=hosts, mmap=mmap,
         batched=batched, replayer_kwargs=replayer_kwargs, compact=compact,
-        ir=ir)
-    return [_outcome(r) for r in results], n_rows, n_runs
+        ir=ir, strict=strict, verify=verify, fault=fault)
+    return [_outcome(r) for r in results], n_rows, n_runs, skips
 
 
 def evaluate(
@@ -521,6 +612,9 @@ def evaluate(
     ir=None,
     backend: str = "numpy",
     dist=None,
+    strict: bool = True,
+    verify: bool = False,
+    fault=None,
     **replayer_kwargs,
 ) -> list[PolicyOutcome]:
     """Evaluate an arbitrary set of policy configs over a store.
@@ -568,13 +662,20 @@ def evaluate(
             sharding the jax backend's config axis over a device mesh
             (see :func:`repro.whatif.backend.config_mesh`); ignored by
             the NumPy backend. Results are mesh-shape-independent.
+        strict: ``False`` skips unreadable shards instead of raising —
+            results are bit-identical to replaying the clean shard subset
+            (README "Robustness & dirty telemetry").
+        verify: checksum every shard read against the manifest.
+        fault: a :class:`repro.telemetry.pipeline.FaultTolerance` policy
+            for the process-pool crash/hang supervisor.
         **replayer_kwargs: forwarded to the replayer
             (``min_job_duration_s``, ``platform_of``, ``classifier``, ...).
     """
-    outcomes, _, _ = _evaluate_outcomes(
+    outcomes, _, _, _ = _evaluate_outcomes(
         configs, store, workers=workers, hosts=hosts, mmap=mmap,
         batched=batched, replayer_kwargs=replayer_kwargs, compact=compact,
-        ir=ir, backend=backend, dist=dist)
+        ir=ir, backend=backend, dist=dist, strict=strict, verify=verify,
+        fault=fault)
     return outcomes
 
 
@@ -589,6 +690,9 @@ def run_sweep(
     ir=None,
     backend: str = "numpy",
     dist=None,
+    strict: bool = True,
+    verify: bool = False,
+    fault=None,
     **replayer_kwargs,
 ) -> Frontier:
     """Replay a fixed policy grid over a store and report the trade-off
@@ -600,14 +704,21 @@ def run_sweep(
     :func:`evaluate`'s; ``run_sweep(compact=False)`` is the retained
     row-exact verification path for the default compact (run-IR) sweep,
     and ``backend="jax"`` runs IR-capable configs on the jit'd run-level
-    evaluators (:mod:`repro.whatif.backend`).
+    evaluators (:mod:`repro.whatif.backend`). With ``strict=False`` the
+    returned frontier's ``coverage`` reports the fraction of on-disk rows
+    actually replayed (< 1.0 when shards were skipped).
     """
+    hosts = list(hosts) if hosts is not None else None
     policies = list(default_policy_grid() if policies is None else policies)
-    outcomes, n_rows, n_runs = _evaluate_outcomes(
+    outcomes, n_rows, n_runs, skips = _evaluate_outcomes(
         policies, store, workers=workers, hosts=hosts, mmap=mmap,
         batched=batched, replayer_kwargs=replayer_kwargs, compact=compact,
-        ir=ir, backend=backend, dist=dist)
-    return assemble_frontier(outcomes, n_rows, n_runs)
+        ir=ir, backend=backend, dist=dist, strict=strict, verify=verify,
+        fault=fault)
+    coverage = _coverage_of(store, hosts, skips)
+    obs.gauge("repro_coverage_fraction", coverage, stage="sweep",
+              help="rows analyzed / rows on disk for the last run")
+    return assemble_frontier(outcomes, n_rows, n_runs, coverage=coverage)
 
 
 def sweep_frame(frame, policies: Sequence[Policy] | None = None,

@@ -7,7 +7,10 @@ CI runs the quick bench with ``--obs`` and lints the resulting exposition::
 
 ``--require name=value`` additionally asserts that a sample with that exact
 name (no labels) or any labelled variant of it equals ``value`` — used to pin
-the device-count gauge in the forced-4-device CI lane. Exit code 0 iff the
+the device-count gauge in the forced-4-device CI lane. ``--require name``
+(no ``=``) is presence-only: some sample of that name must exist, any value —
+used for the degradation-ladder counters, whose values are zero on a clean
+run but whose families must always be registered. Exit code 0 iff the
 exposition parses and every requirement holds.
 """
 from __future__ import annotations
@@ -32,6 +35,8 @@ def check_file(path: str, requirements: list[str]) -> list[str]:
         values = [float(m.group(1)) for m in pat.finditer(text)]
         if not values:
             problems.append(f"required metric {name!r} not found")
+        elif not want:
+            pass  # presence-only requirement: any value satisfies it
         elif not any(v == float(want) for v in values):
             problems.append(
                 f"required {name}={want}, exposition has {values}")

@@ -1,0 +1,586 @@
+"""Dirty-telemetry robustness suite: hygiene, quarantine, fault injection.
+
+Every test here runs the *production* code paths under deterministically
+injected faults (:mod:`repro.testing.faults`): truncated and bit-flipped
+shards, poisoned manifests, corrupt IR sidecars, processes killed
+mid-write, and pool workers that crash or hang. The two load-bearing
+contracts:
+
+* **graceful degradation** — ``analyze_store`` / ``run_sweep`` /
+  ``search_frontier`` complete without raising under ``strict=False`` with
+  ~10% of shards corrupt and a crashing pool worker, quarantining exactly
+  the injected shards and reporting ``coverage < 1``;
+* **bit-identical degradation** — the surviving results equal the results
+  of analyzing the clean subset directly, and a zero-fault run is
+  bit-identical to the pre-hygiene pipeline.
+
+Pool crash/hang tests fork real process pools and are gated behind
+``REPRO_CHAOS=1`` (the CI chaos lane) to keep the default tier-1 run lean.
+"""
+import dataclasses
+import os
+import pathlib
+import shutil
+import tempfile
+
+import numpy as np
+import pytest
+from _hyp import given, settings, st
+
+import repro.obs as obs
+from repro.cluster import generate_cluster
+from repro.telemetry import (FaultTolerance, HygieneContract, ShardReadError,
+                             TelemetryStore, analyze_store, check_frame,
+                             dcgm_to_frame, ingest_dcgm, ingest_frame,
+                             scrub_store)
+from repro.telemetry.hygiene import DEFAULT_CONTRACT, check_columns
+from repro.telemetry.records import FIELDS, TelemetryFrame
+from repro.testing import faults
+from repro.whatif import (DownscalePolicy, IRConfig, NoOpPolicy,
+                          frontier_from_dict, frontier_to_dict, get_ir,
+                          run_sweep, search_frontier)
+from repro.whatif import ir as ir_mod
+
+chaos = pytest.mark.skipif(not os.environ.get("REPRO_CHAOS"),
+                           reason="pool fault-injection lane; "
+                                  "set REPRO_CHAOS=1 to run")
+
+_GRID = [NoOpPolicy(), DownscalePolicy()]
+
+
+def make_store(d, n_devices=4, horizon_s=900, seed=5, shard_s=300):
+    store = TelemetryStore(d)
+    generate_cluster(n_devices=n_devices, horizon_s=horizon_s, seed=seed,
+                     store=store, shard_s=shard_s)
+    return store
+
+
+def clean_frame(n=60, power=120.0, job=3, t0=0.0):
+    return TelemetryFrame({
+        "timestamp": t0 + np.arange(n, dtype=np.float64),
+        "hostname": np.zeros(n, np.int32),
+        "device_id": np.zeros(n, np.int32),
+        "platform": np.zeros(n, np.int32),
+        "power": np.full(n, power),
+        "sm": np.full(n, 50.0),
+        "job_id": np.full(n, job, np.int64),
+        "program_resident": np.ones(n, np.int8),
+    })
+
+
+def analysis_key(a):
+    """Everything analysis produces except the robustness accounting —
+    the payload that must be bit-identical across degradation paths."""
+    return (a.fleet, a.unattributed_energy_j, a.n_intervals,
+            [(j.job_id, j.duration_s, j.breakdown, tuple(j.intervals))
+             for j in a.jobs])
+
+
+def shard_path(store, entry):
+    return store.root / entry["file"]
+
+
+def clear_ir_caches():
+    ir_mod._IR_CACHE.clear()
+    ir_mod._IR_UNSUPPORTED.clear()
+
+
+# --------------------------------------------------------------------------- #
+# hygiene contract: check_frame / check_columns
+# --------------------------------------------------------------------------- #
+def test_clean_frame_passes_unchanged():
+    f = clean_frame()
+    out, v = check_frame(f)
+    assert v.status == "ok" and not v.reasons and not v.repairs
+    assert out is f                       # zero-fault path: same object
+
+
+def test_repairs_are_subtractive_and_deterministic():
+    f = clean_frame(n=40)
+    cols = {k: v.copy() for k, v in f.columns.items()}
+    cols["timestamp"][7] = np.nan         # clock step
+    cols["power"][3] = -5.0               # glitched rail
+    cols["power"][4] = 5000.0             # physically impossible
+    dirty = TelemetryFrame(cols)
+    out, v = check_frame(dirty)
+    assert v.status == "repaired"
+    assert v.repairs == {"nonfinite_timestamp": 1, "bad_power": 2}
+    assert (v.rows_in, v.rows_out) == (40, 37)
+    # deterministic: same bytes in, same verdict and same repaired rows
+    out2, v2 = check_frame(TelemetryFrame({k: c.copy()
+                                           for k, c in cols.items()}))
+    assert v2 == v
+    for k in out.columns:   # NaN-filled optional columns need equal_nan
+        assert np.array_equal(out[k], out2[k],
+                              equal_nan=out[k].dtype.kind == "f")
+    # idempotent: a repaired frame is clean
+    out3, v3 = check_frame(out)
+    assert v3.status == "ok" and out3 is out
+
+
+def test_duplicate_timestamps_keep_first():
+    f = clean_frame(n=20)
+    cols = {k: np.concatenate([v, v[:5]]) for k, v in f.columns.items()}
+    cols["power"] = cols["power"].copy()
+    cols["power"][20:] = 999.0            # replayed rows differ: must lose
+    out, v = check_frame(TelemetryFrame(cols))
+    assert v.repairs == {"duplicate_timestamp": 5}
+    assert len(out) == 20
+    assert np.array_equal(out["power"], f["power"])   # first-seen survives
+    assert np.array_equal(out["timestamp"], f["timestamp"])  # input order
+
+
+def test_garbage_shard_quarantined_not_repaired():
+    f = clean_frame(n=30)
+    cols = {k: v.copy() for k, v in f.columns.items()}
+    cols["power"][:20] = np.nan           # 66% drop > max_repair_fraction
+    out, v = check_frame(TelemetryFrame(cols))
+    assert out is None and v.status == "quarantined"
+    assert "excessive_repair" in v.reasons
+
+
+def test_never_recorded_signal_quarantines():
+    f = clean_frame(n=10)
+    cols = dict(f.columns)
+    cols["power"] = np.full(10, np.nan)
+    out, v = check_frame(TelemetryFrame(cols))
+    assert out is None and v.status == "quarantined"
+    assert "missing_required:power" in v.reasons
+
+
+def test_gaps_reported_never_filled():
+    f = clean_frame(n=30)
+    cols = {k: v.copy() for k, v in f.columns.items()}
+    cols["timestamp"][15:] += 10_000.0    # one hole > max_gap_s
+    out, v = check_frame(TelemetryFrame(cols))
+    assert v.status == "ok" and len(out) == 30      # rows untouched
+    assert v.reasons == ("gap_segments:1",)
+
+
+def test_check_columns_contract():
+    good = {f: np.zeros(3) for f in DEFAULT_CONTRACT.required_fields}
+    assert check_columns(good).ok
+    missing = dict(good)
+    del missing["power"]
+    v = check_columns(missing)
+    assert v.status == "quarantined" and "missing_required:power" in v.reasons
+    ragged = dict(good)
+    ragged["power"] = np.zeros(2)
+    assert "ragged_columns" in check_columns(ragged).reasons
+    bad = dict(good)
+    bad["power"] = np.array(["x", "y", "z"])
+    assert any(r == "bad_dtype:power" for r in check_columns(bad).reasons)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_hygiene_idempotent_on_random_dirt(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(5, 120))
+    f = clean_frame(n=n)
+    cols = {k: v.copy() for k, v in f.columns.items()}
+    # sprinkle every dirt class the contract repairs
+    for col, bad in (("timestamp", np.nan), ("power", -1.0), ("power", 1e6)):
+        idx = rng.integers(0, n, size=rng.integers(0, max(1, n // 8)))
+        cols[col][idx] = bad
+    if rng.random() < 0.5:                # duplicated tail
+        k = int(rng.integers(1, max(2, n // 4)))
+        cols = {key: np.concatenate([c, c[:k]]) for key, c in cols.items()}
+    out, v = check_frame(TelemetryFrame(cols))
+    if v.status == "quarantined":
+        assert out is None
+        return
+    assert v.rows_out == len(out) <= v.rows_in
+    out2, v2 = check_frame(out)           # fixed point after one pass
+    assert v2.status == "ok" and out2 is out
+
+
+# --------------------------------------------------------------------------- #
+# DCGM adapter
+# --------------------------------------------------------------------------- #
+def test_dcgm_adapter_scales_pads_and_synthesizes_time():
+    frame = dcgm_to_frame({
+        "DCGM_FI_DEV_POWER_USAGE": [100.0, 110.0, 120.0],
+        "DCGM_FI_PROF_SM_ACTIVE": [0.5, 0.6],          # one missed sample
+        "DCGM_FI_PROF_PCIE_TX_BYTES": [2e9, 2e9, 2e9],
+        "DCGM_FI_SOME_FUTURE_FIELD": [1, 2, 3],        # unknown: ignored
+    }, device_id=3, job_id=9)
+    assert len(frame) == 3
+    assert np.array_equal(frame["timestamp"], [0.0, 1.0, 2.0])
+    assert np.array_equal(frame["power"], [100.0, 110.0, 120.0])
+    assert frame["sm"][0] == 50.0 and np.isnan(frame["sm"][2])  # % + NaN pad
+    assert np.allclose(frame["pcie_tx"], 2.0)                   # GB/s
+    assert frame["device_id"][0] == 3 and frame["job_id"][0] == 9
+    assert set(frame.columns) == set(FIELDS)
+
+
+def test_ingest_dcgm_lands_a_hygiene_clean_shard():
+    with tempfile.TemporaryDirectory() as d:
+        store = TelemetryStore(d)
+        v = ingest_dcgm(store, {
+            "DCGM_FI_DEV_POWER_USAGE": [100.0] * 30 + [-4.0],
+            "DCGM_FI_PROF_SM_ACTIVE": [0.4] * 31,
+        }, host="h0")
+        assert v.status == "repaired" and v.repairs == {"bad_power": 1}
+        assert store.total_rows == 30
+        reread = TelemetryStore(d)
+        _, rv = check_frame(reread.read_shard(
+            reread.manifest["shards"][0]["file"]))
+        assert rv.status == "ok"
+
+
+def test_ingest_frame_refuses_garbage():
+    with tempfile.TemporaryDirectory() as d:
+        store = TelemetryStore(d)
+        f = clean_frame(n=10)
+        cols = dict(f.columns)
+        cols["power"] = np.full(10, np.nan)
+        v = ingest_frame(store, TelemetryFrame(cols))
+        assert v.status == "quarantined"
+        assert store.total_rows == 0 and store.manifest["shards"] == []
+
+
+# --------------------------------------------------------------------------- #
+# scrub_store: whole-store sweep
+# --------------------------------------------------------------------------- #
+def test_scrub_store_repairs_quarantines_and_settles():
+    with tempfile.TemporaryDirectory() as d:
+        store = TelemetryStore(d)
+        store.write_shard(clean_frame(n=50), host="h0")
+        dirty = {k: v.copy() for k, v in clean_frame(n=50, t0=100.0)
+                 .columns.items()}
+        dirty["power"][7] = -1.0
+        store.write_shard(TelemetryFrame(dirty), host="h0")
+        truncated = store.write_shard(clean_frame(n=50, t0=200.0), host="h0")
+        faults.truncate_file(truncated)
+
+        dry = scrub_store(TelemetryStore(d), dry_run=True)
+        assert [v.status for v in dry] == ["ok", "repaired", "quarantined"]
+        assert TelemetryStore(d).total_rows == 150     # dry run: untouched
+
+        verdicts = scrub_store(TelemetryStore(d))
+        assert [v.status for v in verdicts] == ["ok", "repaired",
+                                                "quarantined"]
+        after = TelemetryStore(d)
+        assert after.total_rows == 99                  # 50 + 49 survive
+        assert len(after.manifest["shards"]) == 2
+        assert [q["reason"] for q in after.manifest["quarantine"]] \
+            == ["corrupt"]
+        assert (after.root / "quarantine" / truncated.name).exists()
+        # settled: a second sweep is a no-op
+        assert all(v.status == "ok" for v in scrub_store(after))
+        # repaired shard re-reads clean under checksum verification
+        for s in after.manifest["shards"]:
+            after.read_shard(s["file"], verify=True)
+
+
+# --------------------------------------------------------------------------- #
+# storage: corruption detection, drift, recovery, atomicity
+# --------------------------------------------------------------------------- #
+def test_truncated_shard_raises_strict_and_skips_tolerant():
+    with tempfile.TemporaryDirectory() as d:
+        store = make_store(d)
+        entry = store.manifest["shards"][1]
+        faults.truncate_file(shard_path(store, entry))
+        with pytest.raises(ShardReadError) as ei:
+            store.read_shard(entry["file"])
+        assert ei.value.reason == "corrupt"
+        skips = []
+        assert store.read_shard_or_skip(entry["file"], skips,
+                                        strict=False) is None
+        assert skips == [{"file": entry["file"], "host": entry["host"],
+                          "rows": entry["rows"], "reason": "corrupt"}]
+
+
+def test_bitflip_caught_by_checksum_verification():
+    with tempfile.TemporaryDirectory() as d:
+        store = TelemetryStore(d, shard_format="npy_dir")
+        store.write_shard(clean_frame(n=200), host="h0")
+        name = store.manifest["shards"][0]["file"]
+        faults.bitflip_file(store.root / name / "power.npy", offset=180)
+        fresh = TelemetryStore(d)
+        fresh.read_shard(name)                         # plain read: no idea
+        with pytest.raises(ShardReadError) as ei:
+            fresh.read_shard(name, verify=True)        # checksummed read
+        assert ei.value.reason == "checksum_mismatch"
+
+
+def test_manifest_disk_drift_reported_as_verdicts():
+    with tempfile.TemporaryDirectory() as d:
+        store = make_store(d)
+        assert store.verify_manifest() == []
+        victim = store.manifest["shards"][0]["file"]
+        (store.root / victim).unlink()
+        stray = store.root / "telemetry_h9_d000_99999.npz"
+        stray.write_bytes(b"not a shard")
+        drift = {(r["file"], r["reason"]) for r in store.verify_manifest()}
+        assert drift == {(victim, "missing_file"),
+                         (stray.name, "orphan_file")}
+
+
+def test_poisoned_manifest_recovers_by_rescan():
+    with tempfile.TemporaryDirectory() as d:
+        store = make_store(d)
+        before = analysis_key(analyze_store(store, min_job_duration_s=300))
+        n_shards = len(store.manifest["shards"])
+        faults.poison_json(store.root / "manifest.json")
+        recovered = TelemetryStore(d)
+        assert recovered.manifest.get("recovered") is True
+        assert len(recovered.manifest["shards"]) == n_shards
+        after = analysis_key(analyze_store(recovered, min_job_duration_s=300))
+        assert after == before
+
+
+def test_kill_mid_write_never_tears_state():
+    with tempfile.TemporaryDirectory() as d:
+        store = make_store(d)
+        baseline = analysis_key(analyze_store(store, min_job_duration_s=300))
+        manifest_bytes = (store.root / "manifest.json").read_bytes()
+        # every atomic commit path dies at the rename
+        with faults.dying_renames():
+            with pytest.raises(faults.SimulatedKill):
+                store.write_shard(clean_frame(n=10), host="h0")
+            with pytest.raises(faults.SimulatedKill):
+                store.save_manifest()
+            with pytest.raises(faults.SimulatedKill):
+                ir_mod.save_sidecar(
+                    ir_mod.build_ir(store, IRConfig()), store)
+            with pytest.raises(faults.SimulatedKill):
+                store.merge_manifest_key("run_ir", "deadbeef", {"file": "x"})
+        survivor = TelemetryStore(d)
+        assert (store.root / "manifest.json").read_bytes() == manifest_bytes
+        assert analysis_key(analyze_store(
+            survivor, min_job_duration_s=300)) == baseline
+        assert survivor.verify_manifest() == []        # no half-written shard
+
+
+# --------------------------------------------------------------------------- #
+# quarantine == clean subset (the acceptance bit-identity)
+# --------------------------------------------------------------------------- #
+def _dirty_and_clean_pair(d, seed=17):
+    """One corpus twice: `dirty` has ~10% of shards truncated on disk,
+    `clean` has exactly those shards quarantined away. Returns
+    (dirty_store, clean_store, corrupted_names)."""
+    d = pathlib.Path(d)
+    dirty_dir, clean_dir = d / "dirty", d / "clean"
+    make_store(dirty_dir, n_devices=8, seed=seed, shard_s=300)
+    shutil.copytree(dirty_dir, clean_dir)
+    dirty = TelemetryStore(dirty_dir)
+    names = [s["file"] for s in dirty.manifest["shards"]]
+    k = max(2, round(0.1 * len(names)))
+    victims = names[1:: max(1, len(names) // k)][:k]
+    clean = TelemetryStore(clean_dir)
+    for name in victims:
+        faults.truncate_file(shard_path(dirty, {"file": name}))
+        clean.quarantine_shard(name, "corrupt", flush_manifest=False)
+    clean.save_manifest()
+    return dirty, clean, victims
+
+
+def test_analyze_skips_quarantined_and_matches_clean_subset():
+    with tempfile.TemporaryDirectory() as d:
+        dirty, clean, victims = _dirty_and_clean_pair(d)
+        assert len(victims) >= 2
+        got = analyze_store(dirty, min_job_duration_s=300, strict=False)
+        want = analyze_store(clean, min_job_duration_s=300)
+        assert analysis_key(got) == analysis_key(want)
+        assert sorted(s["file"] for s in got.skipped) == sorted(victims)
+        assert 0.0 < got.coverage < 1.0
+        lost = sum(s["rows"] for s in got.skipped)
+        assert got.coverage == pytest.approx(
+            1.0 - lost / dirty.rows_on_disk())
+        assert want.coverage == 1.0 and want.skipped == ()
+        # strict mode still refuses the dirty store loudly
+        with pytest.raises(ShardReadError):
+            analyze_store(dirty, min_job_duration_s=300)
+
+
+def test_sweep_and_search_survive_dirty_store_bit_identically():
+    with tempfile.TemporaryDirectory() as d:
+        dirty, clean, victims = _dirty_and_clean_pair(d, seed=23)
+        clear_ir_caches()
+        got = run_sweep(dirty, _GRID, min_job_duration_s=300, strict=False)
+        clear_ir_caches()
+        want = run_sweep(clean, _GRID, min_job_duration_s=300)
+        assert got.outcomes == want.outcomes
+        assert 0.0 < got.coverage < 1.0 and want.coverage == 1.0
+        from repro.whatif import default_families
+        fams = [f for f in default_families(composites=False)
+                if f.name == "powercap"]
+        clear_ir_caches()
+        sgot = search_frontier(dirty, families=fams, max_evals=6,
+                               min_job_duration_s=300, strict=False)
+        clear_ir_caches()
+        swant = search_frontier(clean, families=fams, max_evals=6,
+                                min_job_duration_s=300)
+        assert sgot.frontier.outcomes == swant.frontier.outcomes
+        assert sgot.frontier.coverage < 1.0
+        assert swant.frontier.coverage == 1.0
+
+
+def test_zero_faults_identical_to_strict_path():
+    with tempfile.TemporaryDirectory() as d:
+        store = make_store(d, seed=29)
+        strict = run_sweep(store, _GRID, min_job_duration_s=300)
+        clear_ir_caches()
+        tolerant = run_sweep(store, _GRID, min_job_duration_s=300,
+                             strict=False, verify=True,
+                             fault=FaultTolerance())
+        assert frontier_to_dict(strict) == frontier_to_dict(tolerant)
+        assert tolerant.coverage == 1.0
+
+
+def test_frontier_coverage_serializes_and_defaults():
+    with tempfile.TemporaryDirectory() as d:
+        dirty, _, _ = _dirty_and_clean_pair(d, seed=31)
+        f = run_sweep(dirty, _GRID, min_job_duration_s=300, strict=False)
+        payload = frontier_to_dict(f)
+        assert payload["coverage"] == f.coverage < 1.0
+        assert frontier_from_dict(payload).coverage == f.coverage
+        legacy = dict(payload)
+        del legacy["coverage"]                 # pre-robustness payloads
+        assert frontier_from_dict(legacy).coverage == 1.0
+
+
+# --------------------------------------------------------------------------- #
+# IR sidecar corruption -> rebuild
+# --------------------------------------------------------------------------- #
+def test_corrupt_sidecar_rebuilds_transparently():
+    with tempfile.TemporaryDirectory() as d:
+        store = make_store(d, seed=7)
+        cfg = IRConfig()
+        built = get_ir(store, cfg)             # builds + persists sidecar
+        sidecar = store.root / ir_mod.sidecar_name(cfg)
+        assert sidecar.exists()
+        faults.truncate_file(sidecar)
+        clear_ir_caches()
+        reloaded = get_ir(TelemetryStore(d), cfg)   # rebuild, not a crash
+        assert reloaded.source_rows == built.source_rows
+        assert sorted(reloaded.streams) == sorted(built.streams)
+        assert sidecar.exists()                # persisted a fresh one
+        clear_ir_caches()
+        assert ir_mod.load_sidecar(TelemetryStore(d), cfg) is not None
+
+
+def test_poisoned_ir_manifest_entry_rebuilds():
+    with tempfile.TemporaryDirectory() as d:
+        store = make_store(d, seed=7)
+        cfg = IRConfig()
+        get_ir(store, cfg)
+        fresh = TelemetryStore(d)
+        fresh.manifest[ir_mod.MANIFEST_KEY] = {"oops": "not-a-dict-entry"}
+        clear_ir_caches()
+        assert ir_mod.load_sidecar(fresh, cfg) is None
+        ir = get_ir(fresh, cfg)                # falls through to a build
+        assert ir.source_rows == fresh.total_rows
+
+
+# --------------------------------------------------------------------------- #
+# pool fault supervisor (chaos lane)
+# --------------------------------------------------------------------------- #
+@chaos
+def test_crashing_worker_is_retried_to_the_same_answer():
+    with tempfile.TemporaryDirectory() as d:
+        store = make_store(pathlib.Path(d) / "store", n_devices=8, seed=13)
+        want = analysis_key(analyze_store(store, min_job_duration_s=300))
+        tol = FaultTolerance(max_retries=2, backoff_s=0.01)
+        with faults.plan(pathlib.Path(d) / "plan", crash=("analyze",)):
+            got = analyze_store(store, min_job_duration_s=300, workers=2,
+                                fault=tol)
+        assert analysis_key(got) == want and got.coverage == 1.0
+
+
+@chaos
+def test_hung_worker_times_out_and_retries():
+    with tempfile.TemporaryDirectory() as d:
+        store = make_store(pathlib.Path(d) / "store", n_devices=8, seed=13)
+        want = analysis_key(analyze_store(store, min_job_duration_s=300))
+        tol = FaultTolerance(max_retries=1, timeout_s=2.0, backoff_s=0.01)
+        with faults.plan(pathlib.Path(d) / "plan", hang=("analyze",),
+                         hang_s=60.0):
+            got = analyze_store(store, min_job_duration_s=300, workers=2,
+                                fault=tol)
+        assert analysis_key(got) == want
+
+
+@chaos
+def test_exhausted_retries_degrade_to_in_process():
+    with tempfile.TemporaryDirectory() as d:
+        store = make_store(pathlib.Path(d) / "store", n_devices=8, seed=13)
+        want = analysis_key(analyze_store(store, min_job_duration_s=300))
+        obs.enable()
+        try:
+            obs.reset()
+            with faults.plan(pathlib.Path(d) / "plan", crash=("analyze",)):
+                got = analyze_store(store, min_job_duration_s=300, workers=2,
+                                    fault=FaultTolerance(max_retries=0,
+                                                         backoff_s=0.01))
+            text = obs.render_prometheus()
+        finally:
+            obs.disable()
+            obs.reset()
+        assert analysis_key(got) == want      # parent redid the lost work
+        assert 'repro_fallbacks_total{from="pool"' in text
+        assert "repro_partition_retries_total" in text
+
+
+@chaos
+def test_sweep_survives_crashing_worker_and_corrupt_shards_together():
+    """The acceptance scenario: ~10% corrupt shards AND a crashing pool
+    worker in the same run — completes, quarantines exactly the injected
+    shards, and matches the clean subset bit-for-bit."""
+    with tempfile.TemporaryDirectory() as d:
+        dirty, clean, victims = _dirty_and_clean_pair(
+            pathlib.Path(d) / "pair", seed=37)
+        clear_ir_caches()
+        want = run_sweep(clean, _GRID, min_job_duration_s=300)
+        clear_ir_caches()
+        with faults.plan(pathlib.Path(d) / "plan", crash=("replay_ir",)):
+            got = run_sweep(dirty, _GRID, min_job_duration_s=300, workers=2,
+                            strict=False,
+                            fault=FaultTolerance(max_retries=2,
+                                                 backoff_s=0.01))
+        assert got.outcomes == want.outcomes
+        assert got.coverage < 1.0
+
+
+# --------------------------------------------------------------------------- #
+# observability families
+# --------------------------------------------------------------------------- #
+def test_degradation_families_registered_and_lintable(tmp_path):
+    obs.enable()
+    try:
+        obs.reset()
+        obs.init_degradation_metrics()
+        text = obs.render_prometheus()
+    finally:
+        obs.disable()
+        obs.reset()
+    for name, _, _ in obs.DEGRADATION_FAMILIES:
+        assert f"\n{name} " in text or text.startswith(f"{name} ")
+    assert obs.lint_exposition(text) == []
+    # the CI chaos lane lints presence-only (--require NAME, no value)
+    prom = tmp_path / "metrics.prom"
+    prom.write_text(text)
+    import prom_lint
+    assert prom_lint.check_file(str(prom), [
+        "repro_fallbacks_total", "repro_shards_quarantined_total",
+        "repro_shards_repaired_total", "repro_partition_retries_total",
+        "repro_coverage_fraction"]) == []
+    assert prom_lint.check_file(str(prom), ["repro_not_a_metric"]) != []
+
+
+def test_quarantine_counters_emitted():
+    with tempfile.TemporaryDirectory() as d:
+        dirty, _, victims = _dirty_and_clean_pair(d, seed=41)
+        obs.enable()
+        try:
+            obs.reset()
+            analyze_store(dirty, min_job_duration_s=300, strict=False)
+            text = obs.render_prometheus()
+        finally:
+            obs.disable()
+            obs.reset()
+        assert f'repro_shards_quarantined_total{{reason="corrupt"}} ' \
+            f'{len(victims)}' in text
+        assert 'repro_coverage_fraction{stage="analyze"}' in text
