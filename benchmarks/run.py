@@ -77,9 +77,11 @@ def main() -> None:
     import repro.obs as obs
     if args.obs:
         obs.enable()
-        # zero-register the degradation ladder so a fault-free exposition
-        # still carries the families (CI lints on presence)
+        # zero-register the degradation ladder and the incremental-IR
+        # families so a fault-free / append-free exposition still carries
+        # them (CI lints on presence)
         obs.init_degradation_metrics()
+        obs.init_ir_append_metrics()
 
     from benchmarks.fleet_bench import bench_fleet_analyze
     from benchmarks.kernels_bench import bench_kernels

@@ -354,21 +354,23 @@ def integrate(
     return breakdown
 
 
-def integrate_runs(
+def integrate_runs_with_intervals(
     states: np.ndarray,
     energy: np.ndarray,
     lengths: np.ndarray,
     min_samples: int,
     dt_s: float = 1.0,
-) -> list[EnergyBreakdown]:
-    """Integrate pre-aggregated runs: one breakdown per config row.
+) -> tuple[list[EnergyBreakdown], list[Interval]]:
+    """Integrate pre-aggregated runs, keeping the sustained-interval list.
 
     Single-call application of
     :meth:`BatchedStreamingIntegrator.update_runs` — the run-level IR's
     accounting primitive (``states [R]``, ``energy [C, R]`` per-run power
-    sums in W·samples, ``lengths [R]``). Per-state times are bit-identical
-    to sample-level integration of the expanded series; energies agree up
-    to float summation order.
+    sums in W·samples, ``lengths [R]``). Per-state times, interval bounds
+    and counts are bit-identical to sample-level integration of the
+    expanded series; energies agree up to float summation order. The
+    interval sample indices are stream-local (sample 0 = the first run's
+    first sample), exactly like a single-stream :func:`integrate` pass.
     """
     energy = np.asarray(energy, dtype=np.float64)
     if energy.ndim == 1:
@@ -377,7 +379,19 @@ def integrate_runs(
                                     min_duration_s=None, dt_s=dt_s)
     bi.min_samples = int(min_samples)
     bi.update_runs(states, energy, lengths)
-    breakdowns, _ = bi.finalize_batch()
+    return bi.finalize_batch()
+
+
+def integrate_runs(
+    states: np.ndarray,
+    energy: np.ndarray,
+    lengths: np.ndarray,
+    min_samples: int,
+    dt_s: float = 1.0,
+) -> list[EnergyBreakdown]:
+    """Breakdown-only view of :func:`integrate_runs_with_intervals`."""
+    breakdowns, _ = integrate_runs_with_intervals(
+        states, energy, lengths, min_samples, dt_s)
     return breakdowns
 
 

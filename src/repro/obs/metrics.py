@@ -288,9 +288,34 @@ def init_degradation_metrics() -> None:
     fault-free exposition still exposes them — dashboards and the CI linter
     can then assert on presence instead of guessing whether a zero means
     'no faults' or 'not instrumented'."""
+    _init_families(DEGRADATION_FAMILIES)
+
+
+# ------------------------------------------------- incremental-IR metrics
+#: the incremental IR-append families (name, kind, help) — emitted by
+#: :meth:`repro.whatif.ir.IRBuilder.extend`, preregistered zero-valued by
+#: :func:`init_ir_append_metrics` (CI asserts presence; same contract as
+#: the degradation families above).
+IR_APPEND_FAMILIES: tuple[tuple[str, str, str], ...] = (
+    ("repro_ir_appends_total", "counter",
+     "incremental IR extends (appends folded into an existing RunIR)"),
+    ("repro_ir_append_rows_total", "counter",
+     "telemetry rows folded into existing RunIRs by incremental extends"),
+    ("repro_ir_suffix_rebuild_fraction", "gauge",
+     "rows whose replay aggregates were re-derived / total rows, last extend"),
+)
+
+
+def init_ir_append_metrics() -> None:
+    """Pre-register the incremental-IR families (zero-valued) so an
+    exposition from a run that never appended still exposes them."""
+    _init_families(IR_APPEND_FAMILIES)
+
+
+def _init_families(families: tuple[tuple[str, str, str], ...]) -> None:
     if not STATE.enabled:
         return
-    for name, kind, help_text in DEGRADATION_FAMILIES:
+    for name, kind, help_text in families:
         if kind == "counter":
             REGISTRY.counter(name, help_text)
         else:

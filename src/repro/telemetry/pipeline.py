@@ -13,6 +13,16 @@ Two entry points share one accounting implementation:
   any size (e.g. one storage shard at a time) fed through ``update``; per-job
   run state is carried across chunk boundaries, so results are bit-identical
   to the monolithic path while peak memory stays bounded by one chunk.
+
+:func:`analyze_store` additionally fronts both with the **run-level IR**
+(:mod:`repro.whatif.ir`, the "One IR to rule the stack" substrate): by
+default it acquires the store's :class:`~repro.whatif.ir.RunIR` via
+``get_ir`` and reduces run tables instead of re-classifying rows —
+O(runs) per pass after the one-off compaction, with per-state times,
+durations, interval lists and counts **bit-identical** to the row engine
+and energies within float summation order (<= 1e-9 relative; the row path
+stays available as the bit-exactness oracle via ``compact=False`` and as
+the automatic fallback for irregular or quarantined streams).
 """
 from __future__ import annotations
 
@@ -41,6 +51,7 @@ class JobAnalysis:
     states: np.ndarray | None      # None on the streaming path (out-of-core)
     breakdown: EnergyBreakdown
     intervals: list[Interval]
+    platform: int = -1             # platform id of the stream's device
 
     @property
     def exec_idle_time_fraction(self) -> float:
@@ -59,6 +70,9 @@ class FleetAnalysis:
     n_intervals: int
     coverage: float = 1.0               # rows analyzed / rows on disk
     skipped: tuple = ()                 # shard skip records (strict=False)
+    #: per-platform fleet breakdowns (platform id -> merged breakdown over
+    #: that platform's surviving jobs) — the §4 per-platform aggregates
+    platforms: dict = dataclasses.field(default_factory=dict)
 
     @property
     def in_execution_time_fraction(self) -> float:
@@ -90,6 +104,16 @@ def analyze_job(frame: TelemetryFrame,
                        states=states, breakdown=breakdown, intervals=intervals)
 
 
+def _platform_breakdowns(jobs: list[JobAnalysis]) -> dict:
+    """Per-platform merged breakdowns over the surviving jobs, merged in
+    jobs-list order (sorted stream keys on every path, so row- and
+    run-level analyses accumulate in the same sequence — bit-identical)."""
+    by_platform: dict[int, list[EnergyBreakdown]] = {}
+    for j in jobs:
+        by_platform.setdefault(j.platform, []).append(j.breakdown)
+    return {p: merge(by_platform[p]) for p in sorted(by_platform)}
+
+
 @dataclasses.dataclass
 class _GroupState:
     """Per-(job, host, device) partial state carried across chunks."""
@@ -99,6 +123,7 @@ class _GroupState:
     ts_first: float = math.inf
     ts_last: float = -math.inf
     state_pieces: list[np.ndarray] | None = None
+    platform: int = -1
 
 
 class FleetAccumulator:
@@ -161,6 +186,7 @@ class FleetAccumulator:
                     integrator=StreamingIntegrator(
                         min_duration_s=self.min_interval_s, dt_s=self.dt_s),
                     state_pieces=[] if self.keep_states else None,
+                    platform=int(seg["platform"][0]),
                 )
             ts = seg["timestamp"]
             # `<` (not `<=`): the monolithic path's stable sort accepts
@@ -232,6 +258,7 @@ class FleetAccumulator:
                 states=states,
                 breakdown=breakdown,
                 intervals=intervals,
+                platform=g.platform,
             ))
         unattributed = math.fsum(self._unattributed_pieces)
         # clear ALL accumulated state, not just groups — a reused accumulator
@@ -246,6 +273,7 @@ class FleetAccumulator:
             fleet=fleet,
             unattributed_energy_j=unattributed,
             n_intervals=sum(len(j.intervals) for j in jobs),
+            platforms=_platform_breakdowns(jobs),
         )
 
 
@@ -495,6 +523,56 @@ def _accumulate_shards(
     return acc, skips
 
 
+def _analyze_ir(ir, hosts, min_job_duration_s: float,
+                min_interval_s: float | None, dt_s: float) -> FleetAnalysis:
+    """Run-algebra fleet analysis over a prebuilt :class:`RunIR`.
+
+    Per stream, per-state occupancy, execution-idle intervals and the
+    §2.2 sustain relabel reduce over the run table
+    (:func:`repro.core.energy.integrate_runs_with_intervals`) instead of
+    re-classifying rows. Contract vs the row engine on the same data:
+    per-state times, job durations, interval bounds/counts and the
+    per-platform grouping are **bit-identical** (integer sample sums and
+    timestamp arithmetic over the same scalar ops); energies agree within
+    float summation order; ``unattributed_energy_j`` is exactly equal
+    (``math.fsum`` over the same per-chunk partials). Coverage/skip
+    accounting is the caller's job (:func:`analyze_store`).
+    """
+    min_samples = (0 if min_interval_s is None
+                   else int(np.ceil(min_interval_s / dt_s)))
+    host_set = set(hosts) if hosts is not None else None
+    jobs: list[JobAnalysis] = []
+    for s in ir.select(hosts):
+        # same duration arithmetic as the row path: the reconstructed
+        # ts_last bit-equals the recorded column (regularity is validated
+        # at IR build time), so the span filter cannot diverge
+        span_s = s.ts_last - s.ts_first + dt_s
+        if span_s < min_job_duration_s:
+            continue
+        from repro.core.energy import integrate_runs_with_intervals
+        breakdowns, intervals = integrate_runs_with_intervals(
+            s.state, s.power_sum[None, :], s.length, min_samples, dt_s)
+        jobs.append(JobAnalysis(
+            job_id=s.key[0],
+            duration_s=float(span_s),
+            states=None,
+            breakdown=breakdowns[0],
+            intervals=intervals,
+            platform=s.platform_id,
+        ))
+    unattributed = math.fsum(
+        v for h, v in ir.unattributed
+        if host_set is None or h in host_set)
+    fleet = merge([j.breakdown for j in jobs])
+    return FleetAnalysis(
+        jobs=jobs,
+        fleet=fleet,
+        unattributed_energy_j=unattributed,
+        n_intervals=sum(len(j.intervals) for j in jobs),
+        platforms=_platform_breakdowns(jobs),
+    )
+
+
 def analyze_store(
     store: "TelemetryStore",
     hosts: Iterable[str] | None = None,
@@ -507,12 +585,30 @@ def analyze_store(
     strict: bool = True,
     verify: bool = False,
     fault: FaultTolerance | None = None,
+    compact: bool | None = None,
+    ir=None,
 ) -> FleetAnalysis:
     """Streaming fleet analysis: one shard in memory at a time.
 
     Bit-identical to ``analyze_fleet(store.read_all(hosts))`` (modulo the
-    last ulp of ``unattributed_energy_j``) with peak memory bounded by the
+    last ulp of ``unattributed_energy_j`` on the row engine, and of the
+    per-state energies between engines) with peak memory bounded by the
     largest shard, so 162 GB-scale datasets analyze on a laptop.
+
+    **Engine selection** (``compact``): by default (``None``) the analysis
+    runs over the store's run-level IR (:func:`repro.whatif.ir.get_ir` —
+    memory/sidecar cached, incrementally extended on append), reducing run
+    tables instead of re-classifying rows, and falls back to the row
+    engine automatically when the store cannot be compacted (irregular
+    sampling, quarantined mid-stream shards) — recorded as a
+    ``compact -> row`` fallback. ``compact=False`` pins the row engine
+    (the bit-exactness oracle); ``compact=True`` demands the IR engine and
+    propagates its errors instead of falling back. A prebuilt ``ir``
+    handle (e.g. shared with a sweep/search over the same store) skips
+    acquisition entirely; it must match ``config``/``dt_s``. Between the
+    engines, per-state times, durations, intervals, platform grouping and
+    ``unattributed_energy_j`` are bit-identical; energies agree within
+    1e-9 relative (float summation order).
 
     ``workers > 1`` spreads host-label partitions over a process pool
     (streams never span host labels, so partitions are disjoint) and merges
@@ -525,31 +621,73 @@ def analyze_store(
     — the result is bit-identical to analyzing the clean subset, with the
     skipped shards recorded in ``result.skipped`` and ``result.coverage``
     reporting rows analyzed / rows on disk. ``verify=True`` additionally
-    checksums every shard against the manifest. ``fault`` tunes the pool's
-    crash/hang supervisor (see :class:`FaultTolerance`).
+    checksums every shard read (on the compact path that is the shard
+    reads IR acquisition performs; cached IRs were verified when built).
+    ``fault`` tunes the pool's crash/hang supervisor (see
+    :class:`FaultTolerance`).
     """
     hosts = list(hosts) if hosts is not None else None
-    acc_kwargs = dict(
-        min_job_duration_s=min_job_duration_s,
-        min_interval_s=min_interval_s,
-        config=config,
-        dt_s=dt_s,
-    )
     t0 = time.perf_counter()
+    result = None
+    n_rows = n_chunks = n_runs = 0
     with obs.span("analyze_store", workers=workers):
-        acc, skips = map_shard_partitions(
-            store, hosts, workers, _accumulate_shards,
-            (mmap, acc_kwargs, strict, verify),
-            merge=lambda a, b: a.merge(b), stage="analyze", fault=fault)
-        n_rows, n_chunks = acc.n_rows, acc.n_chunks
-        with obs.span("analyze.finalize"):
-            result = acc.finalize()
+        if compact is not False:
+            # local import: whatif.ir imports core/* which pipeline feeds
+            from repro.telemetry.storage import ShardReadError
+            from repro.whatif import ir as ir_mod
+            try:
+                ir_obj = ir
+                if ir_obj is not None:
+                    if (ir_obj.config.classifier != config
+                            or ir_obj.config.dt_s != dt_s):
+                        raise ir_mod.IRUnsupportedError(
+                            "prebuilt IR was compacted under a different "
+                            "classifier config or dt_s")
+                    if ir_obj.skipped and strict:
+                        raise ir_mod.IRUnsupportedError(
+                            "prebuilt IR carries skipped shards; pass "
+                            "strict=False to accept degraded coverage")
+                else:
+                    ir_obj = ir_mod.get_ir(
+                        store,
+                        ir_mod.IRConfig(classifier=config, dt_s=dt_s),
+                        workers=workers, mmap=mmap, strict=strict,
+                        verify=verify, fault=fault)
+                skips = [dict(s) for s in ir_obj.skipped
+                         if hosts is None or s.get("host", "") in set(hosts)]
+                with obs.span("analyze.reduce_runs"):
+                    result = _analyze_ir(ir_obj, hosts, min_job_duration_s,
+                                         min_interval_s, dt_s)
+                n_runs = sum(s.n_runs for s in ir_obj.select(hosts))
+            except (ir_mod.IRUnsupportedError, ShardReadError) as e:
+                if compact:
+                    raise
+                reason = ("ir_unsupported"
+                          if isinstance(e, ir_mod.IRUnsupportedError)
+                          else "shard_read_error")
+                obs.fallback("compact", "row", reason)
+        if result is None:
+            acc_kwargs = dict(
+                min_job_duration_s=min_job_duration_s,
+                min_interval_s=min_interval_s,
+                config=config,
+                dt_s=dt_s,
+            )
+            acc, skips = map_shard_partitions(
+                store, hosts, workers, _accumulate_shards,
+                (mmap, acc_kwargs, strict, verify),
+                merge=lambda a, b: a.merge(b), stage="analyze", fault=fault)
+            n_rows, n_chunks = acc.n_rows, acc.n_chunks
+            with obs.span("analyze.finalize"):
+                result = acc.finalize()
         expected = store.rows_on_disk(hosts)
+        skip_rows = sum(s["rows"] for s in skips)
         coverage = (1.0 if expected <= 0
-                    else max(0.0, 1.0 - sum(s["rows"] for s in skips)
-                             / expected))
+                    else max(0.0, 1.0 - skip_rows / expected))
         result = dataclasses.replace(result, coverage=coverage,
                                      skipped=tuple(skips))
+        if not n_rows:
+            n_rows = max(expected - skip_rows, 0)
         obs.gauge("repro_coverage_fraction", coverage, stage="analyze",
                   help="rows analyzed / rows on disk for the last run")
     if obs.enabled():
@@ -558,8 +696,13 @@ def analyze_store(
                     help="wall time of analyze_store calls")
         obs.gauge("repro_analyze_rows_per_s", n_rows / dt,
                   help="row throughput of the last analyze_store")
-        obs.gauge("repro_analyze_shards_per_s", n_chunks / dt,
-                  help="shard throughput of the last analyze_store")
+        if n_chunks:
+            obs.gauge("repro_analyze_shards_per_s", n_chunks / dt,
+                      help="shard throughput of the last analyze_store")
+        if n_runs:
+            obs.gauge("repro_analyze_runs_per_s", n_runs / dt,
+                      help="run-table throughput of the last compact "
+                           "analyze_store")
         obs.gauge("repro_analyze_jobs", float(len(result.jobs)),
                   help="jobs surviving the min-duration filter")
     return result

@@ -22,11 +22,19 @@ sidecars** (``run_ir_<hash>.npz``, written by
 per-stream metadata (host label, platform, first timestamp, row/run
 counts) and the raw power samples — so repeat sweeps skip stream grouping,
 classification and run-length encoding entirely. Sidecars are keyed in the
-manifest under ``manifest["run_ir"][<classifier-config hash>]`` with the
-``source_rows`` they were built from: a different classifier config hashes
-to a different sidecar, and appending shards invalidates (``source_rows``
-no longer matches, so :func:`repro.whatif.ir.get_ir` rebuilds). Sidecars
-are derived data — deleting the files and the manifest key is always safe.
+manifest under ``manifest["run_ir"][<classifier-config hash>]``; the entry
+records the ``source_rows`` the sidecar was built from plus a **shard
+watermark**: ``n_shards`` (the covered prefix length of the append-only
+``manifest["shards"]`` list) and per-host ``watermarks`` (covered row
+counts per host label). A different classifier config hashes to a
+different sidecar. Appending shards makes the sidecar *stale*, not dead:
+:func:`repro.whatif.ir.get_ir` reloads it (``allow_stale=True``), checks
+that the covered prefix still sums to ``source_rows``, and folds only the
+uncovered suffix shards in via :meth:`repro.whatif.ir.IRBuilder.extend` —
+store growth invalidates the appended-to streams' tails, not the world. A
+rewritten, quarantined or reordered shard *inside* the covered prefix
+breaks the watermark and forces a full rebuild. Sidecars are derived
+data — deleting the files and the manifest key is always safe.
 
 Robustness (see the README "Robustness & dirty telemetry" section)
 ------------------------------------------------------------------

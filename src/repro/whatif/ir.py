@@ -29,7 +29,16 @@ sidecar file next to the store's ``npz``/``npy_dir`` shards, keyed by the
 :meth:`IRConfig.config_hash` in the manifest (``manifest["run_ir"]``), so
 repeat sweeps skip stream grouping, classification and run-length encoding
 entirely. Sidecars are invalidated when the classifier config changes (a
-different hash misses) or the store grows (``source_rows`` mismatch).
+different hash misses); a store that merely *grew* is caught up
+incrementally instead of rebuilt: :meth:`IRBuilder.extend` re-opens each
+appended-to stream at its trailing run (the same cross-chunk carry the
+from-scratch build uses, so the result is bit-identical), re-derives the
+memoized per-stream aggregates only for the affected suffix, and carries
+untouched streams over as the same objects, memo caches intact. The
+sidecar manifest entry records a per-stream shard **watermark**
+(``n_shards`` covered manifest prefix + per-host row counts), so growth
+invalidates appended-to streams' tails, not the world — see
+:func:`save_sidecar` and the storage-module docstring for the format.
 
 Requirements: streams must be regularly sampled (``ts == ts[0] +
 dt_s*arange(n)`` exactly, per stream) — the run table stores offsets, not
@@ -349,12 +358,22 @@ class StreamIR:
 class RunIR:
     """The whole store's run-level IR: one :class:`StreamIR` per
     job-attributed stream, plus the build config and the store row count it
-    was built from (staleness check)."""
+    was built from (staleness check).
+
+    ``source_shards`` is the covered prefix length of the store's
+    append-only ``manifest["shards"]`` list — the watermark
+    :meth:`IRBuilder.extend` validates before appending only the new
+    shards. ``unattributed`` keeps one ``(host_label, power_sum)`` pair per
+    ingested chunk for the ``job_id < 0`` samples, so the fleet-analysis
+    consumer can price unattributed energy (``math.fsum`` over the pairs is
+    exact, hence identical to the row path's per-shard partials)."""
 
     config: IRConfig
     streams: dict[tuple[int, int, int], StreamIR]
     source_rows: int
     skipped: tuple = ()      # shard skip records from a strict=False build
+    source_shards: int = 0   # covered prefix of manifest["shards"]
+    unattributed: tuple = () # (host_label, power sum) per ingested chunk
 
     @property
     def n_rows(self) -> int:
@@ -396,6 +415,32 @@ class _StreamAccum:
     t_low: bool = False
     t_len: int = 0
     t_sum: float = 0.0
+    # closed run arrays inherited from an extended IR (state/low/len/sum) —
+    # prepended verbatim at finalize, never re-encoded
+    prefix: tuple | None = None
+
+
+def _seed_accum(s: StreamIR) -> _StreamAccum:
+    """Re-open a finalized stream for appending: the closed-run prefix is
+    carried verbatim and the trailing run becomes the accumulator's open
+    run — exactly the state a from-scratch build would hold after ingesting
+    this stream's shards, so continuing the build is bit-identical."""
+    if s.n_runs == 0:
+        return _StreamAccum(host_label=s.host_label,
+                            platform_id=s.platform_id, ts_first=s.ts_first)
+    t = s.n_runs - 1
+    return _StreamAccum(
+        host_label=s.host_label,
+        platform_id=s.platform_id,
+        ts_first=s.ts_first,
+        n_seen=s.n_rows,
+        power_pieces=[s.power],
+        t_state=int(s.state[t]),
+        t_low=bool(s.low[t]),
+        t_len=int(s.length[t]),
+        t_sum=float(s.power_sum[t]),
+        prefix=(s.state[:t], s.low[:t], s.length[:t], s.power_sum[:t]),
+    )
 
 
 class IRBuilder:
@@ -413,12 +458,20 @@ class IRBuilder:
         self.config = config
         self._low_cfg = config.low_config()
         self._acc: dict[tuple[int, int, int], _StreamAccum] = {}
+        self._unattr: list[tuple[str, float]] = []
+        self._seed: dict[tuple[int, int, int], StreamIR] = {}
 
     def update(self, chunk: "TelemetryFrame", host_label: str = "") -> None:
         if len(chunk) == 0:
             return
         obs.counter("repro_ir_build_rows_total", float(len(chunk)),
                     help="telemetry rows run-length encoded by IRBuilder")
+        neg = chunk["job_id"] < 0
+        if np.any(neg):
+            # same per-chunk partial the row path records; math.fsum over
+            # the pieces is exact, so consumers match it bit-for-bit
+            self._unattr.append(
+                (host_label, float(np.sum(chunk["power"][neg]))))
         for key, seg in chunk.group_streams():
             if key[0] < 0:
                 continue
@@ -429,10 +482,14 @@ class IRBuilder:
         ts = np.asarray(seg["timestamp"], dtype=np.float64)
         acc = self._acc.get(key)
         if acc is None:
-            acc = self._acc[key] = _StreamAccum(
-                host_label=host_label,
-                platform_id=int(seg["platform"][0]),
-                ts_first=float(ts[0]))
+            seed = self._seed.pop(key, None)
+            if seed is not None:
+                acc = self._acc[key] = _seed_accum(seed)
+            else:
+                acc = self._acc[key] = _StreamAccum(
+                    host_label=host_label,
+                    platform_id=int(seg["platform"][0]),
+                    ts_first=float(ts[0]))
         expected = acc.ts_first + self.config.dt_s * np.arange(
             acc.n_seen, acc.n_seen + n)
         if not np.array_equal(ts, expected):
@@ -481,9 +538,10 @@ class IRBuilder:
         if other.config != self.config:
             raise ValueError("cannot merge IR builders with different configs")
         self._acc.update(other._acc)
+        self._unattr.extend(other._unattr)
         return self
 
-    def finalize(self, source_rows: int = 0) -> RunIR:
+    def finalize(self, source_rows: int = 0, source_shards: int = 0) -> RunIR:
         streams: dict[tuple[int, int, int], StreamIR] = {}
         for key in sorted(self._acc):
             acc = self._acc[key]
@@ -493,22 +551,251 @@ class IRBuilder:
                 acc.run_len.append(acc.t_len)
                 acc.run_sum.append(acc.t_sum)
                 acc.t_len = 0
+            state = np.array(acc.run_state, dtype=np.int8)
+            low = np.array(acc.run_low, dtype=bool)
+            length = np.array(acc.run_len, dtype=np.int64)
+            power_sum = np.array(acc.run_sum, dtype=np.float64)
+            if acc.prefix is not None:
+                p_state, p_low, p_len, p_sum = acc.prefix
+                state = np.concatenate([p_state, state])
+                low = np.concatenate([p_low, low])
+                length = np.concatenate([p_len, length])
+                power_sum = np.concatenate([p_sum, power_sum])
             streams[key] = StreamIR(
                 key=key,
                 host_label=acc.host_label,
                 platform_id=acc.platform_id,
                 ts_first=acc.ts_first,
                 dt_s=self.config.dt_s,
-                state=np.array(acc.run_state, dtype=np.int8),
-                low=np.array(acc.run_low, dtype=bool),
-                length=np.array(acc.run_len, dtype=np.int64),
-                power_sum=np.array(acc.run_sum, dtype=np.float64),
+                state=state,
+                low=low,
+                length=length,
+                power_sum=power_sum,
                 power=(np.concatenate(acc.power_pieces)
                        if acc.power_pieces else np.empty(0)),
             )
         self._acc.clear()
+        unattr = tuple(self._unattr)
+        self._unattr = []
         return RunIR(config=self.config, streams=streams,
-                     source_rows=source_rows)
+                     source_rows=source_rows, source_shards=source_shards,
+                     unattributed=unattr)
+
+    def extend(self, ir: RunIR, chunks: Iterable[tuple],
+               source_rows: int | None = None,
+               source_shards: int | None = None) -> RunIR:
+        """Append ``chunks`` to an existing IR, rebuilding only the tails.
+
+        ``chunks`` is an iterable of ``(frame, host_label)`` pairs — one per
+        appended shard, in append (manifest) order. Each appended-to stream
+        is re-opened at its trailing run via :func:`_seed_accum` (the same
+        cross-chunk carry the from-scratch build uses), so the result is
+        **bit-identical** to ``build_ir`` over the full shard sequence —
+        run tables, power columns and every seeded memo agree bit-for-bit
+        (property-tested in tests/test_ir_append.py). Cost is O(new rows +
+        affected suffixes), not O(store).
+
+        Untouched streams are carried over as the *same*
+        :class:`StreamIR` objects, lazy memo caches intact; touched streams
+        get their expensive memos (prefix sums, cap buckets,
+        accounting-state labels) seeded from the old stream's cache via
+        :func:`_extend_stream_memos`, recomputing only from the start of
+        the last maximal state run (the only region the §2.2 sustain rule
+        can relabel). ``ir`` itself is never mutated.
+
+        ``source_rows``/``source_shards`` default to ``ir``'s values plus
+        what ``chunks`` contributed; :func:`_try_extend` passes the
+        manifest-derived totals instead so skipped shards still count
+        toward staleness, mirroring ``build_ir``'s semantics.
+        """
+        if self._acc:
+            raise ValueError("extend requires a fresh IRBuilder")
+        if ir.config != self.config:
+            raise ValueError(
+                "cannot extend an IR built with a different config")
+        t0 = time.perf_counter()
+        self._seed = dict(ir.streams)
+        self._unattr = list(ir.unattributed)
+        n_chunks = 0
+        new_rows = 0
+        try:
+            for frame, host_label in chunks:
+                n_chunks += 1
+                new_rows += len(frame)
+                self.update(frame, host_label=host_label)
+        finally:
+            self._seed = {}
+        out = self.finalize(
+            source_rows=(ir.source_rows + new_rows if source_rows is None
+                         else source_rows),
+            source_shards=(ir.source_shards + n_chunks
+                           if source_shards is None else source_shards))
+        recomputed = 0
+        streams = dict(out.streams)
+        for key, new_s in out.streams.items():
+            old_s = ir.streams.get(key)
+            if old_s is not None:
+                recomputed += _extend_stream_memos(old_s, new_s)
+            else:
+                recomputed += new_s.n_rows
+        for key, old_s in ir.streams.items():
+            streams.setdefault(key, old_s)
+        out.streams = {k: streams[k] for k in sorted(streams)}
+        out.skipped = tuple(ir.skipped)
+        total = out.n_rows
+        obs.counter("repro_ir_appends_total",
+                    help="incremental IR catches-up via IRBuilder.extend")
+        obs.counter("repro_ir_append_rows_total", float(new_rows),
+                    help="telemetry rows appended through IRBuilder.extend")
+        obs.gauge("repro_ir_suffix_rebuild_fraction",
+                  recomputed / total if total else 0.0,
+                  help="rows whose derived aggregates the last extend "
+                       "recomputed, as a fraction of the IR's rows")
+        if obs.enabled():
+            obs.observe("repro_ir_extend_seconds", time.perf_counter() - t0,
+                        help="wall time of IRBuilder.extend")
+        return out
+
+
+def _final_state_suffix(state: np.ndarray, length: np.ndarray,
+                        min_samples: int) -> np.ndarray:
+    """:meth:`StreamIR.final_state` restricted to a run-slice that starts
+    on a maximal-state-run boundary — the relabel seen by those runs in a
+    full build (reduceat grouping is identical on either side of a state
+    change)."""
+    change = np.flatnonzero(np.diff(state)) + 1
+    starts = np.concatenate([[0], change])
+    m_state = state[starts].astype(np.int64)
+    m_len = np.add.reduceat(length, starts)
+    m_final = np.where((m_state == _EXEC) & (m_len < min_samples),
+                       _ACTIVE, m_state)
+    reps = np.diff(np.concatenate([starts, [state.shape[0]]]))
+    return np.repeat(m_final, reps).astype(np.int8)
+
+
+def _multiset_delete(sp: np.ndarray, rem: np.ndarray) -> np.ndarray:
+    """Remove the sorted multiset ``rem`` from the sorted array ``sp``
+    (every ``rem`` value must be present): the k-th duplicate of a value in
+    ``rem`` deletes the k-th duplicate in ``sp`` — occurrence-rank indexing,
+    so ties never collapse onto one index."""
+    if rem.size == 0:
+        return sp
+    idx = (np.searchsorted(sp, rem, side="left")
+           + (np.arange(rem.size) - np.searchsorted(rem, rem, side="left")))
+    return np.delete(sp, idx)
+
+
+def _sorted_insert(sp: np.ndarray, add: np.ndarray) -> np.ndarray:
+    """Merge the sorted array ``add`` into the sorted array ``sp``. The
+    result is element-wise identical to re-sorting the union: equal floats
+    share a bit pattern, so duplicate placement cannot be observed."""
+    if add.size == 0:
+        return sp
+    return np.insert(sp, np.searchsorted(sp, add), add)
+
+
+def _extend_stream_memos(old: StreamIR, new: StreamIR) -> int:
+    """Seed ``new``'s lazy memo cache from ``old``'s after an append.
+
+    Only labels and prefix aggregates of samples at or after ``B`` — the
+    sample offset of the old stream's **last maximal constant-state run**
+    — can change when rows append (§2.2 sustain relabels apply per maximal
+    run, and only the last one can keep growing), so every seeded memo
+    keeps its ``[:B]`` prefix and recomputes the suffix:
+
+    * ``cumres`` — integer prefix counts: left-fold extended (exact);
+    * ``("final"/"sfinal", m)`` — relabel recomputed from the maximal-run
+      boundary ``q`` only;
+    * ``("dscum", delta, deep_w, m)`` — float prefix sums extended by
+      continuing the sequential cumsum *fold* from the old value at ``B``
+      (``np.cumsum`` accumulates left-to-right, so this is bit-identical
+      to a fresh full-series cumsum — never add the base to a sub-cumsum,
+      association differs);
+    * ``("caps", m)`` — sorted buckets patched by multiset delete/insert
+      of the suffix samples (the O(N log N) sort is avoided; the cheap
+      top-k cumsums are recomputed over the merged bucket).
+
+    Cheap O(runs) memos (offsets, controller runs, baselines, parking)
+    recompute lazily on demand. Returns the number of rows whose derived
+    aggregates were recomputed (``new.n_rows - B``), the numerator of
+    ``repro_ir_suffix_rebuild_fraction``.
+    """
+    old_off = old.run_offsets()
+    t = old.n_runs - 1
+    if t < 0:
+        return new.n_rows
+    change = np.flatnonzero(np.diff(old.state))
+    q = int(change[-1] + 1) if change.size else 0
+    B = int(old_off[q])
+    off_t = int(old_off[t])
+    old_n = old.n_rows
+    cache = old._cache
+    newc = new._cache
+
+    if "cumres" in cache:
+        old_cum = cache["cumres"]
+        suf = np.repeat(new.resident_runs()[t:], new.length[t:])
+        newc["cumres"] = np.concatenate(
+            [old_cum[:off_t + 1],
+             old_cum[off_t] + np.cumsum(suf)]).astype(np.int64)
+
+    ms = {k[1] for k in cache if isinstance(k, tuple)
+          and k[0] in ("final", "sfinal", "caps")}
+    ms |= {k[3] for k in cache if isinstance(k, tuple) and k[0] == "dscum"}
+    for m in sorted(ms):
+        old_final = cache.get(("final", m))
+        if old_final is None:
+            continue                     # parameterized family never built
+        suffix_final = _final_state_suffix(new.state[q:], new.length[q:], m)
+        new_final = np.concatenate([old_final[:q], suffix_final])
+        newc[("final", m)] = new_final
+        old_sf = cache.get(("sfinal", m))
+        if old_sf is None:
+            continue
+        new_sf = np.concatenate(
+            [old_sf[:B], np.repeat(suffix_final, new.length[q:])])
+        newc[("sfinal", m)] = new_sf
+
+        if ("caps", m) in cache:
+            old_caps = cache[("caps", m)]
+            out: dict = {}
+            ofs_b = old_sf[B:]
+            nfs_b = new_sf[B:]
+            for s in (_DEEP, _EXEC, _ACTIVE):
+                kept = _multiset_delete(old_caps[s][0],
+                                        np.sort(old.power[B:][ofs_b == s]))
+                sp = _sorted_insert(kept,
+                                    np.sort(new.power[B:][nfs_b == s]))
+                top = np.concatenate([[0.0], np.cumsum(sp[::-1])])
+                out[s] = (sp, top)
+            # the penalty bucket has no min_samples dependence — old
+            # samples never change membership, so it is insert-only
+            pen_suf = np.repeat(new.resident_runs()[t:] & ~new.low[t:],
+                                new.length[t:])
+            sp = _sorted_insert(
+                old_caps["penalty"][0],
+                np.sort(new.power[old_n:][pen_suf[old_n - off_t:]]))
+            top = np.concatenate([[0.0], np.cumsum(sp[::-1])])
+            top_cbrt = np.concatenate([[0.0], np.cumsum(np.cbrt(sp[::-1]))])
+            out["penalty"] = (sp, top, top_cbrt)
+            newc[("caps", m)] = out
+
+    for k in [k for k in cache if isinstance(k, tuple) and k[0] == "dscum"]:
+        _, delta, deep_w, m = k
+        new_sf = newc.get(("sfinal", m))
+        if new_sf is None:
+            continue
+        old_ce, old_ca = cache[k]
+        p = new.power[B:]
+        sav = p - np.maximum(p - delta, deep_w)
+        sav = np.where(np.repeat(new.resident_runs()[q:], new.length[q:]),
+                       sav, 0.0)
+        fs = new_sf[B:]
+        newc[k] = tuple(
+            np.concatenate([old_cum[:B + 1], np.cumsum(np.concatenate(
+                [old_cum[B:B + 1], np.where(fs == want, sav, 0.0)]))[1:]])
+            for old_cum, want in ((old_ce, _EXEC), (old_ca, _ACTIVE)))
+    return new.n_rows - B
 
 
 def _build_partition(root: str, shard_files: list[str], config: IRConfig,
@@ -551,7 +838,8 @@ def build_ir(store: "TelemetryStore", config: IRConfig | None = None,
             store, None, workers, _build_partition,
             (config, mmap, strict, verify),
             merge=lambda a, b: a.merge(b), stage="ir_build", fault=fault)
-        ir = builder.finalize(source_rows=store.total_rows)
+        ir = builder.finalize(source_rows=store.total_rows,
+                              source_shards=len(store.manifest["shards"]))
         ir.skipped = tuple(skips)
     if obs.enabled():
         obs.counter("repro_ir_builds_total", help="fresh IR builds")
@@ -637,14 +925,23 @@ def save_sidecar(ir: RunIR, store: "TelemetryStore") -> pathlib.Path:
     Format: one compressed ``.npz`` holding the stream table (keys, host
     labels, platforms, first timestamps, run/sample counts), the
     concatenated run arrays (state/low/length/power_sum) and the
-    concatenated power samples; ``meta`` embeds the :class:`IRConfig` and
-    the source row count. ``manifest["run_ir"][hash]`` points at the file —
-    a changed classifier config hashes to a different sidecar, an appended
-    store invalidates via ``source_rows``.
+    concatenated power samples; ``meta`` embeds the :class:`IRConfig`, the
+    source row count and the **shard watermark** (``source_shards``: the
+    covered prefix of the append-only manifest shard list, plus the
+    per-chunk unattributed-power pairs). ``manifest["run_ir"][hash]``
+    points at the file and mirrors the watermark (``n_shards`` +
+    per-host covered row counts) — a changed classifier config hashes to a
+    different sidecar; an appended store no longer invalidates wholesale
+    but is caught up by :meth:`IRBuilder.extend` over the uncovered shard
+    suffix (:func:`get_ir`'s ``memory_extend``/``sidecar_extend`` rungs),
+    provided the covered prefix still sums to ``source_rows`` (a rewritten
+    or quarantined prefix shard forces a full rebuild).
     """
     streams = [ir.streams[k] for k in sorted(ir.streams)]
     meta = json.dumps({"config": ir.config.to_dict(),
                        "source_rows": ir.source_rows,
+                       "source_shards": ir.source_shards,
+                       "unattributed": [[h, v] for h, v in ir.unattributed],
                        "skipped": list(ir.skipped)})
     arrays = {
         "meta": np.array(meta),
@@ -673,7 +970,11 @@ def save_sidecar(ir: RunIR, store: "TelemetryStore") -> pathlib.Path:
     # leaves the previous sidecar (or none) fully intact, never a torn file
     from repro.telemetry import storage as storage_mod
     storage_mod._write_atomic_npz(path, arrays)
+    marks: dict[str, int] = {}
+    for s in store.manifest["shards"][:ir.source_shards]:
+        marks[s["host"]] = marks.get(s["host"], 0) + int(s["rows"])
     entry = {"file": name, "source_rows": ir.source_rows,
+             "n_shards": ir.source_shards, "watermarks": marks,
              "config": ir.config.to_dict()}
     # atomic single-key merge: a concurrent appender's shard entries must
     # survive this derived-data write (see TelemetryStore.merge_manifest_key)
@@ -687,11 +988,14 @@ _SIDECAR_ERRORS = (zipfile.BadZipFile, zlib.error, ValueError, KeyError,
                    TypeError, OSError, EOFError)
 
 
-def load_sidecar(store: "TelemetryStore",
-                 config: IRConfig) -> RunIR | None:
+def load_sidecar(store: "TelemetryStore", config: IRConfig,
+                 allow_stale: bool = False) -> RunIR | None:
     """Load a sidecar if a *fresh* one exists: the manifest must key this
     config's hash and the persisted ``source_rows`` must still equal the
     store's row count (an appended store silently invalidates).
+    ``allow_stale=True`` skips the freshness check — :func:`get_ir` uses it
+    to load a stale-but-watermarked sidecar as the base of an incremental
+    :meth:`IRBuilder.extend` instead of rebuilding from scratch.
 
     Tolerant by construction: a poisoned manifest subtree, a missing file,
     or a corrupt/truncated archive (``BadZipFile``, CRC errors, bad JSON
@@ -703,7 +1007,7 @@ def load_sidecar(store: "TelemetryStore",
     if not isinstance(entry, dict):
         return None
     try:
-        if int(entry["source_rows"]) != store.total_rows:
+        if not allow_stale and int(entry["source_rows"]) != store.total_rows:
             obs.counter("repro_ir_cache_invalidations_total", level="sidecar",
                         help="cached IRs rejected as stale")
             return None
@@ -717,6 +1021,9 @@ def load_sidecar(store: "TelemetryStore",
         with np.load(path, allow_pickle=False) as z:
             meta = json.loads(str(z["meta"]))
             src_rows = int(meta["source_rows"])
+            src_shards = int(meta.get("source_shards", 0))
+            unattr = tuple((str(h), float(v))
+                           for h, v in meta.get("unattributed", ()))
             skipped = tuple(meta.get("skipped", ()))
             loaded_cfg = IRConfig.from_dict(meta["config"])
             if loaded_cfg != config:
@@ -753,7 +1060,44 @@ def load_sidecar(store: "TelemetryStore",
             pass
         return None
     return RunIR(config=config, streams=streams,
-                 source_rows=src_rows, skipped=skipped)
+                 source_rows=src_rows, skipped=skipped,
+                 source_shards=src_shards, unattributed=unattr)
+
+
+def _try_extend(store: "TelemetryStore", ir: RunIR, mmap: bool,
+                strict: bool, verify: bool) -> RunIR | None:
+    """Catch a stale IR up to the store by appending only the new shards.
+
+    Valid only while the covered manifest prefix is untouched: the first
+    ``ir.source_shards`` entries must still sum to ``ir.source_rows`` (a
+    rewritten, quarantined or reordered prefix shard breaks the watermark).
+    Returns ``None`` when extension is impossible — irregular appended
+    streams included — so the caller falls through to a full rebuild,
+    which then *defines* the semantics. Suffix-shard read errors propagate
+    under ``strict=True`` exactly as a rebuild's would; under
+    ``strict=False`` they become skip records on the returned IR.
+    """
+    shards = store.manifest["shards"]
+    k = ir.source_shards
+    if not 0 < k <= len(shards):
+        return None
+    if sum(int(s["rows"]) for s in shards[:k]) != ir.source_rows:
+        return None
+    skips: list[dict] = []
+    chunks = []
+    for s in shards[k:]:
+        frame = store.read_shard_or_skip(s["file"], skips, mmap=mmap,
+                                         strict=strict, verify=verify)
+        if frame is not None:
+            chunks.append((frame, s.get("host", "")))
+    try:
+        out = IRBuilder(ir.config).extend(
+            ir, chunks, source_rows=store.total_rows,
+            source_shards=len(shards))
+    except IRUnsupportedError:
+        return None
+    out.skipped = tuple(ir.skipped) + tuple(skips)
+    return out
 
 
 #: in-process cache: (resolved store root, config hash) -> RunIR. An IR
@@ -771,13 +1115,17 @@ def get_ir(store: "TelemetryStore", config: IRConfig | None = None,
            workers: int = 1, mmap: bool = False,
            persist: bool = True, strict: bool = True,
            verify: bool = False, fault=None) -> RunIR:
-    """The IR acquisition ladder: in-memory cache, then sidecar, then a
-    fresh build (persisted back as a sidecar unless ``persist=False`` or
-    the store root is not writable). Every level validates freshness
-    against ``store.total_rows``; a store whose build failed
-    (:class:`IRUnsupportedError`, e.g. irregular sampling) re-raises from
-    a negative cache until the store changes, so callers that fall back to
-    the row path don't pay a doomed O(rows) build per call.
+    """The IR acquisition ladder: in-memory cache, then incremental
+    *extension* of a stale cached IR (:func:`_try_extend`: only the
+    appended shards are read, only the appended-to streams' tails rebuilt
+    — untouched streams keep their object identity and memo caches), then
+    a fresh sidecar, then extension of a stale-but-watermarked sidecar,
+    then a fresh build. Extended and built IRs are persisted back as
+    sidecars unless ``persist=False`` or the store root is not writable.
+    A store whose build failed (:class:`IRUnsupportedError`, e.g.
+    irregular sampling) re-raises from a negative cache until the store
+    changes, so callers that fall back to the row path don't pay a doomed
+    O(rows) build per call.
 
     Cache hits additionally require that a cached IR built with skipped
     shards (``strict=False`` on a dirty store) is never served to a
@@ -791,14 +1139,31 @@ def get_ir(store: "TelemetryStore", config: IRConfig | None = None,
         obs.counter("repro_ir_negative_cache_hits_total",
                     help="IR builds skipped via the unsupported-store cache")
         raise IRUnsupportedError(failed[1])
+
+    def _finish(ir: RunIR, save: bool) -> RunIR:
+        if save and persist:
+            try:
+                save_sidecar(ir, store)
+            except OSError:
+                pass                    # read-only store: memory cache only
+        _IR_CACHE.pop(cache_key, None)
+        _IR_CACHE[cache_key] = ir       # (re-)insert at LRU head
+        while len(_IR_CACHE) > _IR_CACHE_MAX:  # dicts keep insert order
+            _IR_CACHE.pop(next(iter(_IR_CACHE)))
+        return ir
+
     ir = _IR_CACHE.get(cache_key)
-    if ir is not None:
-        if ir.source_rows == store.total_rows and not (ir.skipped and strict):
+    if ir is not None and not (ir.skipped and strict):
+        if ir.source_rows == store.total_rows:
             obs.counter("repro_ir_cache_hits_total", level="memory",
                         help="IR acquisitions served from a cache level")
-            _IR_CACHE.pop(cache_key)
-            _IR_CACHE[cache_key] = ir       # refresh LRU recency
-            return ir
+            return _finish(ir, save=False)
+        ext = _try_extend(store, ir, mmap, strict, verify)
+        if ext is not None and not (ext.skipped and strict):
+            obs.counter("repro_ir_cache_hits_total", level="memory_extend",
+                        help="IR acquisitions served from a cache level")
+            return _finish(ext, save=True)
+    if ir is not None:
         obs.counter("repro_ir_cache_invalidations_total", level="memory",
                     help="cached IRs rejected as stale")
     ir = load_sidecar(store, config)
@@ -809,22 +1174,21 @@ def get_ir(store: "TelemetryStore", config: IRConfig | None = None,
     if ir is not None:
         obs.counter("repro_ir_cache_hits_total", level="sidecar",
                     help="IR acquisitions served from a cache level")
-    else:
-        obs.counter("repro_ir_cache_misses_total",
-                    help="IR acquisitions that required a fresh build")
-        try:
-            ir = build_ir(store, config, workers=workers, mmap=mmap,
-                          strict=strict, verify=verify, fault=fault)
-        except IRUnsupportedError as e:
-            _IR_UNSUPPORTED[cache_key] = (store.total_rows, str(e))
-            raise
-        if persist:
-            try:
-                save_sidecar(ir, store)
-            except OSError:
-                pass                    # read-only store: memory cache only
-    _IR_CACHE.pop(cache_key, None)
-    _IR_CACHE[cache_key] = ir
-    while len(_IR_CACHE) > _IR_CACHE_MAX:      # LRU: dicts keep insert order
-        _IR_CACHE.pop(next(iter(_IR_CACHE)))
-    return ir
+        return _finish(ir, save=False)
+    stale = load_sidecar(store, config, allow_stale=True)
+    if stale is not None and stale.source_rows != store.total_rows \
+            and not (stale.skipped and strict):
+        ext = _try_extend(store, stale, mmap, strict, verify)
+        if ext is not None and not (ext.skipped and strict):
+            obs.counter("repro_ir_cache_hits_total", level="sidecar_extend",
+                        help="IR acquisitions served from a cache level")
+            return _finish(ext, save=True)
+    obs.counter("repro_ir_cache_misses_total",
+                help="IR acquisitions that required a fresh build")
+    try:
+        ir = build_ir(store, config, workers=workers, mmap=mmap,
+                      strict=strict, verify=verify, fault=fault)
+    except IRUnsupportedError as e:
+        _IR_UNSUPPORTED[cache_key] = (store.total_rows, str(e))
+        raise
+    return _finish(ir, save=True)

@@ -665,9 +665,28 @@ def _search_loop(
                         help="warm-start seeds admitted into round 0")
         round0.extend(seed_cands)
 
-    # the IR is acquired by round 0's evaluate and held in the process
-    # cache (repro.whatif.ir.get_ir), so every later refinement round —
-    # and a doomed build on an unsupported store — resolves in O(1)
+    # acquire the shared IR handle ONCE (memory cache / sidecar /
+    # incremental extend / one O(rows) build) and thread it through every
+    # refinement round: rounds then skip get_ir's freshness re-validation
+    # entirely, and a store that grows mid-search cannot shear the search
+    # across two IR generations. Configs the handle's config cannot cover
+    # fall back per-config to the row path inside the evaluator, exactly
+    # as before.
+    if compact and ir is None:
+        from repro.core.states import DEFAULT_CLASSIFIER
+        from repro.whatif import ir as ir_mod
+        pols0 = [pol for _, (_, _, pol) in round0]
+        cfg = ir_mod.ir_config_for(
+            pols0, replayer_kwargs.get("classifier") or DEFAULT_CLASSIFIER,
+            replayer_kwargs.get("dt_s", 1.0))
+        if any(ir_mod.ir_supported(p, cfg) for p in pols0):
+            try:
+                ir = ir_mod.get_ir(store, cfg, workers=workers, mmap=mmap,
+                                   strict=strict, verify=verify, fault=fault)
+            except ir_mod.IRUnsupportedError:
+                ir = None          # e.g. irregular sampling: use rows
+                obs.fallback("compact", "row", "ir_unsupported")
+
     evaluate_round(round0)
 
     history: list[RoundRecord] = []

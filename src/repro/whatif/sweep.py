@@ -652,7 +652,10 @@ def evaluate(
             irregularly-sampled stores fall back to the row path.
         ir: a prebuilt :class:`repro.whatif.ir.RunIR` to replay against
             (skips the cache lookup entirely; the closed-loop search passes
-            one IR across all refinement rounds).
+            one IR across all refinement rounds, and
+            :func:`repro.telemetry.pipeline.analyze_store` accepts the same
+            handle — one compaction serves the whole run-algebra consumer
+            family: analyze / sweep / search).
         backend: ``"numpy"`` (default, the oracle), ``"jax"`` (jit'd
             run-level evaluators, :mod:`repro.whatif.backend`) or
             ``"auto"`` (jax when importable). The jax backend accelerates

@@ -1,0 +1,308 @@
+"""Incremental IR append (ISSUE 9): extend ≡ build, watermark-keyed cache,
+and analyze-on-runs ≡ analyze-on-rows.
+
+Three load-bearing contracts:
+
+* ``IRBuilder.extend(ir, chunks)`` is **bit-identical** to a from-scratch
+  ``build_ir`` over the full shard sequence — run tables, power columns and
+  every *seeded* replay memo (prefix sums, §2.2 relabels, cap buckets)
+  agree bit for bit, for any cut point and any append order.
+* ``get_ir`` across a store append serves a ``memory_extend`` hit whose
+  untouched streams are the *same objects* (memo caches intact) — an
+  append must not evict the rest of the fleet's IRs.
+* ``analyze_store(compact=...)`` matches the row oracle: times/counts/
+  durations/intervals/platforms exact, energies <= 1e-9 relative,
+  ``unattributed_energy_j`` exact — including under quarantined-shard
+  coverage < 1.
+"""
+import math
+import pathlib
+import tempfile
+
+import numpy as np
+import pytest
+from _hyp import given, settings, st
+
+import repro.obs as obs
+from repro.cluster import generate_cluster
+from repro.telemetry import TelemetryStore
+from repro.telemetry.pipeline import analyze_store
+from repro.whatif.ir import IRBuilder, IRConfig, build_ir, get_ir
+
+
+# --------------------------------------------------------------------------- #
+# Shared corpus: one generated store, chunks = (frame, host) in manifest order
+# --------------------------------------------------------------------------- #
+_CORPUS = None
+
+
+def _corpus():
+    """Module-cached store + chunks. A plain function (not a pytest
+    fixture) so the offline hypothesis shim's zero-arg @given wrapper can
+    reach it too; the tempdir is cleaned at interpreter exit."""
+    global _CORPUS
+    if _CORPUS is None:
+        import atexit
+        import shutil
+        d = tempfile.mkdtemp(prefix="ir_append_corpus_")
+        atexit.register(shutil.rmtree, d, True)
+        store = TelemetryStore(d, shard_format="npy_dir")
+        generate_cluster(n_devices=6, horizon_s=1800, seed=9,
+                         store=store, shard_s=450)
+        chunks = [(store.read_shard(s["file"]), s["host"])
+                  for s in store.manifest["shards"]]
+        assert len(chunks) >= 6
+        _CORPUS = (d, chunks)
+    return _CORPUS
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return _corpus()
+
+
+def _build(chunks, config):
+    b = IRBuilder(config)
+    for frame, host in chunks:
+        b.update(frame, host_label=host)
+    return b.finalize(source_rows=sum(len(f) for f, _ in chunks),
+                      source_shards=len(chunks))
+
+
+def _assert_ir_equal(got, want):
+    assert sorted(got.streams) == sorted(want.streams)
+    assert got.source_rows == want.source_rows
+    assert got.source_shards == want.source_shards
+    assert got.unattributed == want.unattributed
+    for key in want.streams:
+        g, w = got.streams[key], want.streams[key]
+        assert g.host_label == w.host_label
+        assert g.platform_id == w.platform_id
+        assert g.ts_first == w.ts_first
+        for col in ("state", "low", "length", "power_sum", "power"):
+            assert np.array_equal(getattr(g, col), getattr(w, col)), \
+                (key, col)
+        # every memo the extend seeded must bit-equal the from-scratch
+        # derivation (the from-scratch stream computes it lazily here)
+        for memo_key, seeded in g._cache.items():
+            fresh = _fresh_memo(w, memo_key)
+            _assert_memo_equal(seeded, fresh, (key, memo_key))
+
+
+def _fresh_memo(s, memo_key):
+    if memo_key == "cumres":
+        return s.cum_resident()
+    if memo_key == "off":
+        return s.run_offsets()
+    if memo_key == "res":
+        return s.resident_runs()
+    if memo_key == "ts":
+        return s.ts()
+    if isinstance(memo_key, tuple) and memo_key[0] == "base":
+        return s.baseline(memo_key[1])
+    if isinstance(memo_key, tuple) and memo_key[0] == "park":
+        return s.parking_counterfactual(memo_key[1])
+    if memo_key == "crs":
+        return s.controller_runs()
+    if isinstance(memo_key, tuple) and memo_key[0] == "final":
+        return s.final_state(memo_key[1])
+    if isinstance(memo_key, tuple) and memo_key[0] == "sfinal":
+        return s.sample_final_state(memo_key[1])
+    if isinstance(memo_key, tuple) and memo_key[0] == "caps":
+        return s.cap_buckets(memo_key[1])
+    if isinstance(memo_key, tuple) and memo_key[0] == "dscum":
+        return s.downscale_cums(memo_key[1], memo_key[2], memo_key[3])
+    raise AssertionError(f"unexpected seeded memo {memo_key!r}")
+
+
+def _assert_memo_equal(a, b, ctx):
+    if isinstance(a, dict):
+        assert set(a) == set(b), ctx
+        for k in a:
+            _assert_memo_equal(a[k], b[k], ctx + (k,))
+    elif isinstance(a, tuple):
+        assert len(a) == len(b), ctx
+        for x, y in zip(a, b):
+            _assert_memo_equal(x, y, ctx)
+    elif isinstance(a, np.ndarray):
+        assert np.array_equal(a, b), ctx
+    else:
+        assert a == b, ctx
+
+
+# --------------------------------------------------------------------------- #
+# extend ≡ build, bit for bit, across random cuts and append orders
+# --------------------------------------------------------------------------- #
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_extend_matches_build_across_chunkings(seed):
+    import random
+    _, chunks = _corpus()
+    rng = random.Random(seed)
+    config = IRConfig()
+    want = _build(chunks, config)
+    # warm the oracle's expensive memos so seeded keys have a counterpart
+    for s in want.streams.values():
+        s.cap_buckets(3)
+        s.downscale_cums(0.25, 20.0, 3)
+    n = len(chunks)
+    cut = rng.randint(1, n - 1)
+    base = _build(chunks[:cut], config)
+    if rng.random() < 0.5:
+        # single catch-up append of the whole tail
+        got = IRBuilder(config).extend(base, chunks[cut:])
+    else:
+        # two stacked appends: extend-of-extend must still be exact
+        mid = rng.randint(cut, n - 1)
+        step = IRBuilder(config).extend(base, chunks[cut:mid + 1])
+        got = IRBuilder(config).extend(step, chunks[mid + 1:])
+    _assert_ir_equal(got, want)
+
+
+def test_extend_rejects_config_mismatch_and_dirty_builder(corpus):
+    _, chunks = corpus
+    base = _build(chunks[:3], IRConfig())
+    other = IRConfig(dt_s=2.0)
+    with pytest.raises(ValueError, match="different config"):
+        IRBuilder(other).extend(base, chunks[3:4])
+    dirty = IRBuilder(IRConfig())
+    # a chunk with attributed rows, so the builder holds open accumulators
+    attributed = next(
+        (f, h) for f, h in chunks if np.any(np.asarray(f["job_id"]) >= 0))
+    dirty.update(attributed[0], host_label=attributed[1])
+    assert dirty._acc
+    with pytest.raises(ValueError, match="fresh"):
+        dirty.extend(base, chunks[3:4])
+
+
+# --------------------------------------------------------------------------- #
+# get_ir across a store append: watermark-keyed cache, no eviction of the
+# untouched fleet
+# --------------------------------------------------------------------------- #
+def test_get_ir_extends_in_place_without_evicting_untouched_streams(corpus):
+    src_dir, _ = corpus
+    src = TelemetryStore(src_dir)
+    shards = src.manifest["shards"]
+    last = shards[-1]
+    with tempfile.TemporaryDirectory() as d:
+        store = TelemetryStore(pathlib.Path(d) / "grow",
+                               shard_format="npy_dir")
+        for s in shards[:-1]:
+            store.write_shard(src.read_shard(s["file"]), host=s["host"])
+        ir1 = get_ir(store, IRConfig())
+        for s in ir1.streams.values():        # populate memo caches
+            s.final_state(3)
+            s.cap_buckets(3)
+        ids = {k: v for k, v in ir1.streams.items()}
+
+        store.write_shard(src.read_shard(last["file"]), host=last["host"])
+        obs.enable()
+        try:
+            obs.reset()
+            ir2 = get_ir(store, IRConfig())
+            text = obs.render_prometheus()
+        finally:
+            obs.disable()
+            obs.reset()
+        # the appended store is served by extension, not a rebuild
+        assert 'repro_ir_cache_hits_total{level="memory_extend"} 1' in text
+        assert "repro_ir_cache_misses_total" not in text
+        assert 'repro_ir_appends_total' in text
+
+        assert ir2.source_rows == store.total_rows
+        # streams of other hosts are untouched: SAME objects, memos intact
+        for k, s2 in ir2.streams.items():
+            if s2.host_label != last["host"]:
+                assert s2 is ids[k]
+                assert ("final", 3) in s2._cache
+        # appended-to streams were replaced with memo-seeded rebuilds
+        touched = [k for k, s2 in ir2.streams.items()
+                   if k in ids and s2 is not ids[k]]
+        assert touched
+        for k in touched:
+            assert ("final", 3) in ir2.streams[k]._cache
+            assert ("caps", 3) in ir2.streams[k]._cache
+        # and extension is exact: bit-identical to a from-scratch build
+        want = build_ir(store, IRConfig())
+        _assert_ir_equal(ir2, want)
+        # a further acquisition with no growth is a plain memory hit
+        assert get_ir(store, IRConfig()) is ir2
+
+
+# --------------------------------------------------------------------------- #
+# analyze-on-runs ≡ analyze-on-rows
+# --------------------------------------------------------------------------- #
+def _assert_analysis_matches(run, row, unattributed_exact=True):
+    assert len(run.jobs) == len(row.jobs)
+    for a, b in zip(run.jobs, row.jobs):       # sorted stream order, both
+        assert a.job_id == b.job_id
+        assert a.platform == b.platform
+        assert a.duration_s == b.duration_s
+        assert a.breakdown.time_s == b.breakdown.time_s
+        assert a.intervals == b.intervals
+        for st_ in a.breakdown.energy_j:
+            assert math.isclose(a.breakdown.energy_j[st_],
+                                b.breakdown.energy_j[st_],
+                                rel_tol=1e-9, abs_tol=1e-9)
+    assert run.n_intervals == row.n_intervals
+    assert run.fleet.time_s == row.fleet.time_s
+    assert sorted(run.platforms) == sorted(row.platforms)
+    for p in run.platforms:
+        assert run.platforms[p].time_s == row.platforms[p].time_s
+    if unattributed_exact:
+        assert run.unattributed_energy_j == row.unattributed_energy_j
+    assert run.coverage == row.coverage
+    assert run.skipped == row.skipped
+
+
+def test_analyze_compact_matches_row_oracle(corpus):
+    src_dir, _ = corpus
+    store = TelemetryStore(src_dir)
+    row = analyze_store(store, min_job_duration_s=600.0, compact=False)
+    run = analyze_store(store, min_job_duration_s=600.0, compact=True)
+    _assert_analysis_matches(run, row)
+    assert run.coverage == 1.0
+    # jobs carry their platform and the per-platform map is non-trivial
+    assert all(j.platform >= 0 for j in run.jobs)
+    assert run.platforms
+
+
+def test_analyze_compact_matches_rows_under_quarantine(corpus):
+    src_dir, _ = corpus
+    src = TelemetryStore(src_dir)
+    with tempfile.TemporaryDirectory() as d:
+        store = TelemetryStore(pathlib.Path(d) / "dirty",
+                               shard_format="npy_dir")
+        for s in src.manifest["shards"]:
+            store.write_shard(src.read_shard(s["file"]), host=s["host"])
+        # corrupt the trailing shard of one host: the stream now ends a
+        # shard early but stays regular, so the IR path survives too
+        victim = store.manifest["shards"][-1]
+        vdir = pathlib.Path(store.root) / victim["file"]
+        col = next(iter(vdir.iterdir()))
+        col.write_bytes(b"corrupt")
+        row = analyze_store(store, min_job_duration_s=600.0,
+                            compact=False, strict=False)
+        run = analyze_store(store, min_job_duration_s=600.0, strict=False)
+        assert 0.0 < run.coverage < 1.0
+        assert len(run.skipped) == 1
+        _assert_analysis_matches(run, row)
+        # strict callers still refuse degraded data on every path
+        with pytest.raises(Exception):
+            analyze_store(store, min_job_duration_s=600.0, compact=True)
+
+
+def test_analyze_accepts_prebuilt_ir_handle(corpus):
+    src_dir, _ = corpus
+    store = TelemetryStore(src_dir)
+    ir = get_ir(store, IRConfig())
+    via_handle = analyze_store(store, min_job_duration_s=600.0,
+                               compact=True, ir=ir)
+    auto = analyze_store(store, min_job_duration_s=600.0, compact=True)
+    assert via_handle.fleet.time_s == auto.fleet.time_s
+    assert via_handle.unattributed_energy_j == auto.unattributed_energy_j
+    # a mismatched handle is refused, not silently misused
+    from repro.whatif.ir import IRUnsupportedError
+    with pytest.raises(IRUnsupportedError):
+        analyze_store(store, min_job_duration_s=600.0, compact=True,
+                      ir=ir, dt_s=2.0)

@@ -131,7 +131,7 @@ def test_span_jsonl_round_trip(clean_obs, tmp_path):
 def test_worker_spans_reassemble_across_processes(store_dir, clean_obs):
     obs.enable()
     store = TelemetryStore(store_dir)
-    analyze_store(store, workers=2)
+    analyze_store(store, workers=2, compact=False)  # exercise the row pool
     recs = obs.spans()
     by_name = {}
     for r in recs:

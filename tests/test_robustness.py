@@ -482,11 +482,12 @@ def test_poisoned_ir_manifest_entry_rebuilds():
 def test_crashing_worker_is_retried_to_the_same_answer():
     with tempfile.TemporaryDirectory() as d:
         store = make_store(pathlib.Path(d) / "store", n_devices=8, seed=13)
-        want = analysis_key(analyze_store(store, min_job_duration_s=300))
+        want = analysis_key(analyze_store(store, min_job_duration_s=300,
+                                          compact=False))
         tol = FaultTolerance(max_retries=2, backoff_s=0.01)
         with faults.plan(pathlib.Path(d) / "plan", crash=("analyze",)):
             got = analyze_store(store, min_job_duration_s=300, workers=2,
-                                fault=tol)
+                                fault=tol, compact=False)
         assert analysis_key(got) == want and got.coverage == 1.0
 
 
@@ -494,12 +495,13 @@ def test_crashing_worker_is_retried_to_the_same_answer():
 def test_hung_worker_times_out_and_retries():
     with tempfile.TemporaryDirectory() as d:
         store = make_store(pathlib.Path(d) / "store", n_devices=8, seed=13)
-        want = analysis_key(analyze_store(store, min_job_duration_s=300))
+        want = analysis_key(analyze_store(store, min_job_duration_s=300,
+                                          compact=False))
         tol = FaultTolerance(max_retries=1, timeout_s=2.0, backoff_s=0.01)
         with faults.plan(pathlib.Path(d) / "plan", hang=("analyze",),
                          hang_s=60.0):
             got = analyze_store(store, min_job_duration_s=300, workers=2,
-                                fault=tol)
+                                fault=tol, compact=False)
         assert analysis_key(got) == want
 
 
@@ -507,14 +509,16 @@ def test_hung_worker_times_out_and_retries():
 def test_exhausted_retries_degrade_to_in_process():
     with tempfile.TemporaryDirectory() as d:
         store = make_store(pathlib.Path(d) / "store", n_devices=8, seed=13)
-        want = analysis_key(analyze_store(store, min_job_duration_s=300))
+        want = analysis_key(analyze_store(store, min_job_duration_s=300,
+                                          compact=False))
         obs.enable()
         try:
             obs.reset()
             with faults.plan(pathlib.Path(d) / "plan", crash=("analyze",)):
                 got = analyze_store(store, min_job_duration_s=300, workers=2,
                                     fault=FaultTolerance(max_retries=0,
-                                                         backoff_s=0.01))
+                                                         backoff_s=0.01),
+                                    compact=False)
             text = obs.render_prometheus()
         finally:
             obs.disable()
@@ -576,7 +580,8 @@ def test_quarantine_counters_emitted():
         obs.enable()
         try:
             obs.reset()
-            analyze_store(dirty, min_job_duration_s=300, strict=False)
+            analyze_store(dirty, min_job_duration_s=300, strict=False,
+                          compact=False)
             text = obs.render_prometheus()
         finally:
             obs.disable()

@@ -137,7 +137,9 @@ def test_analyze_store_equals_monolithic():
         assert store.total_rows == len(mono_cs.frame)
         assert len(store.manifest["shards"]) >= 4 * 3  # chunked emission
         mono = analyze_fleet(mono_cs.frame, min_job_duration_s=600)
-        fa = analyze_store(store, min_job_duration_s=600)
+        # compact=False: the row engine is the bit-exactness oracle vs the
+        # monolithic pass (the IR engine matches energies only to 1e-9)
+        fa = analyze_store(store, min_job_duration_s=600, compact=False)
         assert_fleet_equal(fa, mono, unattributed_exact=False)
 
 
@@ -203,8 +205,9 @@ def test_analyze_store_workers_bit_identical_to_serial():
         generate_cluster(n_devices=6, horizon_s=1800, seed=33,
                          store=store, shard_s=600)
         assert len({s["host"] for s in store.manifest["shards"]}) > 1
-        serial = analyze_store(store, min_job_duration_s=600)
-        parallel = analyze_store(store, min_job_duration_s=600, workers=2)
+        serial = analyze_store(store, min_job_duration_s=600, compact=False)
+        parallel = analyze_store(store, min_job_duration_s=600, workers=2,
+                                 compact=False)
     # fully exact, including unattributed (fsum over identical partials)
     assert_fleet_equal(parallel, serial, unattributed_exact=True)
 
@@ -266,7 +269,8 @@ def test_npy_dir_store_roundtrip_and_mmap_zero_copy():
         assert isinstance(mapped["power"], np.memmap)   # zero-copy column
         assert np.array_equal(np.asarray(mapped["power"]), cs.frame["power"])
         mono = analyze_fleet(cs.frame, min_job_duration_s=300)
-        fa = analyze_store(store, min_job_duration_s=300, mmap=True)
+        fa = analyze_store(store, min_job_duration_s=300, mmap=True,
+                           compact=False)
         assert_fleet_equal(fa, mono, unattributed_exact=False)
 
 
