@@ -1,0 +1,112 @@
+"""Live-controller benchmark: recommendation staleness at fleet scale.
+
+The live loop's figure of merit is **staleness**: seconds from a telemetry
+shard landing in the store to the refreshed knee being published. The
+bench drives :class:`repro.live.LiveController` over a 10^4-stream
+synthetic fleet (:class:`repro.live.SyntheticProducer` — one shard per
+60 s window, constant-state streams, so the run-level IR compacts each
+window to ~1 run/stream) and reports:
+
+* ``staleness_s_first`` — the cold tick (IR build + cold search);
+* ``staleness_s_steady_mean`` / ``_max`` — steady state (incremental IR
+  extend + warm-started search), the number an operator's SLO is about;
+* ``streams_per_s_steady`` — fleet streams served per second of steady
+  staleness, with a committed one-sided regression floor (``mode="min"``,
+  full mode only: quick CI shrinks the corpus so timing floors are off);
+* ``coalesced_backlog_single_tick`` — backpressure: a 3-window backlog is
+  folded by ONE tick (one extend + one search), coalesced count == 2;
+* ``resume_bit_identical`` — the crash-safety acceptance gate in bench
+  form: a controller restarted from its checkpoint after every tick ends
+  with a frontier byte-identical to the uninterrupted controller's
+  (1.0 == identical; gated exactly, quick mode included).
+
+Run:  PYTHONPATH=src python -m benchmarks.run --only live \
+          [--json BENCH_live_controller.json] [--quick]
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import tempfile
+
+from benchmarks import common
+from benchmarks.common import Bench
+
+#: committed steady-state throughput floor (streams / second of staleness)
+#: from the 10^4-stream run on the baseline box (~324 streams/s, ~31 s
+#: steady staleness), set ~1/3 of measured so only a real regression (not
+#: scheduler jitter) trips it
+STREAMS_PER_S_FLOOR = 100.0
+
+
+def _fast_search_kwargs():
+    from repro.whatif.search import default_families
+    fams = [f for f in default_families(composites=False)
+            if f.name == "downscale"]
+    return {"max_rounds": 1, "families": fams}
+
+
+def _fkey(frontier) -> str:
+    from repro.whatif import frontier_to_dict
+    return json.dumps(frontier_to_dict(frontier), sort_keys=True)
+
+
+def bench_live_controller() -> Bench:
+    from repro.live import LiveConfig, LiveController, SyntheticProducer
+    from repro.telemetry import TelemetryStore
+
+    b = Bench("live_controller")
+    n_streams = 200 if common.QUICK else 10_000
+    n_windows = 3
+    cfg = LiveConfig(max_evals=24, search_kwargs=_fast_search_kwargs())
+
+    with tempfile.TemporaryDirectory() as d:
+        root = pathlib.Path(d)
+
+        # ---- staleness: one shard lands, how old is the fresh knee? ---- #
+        store = TelemetryStore(root / "store")
+        prod = SyntheticProducer(store, n_streams=n_streams, window_s=60,
+                                 dt_s=5.0)
+        ctrl = LiveController(store, root / "ckpt.json", cfg,
+                              publish_path=root / "knee.json")
+        staleness = []
+        for _ in range(n_windows):
+            prod.step()
+            r = ctrl.tick()
+            assert r.result == "refreshed", r.error
+            staleness.append(r.staleness_s)
+        steady = staleness[1:]
+        mean_steady = sum(steady) / len(steady)
+        b.add("staleness_s_first", staleness[0], seconds=staleness[0])
+        b.add("staleness_s_steady_mean", mean_steady, seconds=mean_steady)
+        b.add("staleness_s_steady_max", max(steady), seconds=max(steady))
+        b.add("streams_per_s_steady", n_streams / mean_steady,
+              target=None if common.QUICK else (STREAMS_PER_S_FLOOR, 0.0),
+              mode="min", seconds=mean_steady)
+
+        # ---- backpressure: a backlog coalesces into ONE tick ---------- #
+        for _ in range(3):
+            prod.step()
+        r = ctrl.tick()
+        assert r.result == "refreshed", r.error
+        b.add("coalesced_backlog_single_tick",
+              float(r.n_new_shards == 3 and r.coalesced == 2), (1.0, 0.0))
+
+        # ---- crash safety: restart-per-tick == uninterrupted ---------- #
+        tiny = dict(n_streams=16, window_s=30, dt_s=5.0, seed=3)
+        base_store = TelemetryStore(root / "base")
+        base_prod = SyntheticProducer(base_store, **tiny)
+        base = LiveController(base_store, root / "base_ckpt.json", cfg)
+        res_store = TelemetryStore(root / "res")
+        res_prod = SyntheticProducer(res_store, **tiny)
+        for _ in range(n_windows):
+            base_prod.step()
+            assert base.tick().result == "refreshed"
+            res_prod.step()
+            # a fresh controller per tick IS the restart-from-checkpoint
+            resumed = LiveController(res_store, root / "res_ckpt.json", cfg)
+            assert resumed.tick().result == "refreshed"
+        b.add("resume_bit_identical",
+              float(_fkey(base.frontier) == _fkey(resumed.frontier)),
+              (1.0, 0.0))
+    return b

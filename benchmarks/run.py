@@ -77,19 +77,21 @@ def main() -> None:
     import repro.obs as obs
     if args.obs:
         obs.enable()
-        # zero-register the degradation ladder and the incremental-IR
-        # families so a fault-free / append-free exposition still carries
-        # them (CI lints on presence)
+        # zero-register the degradation ladder, the incremental-IR and the
+        # live-controller families so a fault-free / append-free / tickless
+        # exposition still carries them (CI lints on presence)
         obs.init_degradation_metrics()
         obs.init_ir_append_metrics()
+        obs.init_live_metrics()
 
     from benchmarks.fleet_bench import bench_fleet_analyze
     from benchmarks.kernels_bench import bench_kernels
+    from benchmarks.live_bench import bench_live_controller
     from benchmarks.paper_benches import ALL_BENCHES
     from benchmarks.whatif_bench import bench_whatif_search, bench_whatif_sweep
     benches = list(ALL_BENCHES) + [bench_roofline, bench_fleet_analyze,
                                    bench_whatif_sweep, bench_whatif_search,
-                                   bench_kernels]
+                                   bench_live_controller, bench_kernels]
     if args.only:
         keys = args.only.split(",")
         benches = [fn for fn in benches

@@ -1,0 +1,40 @@
+"""Live fleet controller: the always-on ingest → extend → search loop.
+
+The offline engine (PRs 1–9) answers "what should the fleet do" from a
+frozen store; this package keeps the answer fresh against a store that
+never stops growing, and keeps its failure behavior boring:
+
+* :mod:`~repro.live.controller` — the tick loop (poll watermark → coalesce
+  pending shards into one IR extend → warm-started ``search_frontier`` →
+  checkpoint → publish knee);
+* :mod:`~repro.live.checkpoint` — atomic checkpoints (shard watermark +
+  serialized frontier + tick counter) with the crash-point ordering that
+  makes ``kill -9`` at any instant resume to a bit-identical frontier;
+* :mod:`~repro.live.supervisor` — the tick watchdog: per-tick deadline,
+  retry-with-backoff, degradation ladder (jax→numpy, warm→cold,
+  serve-stale-knee-with-flag);
+* :mod:`~repro.live.producer` — what feeds it: the simulator drip-fed by
+  window, a fleet-scale synthetic stream generator, and the DCGM /
+  ``power.json`` real-telemetry adapter.
+
+See the README "Live controller" section for the tick diagram, checkpoint
+format and staleness SLO, and ``examples/live_controller.py`` for the
+daemon.
+"""
+from repro.live.checkpoint import (Checkpoint, load_checkpoint,
+                                   remove_checkpoint, save_checkpoint,
+                                   watermark_valid)
+from repro.live.controller import (LiveConfig, LiveController, TickResult,
+                                   fault_hook)
+from repro.live.producer import (DcgmDirectoryProducer, SimulatorProducer,
+                                 SyntheticProducer, parse_power_json)
+from repro.live.supervisor import (DEFAULT_TICK_FAULT, Rung, TickSupervisor,
+                                   ladder)
+
+__all__ = [
+    "Checkpoint", "DEFAULT_TICK_FAULT", "DcgmDirectoryProducer",
+    "LiveConfig", "LiveController", "Rung", "SimulatorProducer",
+    "SyntheticProducer", "TickResult", "TickSupervisor", "fault_hook",
+    "ladder", "load_checkpoint", "parse_power_json", "remove_checkpoint",
+    "save_checkpoint", "watermark_valid",
+]

@@ -1,0 +1,156 @@
+"""Tick watchdog: per-tick deadline, retry-with-backoff, degradation ladder.
+
+Reuses the fault-supervision policy object of the pool layer
+(:class:`repro.telemetry.pipeline.FaultTolerance`) one level up: *inside*
+a tick, pool partitions are already supervised by
+:func:`repro.telemetry.pipeline.run_supervised` (the controller threads
+its ``fault`` through ``search_frontier`` → ``evaluate`` →
+``map_shard_partitions``, so a crashed pool worker retries and degrades to
+in-process exactly as in PR 8); *around* a tick, this module walks a
+degradation ladder when the whole search attempt fails or blows its
+deadline:
+
+1. the configured backend, warm-started from the previous frontier;
+2. ``jax`` → ``numpy`` (skipped when the controller already runs numpy);
+3. warm → cold (no ``init_frontier`` — a poisoned warm seed or a
+   divergent refinement cannot wedge the loop);
+4. ladder exhausted → the caller serves its **stale knee, flagged**
+   (``TickResult.result == "stale"``) and leaves the watermark where it
+   was, so the data stays pending and the operator sees staleness grow
+   instead of a crash loop.
+
+Every rung transition is counted via :func:`repro.obs.fallback`
+(``repro_fallbacks_total{from=..., to=..., reason=...}``); same-rung
+retries count ``repro_live_tick_retries_total`` and abandoned attempts
+``repro_live_deadline_misses_total``.
+
+``FaultTolerance.timeout_s`` is the wall-clock budget for the *whole*
+ladder walk (mirroring ``run_supervised``'s shared pool-round deadline).
+When set, each attempt runs on a daemon worker thread and is abandoned —
+not killed; Python cannot — once the remaining budget is spent; the
+abandoned attempt's result is discarded even if it eventually finishes.
+``timeout_s=None`` (the default) runs attempts inline with zero threading
+overhead.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Callable, Sequence
+
+import repro.obs as obs
+from repro.telemetry.pipeline import FaultTolerance
+
+#: default tick supervision: one same-rung retry, no deadline
+DEFAULT_TICK_FAULT = FaultTolerance(max_retries=1, timeout_s=None,
+                                    backoff_s=0.05)
+
+
+@dataclasses.dataclass(frozen=True)
+class Rung:
+    """One degradation-ladder step: which backend, and whether the search
+    warm-starts from the previous frontier."""
+
+    name: str
+    backend: str
+    warm: bool
+
+
+def ladder(backend: str) -> tuple[Rung, ...]:
+    """The tick ladder for a configured backend: warm on that backend,
+    warm on numpy (when distinct), then cold on numpy."""
+    rungs = []
+    if backend != "numpy":
+        rungs.append(Rung(f"warm_{backend}", backend, True))
+    rungs.append(Rung("warm_numpy", "numpy", True))
+    rungs.append(Rung("cold_numpy", "numpy", False))
+    return tuple(rungs)
+
+
+class TickSupervisor:
+    """Run one tick attempt function down the degradation ladder.
+
+    ``attempt`` is called with a :class:`Rung` and must either return the
+    tick's result or raise; :meth:`run` returns ``(result, rung, None)`` on
+    the first success, or ``(None, None, last_error)`` when every rung is
+    exhausted (the serve-stale signal). Deterministic apart from wall-clock
+    timeouts: with no deadline and a deterministic ``attempt``, the rung
+    walk is a pure function of which rungs raise.
+    """
+
+    def __init__(self, fault: FaultTolerance | None = None,
+                 backend: str = "numpy",
+                 rungs: Sequence[Rung] | None = None):
+        self.fault = fault or DEFAULT_TICK_FAULT
+        self.rungs = tuple(rungs) if rungs is not None else ladder(backend)
+        if not self.rungs:
+            raise ValueError("supervisor needs at least one ladder rung")
+
+    def run(self, attempt: Callable[[Rung], object]):
+        fault = self.fault
+        deadline = (time.monotonic() + fault.timeout_s
+                    if fault.timeout_s is not None else None)
+        last_err: BaseException | None = None
+        prev_rung: Rung | None = None
+        for rung in self.rungs:
+            if prev_rung is not None:
+                reason = ("deadline" if last_err is None
+                          else type(last_err).__name__)
+                obs.fallback(prev_rung.name, rung.name, reason)
+            for try_no in range(fault.max_retries + 1):
+                budget = None
+                if deadline is not None:
+                    budget = deadline - time.monotonic()
+                    if budget <= 0:
+                        return None, None, last_err
+                ok, value, err, timed_out = _call(attempt, rung, budget)
+                if ok:
+                    return value, rung, None
+                if timed_out:
+                    # a hung attempt: don't retry the rung that hung —
+                    # descend with whatever budget remains
+                    obs.counter(
+                        "repro_live_deadline_misses_total",
+                        help="tick attempts abandoned at the per-tick "
+                             "deadline")
+                    last_err = None
+                    break
+                last_err = err
+                if try_no < fault.max_retries:
+                    obs.counter(
+                        "repro_live_tick_retries_total",
+                        help="tick attempts that failed and were retried "
+                             "on the same ladder rung")
+                    if fault.backoff_s > 0:
+                        time.sleep(min(fault.backoff_s * (2 ** try_no), 2.0))
+            prev_rung = rung
+        return None, None, last_err
+
+
+def _call(attempt: Callable[[Rung], object], rung: Rung,
+          budget_s: float | None):
+    """One attempt, optionally under a wall-clock budget. Returns
+    ``(ok, value, error, timed_out)``."""
+    if budget_s is None:
+        try:
+            return True, attempt(rung), None, False
+        except Exception as e:
+            return False, None, e, False
+    box: dict = {}
+
+    def runner() -> None:
+        try:
+            box["value"] = attempt(rung)
+        except BaseException as e:      # noqa: BLE001 — shipped to caller
+            box["error"] = e
+
+    t = threading.Thread(target=runner, daemon=True,
+                         name=f"live-tick-{rung.name}")
+    t.start()
+    t.join(budget_s)
+    if t.is_alive():
+        return False, None, None, True
+    if "error" in box:
+        return False, None, box["error"], False
+    return True, box.get("value"), None, False

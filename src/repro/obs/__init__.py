@@ -22,11 +22,12 @@ process-pool transport), :mod:`~repro.obs.prom` (text exposition, linter,
 stdlib HTTP endpoint), :mod:`~repro.obs.report` (stage-tree reports).
 """
 from repro.obs.metrics import (DEGRADATION_FAMILIES, IR_APPEND_FAMILIES,
-                               REGISTRY, Counter, Gauge, Histogram,
-                               MetricsRegistry, counter, default_buckets,
-                               disable, enable, enabled, fallback, gauge,
-                               init_degradation_metrics,
-                               init_ir_append_metrics, observe)
+                               LIVE_FAMILIES, REGISTRY, Counter, Gauge,
+                               Histogram, MetricsRegistry, counter,
+                               default_buckets, disable, enable, enabled,
+                               fallback, gauge, init_degradation_metrics,
+                               init_ir_append_metrics, init_live_metrics,
+                               observe)
 from repro.obs.prom import (lint_exposition, render_prometheus,
                             start_http_server, write_textfile)
 from repro.obs.report import stage_breakdown, stage_report
@@ -43,13 +44,13 @@ def reset() -> None:
 
 
 __all__ = [
-    "DEGRADATION_FAMILIES", "IR_APPEND_FAMILIES", "REGISTRY", "Counter",
-    "Gauge", "Histogram",
+    "DEGRADATION_FAMILIES", "IR_APPEND_FAMILIES", "LIVE_FAMILIES",
+    "REGISTRY", "Counter", "Gauge", "Histogram",
     "MetricsRegistry", "SpanNode", "SpanRecord", "absorb", "call_with_obs",
     "clear_spans", "counter", "default_buckets", "disable",
     "dump_spans_jsonl", "enable", "enabled", "fallback", "format_span_tree",
     "gauge", "init_degradation_metrics", "init_ir_append_metrics",
-    "lint_exposition",
+    "init_live_metrics", "lint_exposition",
     "load_spans_jsonl", "observe", "render_prometheus", "reset", "span",
     "span_tree", "spans", "stage_breakdown", "stage_report", "stage_totals",
     "start_http_server", "worker_token", "write_textfile",

@@ -312,11 +312,42 @@ def init_ir_append_metrics() -> None:
     _init_families(IR_APPEND_FAMILIES)
 
 
+# ------------------------------------------------- live-controller metrics
+#: the live fleet controller's families (name, kind, help) — emitted by
+#: :mod:`repro.live`, preregistered zero-valued by :func:`init_live_metrics`
+#: (CI asserts presence; the histogram zero-registers too, exposing empty
+#: ``_bucket``/``_sum``/``_count`` samples).
+LIVE_FAMILIES: tuple[tuple[str, str, str], ...] = (
+    ("repro_live_ticks_total", "counter",
+     "live controller ticks, labelled {result} (refreshed/idle/stale)"),
+    ("repro_live_staleness_seconds", "histogram",
+     "seconds from shard landing to the refreshed knee being published"),
+    ("repro_live_checkpoint_writes_total", "counter",
+     "live controller checkpoints committed (atomic rename)"),
+    ("repro_live_checkpoint_restores_total", "counter",
+     "live controller restarts resumed from a valid checkpoint"),
+    ("repro_live_coalesced_shards_total", "counter",
+     "pending shards beyond the first folded into one extend (backpressure)"),
+    ("repro_live_tick_retries_total", "counter",
+     "tick attempts that failed and were retried on the same ladder rung"),
+    ("repro_live_deadline_misses_total", "counter",
+     "tick attempts abandoned at the per-tick deadline"),
+)
+
+
+def init_live_metrics() -> None:
+    """Pre-register the live-controller families (zero-valued) so an
+    exposition from a run that never ticked still exposes them."""
+    _init_families(LIVE_FAMILIES)
+
+
 def _init_families(families: tuple[tuple[str, str, str], ...]) -> None:
     if not STATE.enabled:
         return
     for name, kind, help_text in families:
         if kind == "counter":
             REGISTRY.counter(name, help_text)
+        elif kind == "histogram":
+            REGISTRY.histogram(name, help_text)
         else:
             REGISTRY.gauge(name, help_text)

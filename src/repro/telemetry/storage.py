@@ -153,7 +153,9 @@ class TelemetryStore:
         self.root = pathlib.Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
         self._manifest_path = self.root / MANIFEST_NAME
+        self._manifest_stat: tuple[int, int] | None = None
         if self._manifest_path.exists():
+            self._manifest_stat = self._stat_manifest()
             try:
                 manifest = json.loads(self._manifest_path.read_text())
                 if not isinstance(manifest, dict) \
@@ -205,13 +207,15 @@ class TelemetryStore:
             entry["sha256"] = checksum_shard(path)
             fmt = fmt or entry["format"]
             shards.append(entry)
-        manifest: dict = {"shards": shards, "recovered": True}
+        manifest: dict = {"shards": shards, "recovered": True,
+                          "generation": len(shards) + len(quarantine)}
         if quarantine:
             manifest["quarantine"] = quarantine
         if fmt is not None:
             manifest["shard_format"] = fmt
         _write_atomic_text(self._manifest_path,
                            json.dumps(manifest, indent=1))
+        self._manifest_stat = self._stat_manifest()
         return manifest
 
     def _move_to_quarantine(self, path: pathlib.Path) -> None:
@@ -222,12 +226,67 @@ class TelemetryStore:
         except OSError:
             pass                        # drift: file vanished under us
 
+    def _stat_manifest(self) -> tuple[int, int] | None:
+        try:
+            st = os.stat(self._manifest_path)
+        except OSError:
+            return None
+        return (st.st_mtime_ns, st.st_size)
+
+    @property
+    def generation(self) -> int:
+        """Monotonic shard-list mutation counter, persisted in the
+        manifest: bumped on every append/rewrite/quarantine, *not* on
+        derived-data merges (:meth:`merge_manifest_key`). Pollers (the live
+        controller) compare generations instead of diffing shard lists —
+        paired with :meth:`refresh`, new-shard detection is one ``stat``
+        per tick on an unchanged store."""
+        return int(self.manifest.get("generation", 0))
+
+    def _bump_generation(self) -> None:
+        self.manifest["generation"] = self.generation + 1
+
+    def refresh(self) -> bool:
+        """Cheap cross-process poll: re-read the manifest only when its
+        file stat changed since this handle last loaded or saved it —
+        O(1) (one ``stat``) on the no-change path. Returns True when the
+        shard set actually changed (generation or shard count moved). A
+        torn or unparsable on-disk manifest keeps the current snapshot and
+        reports no change — the writer commits through
+        :func:`atomic_replace`, so the next poll sees a whole file."""
+        stat_now = self._stat_manifest()
+        if stat_now is None or stat_now == self._manifest_stat:
+            return False
+        try:
+            manifest = json.loads(self._manifest_path.read_text())
+        except (OSError, ValueError):
+            return False
+        if not isinstance(manifest, dict) \
+                or not isinstance(manifest.get("shards"), list):
+            return False
+        changed = (int(manifest.get("generation", 0)) != self.generation
+                   or len(manifest["shards"]) != len(self.manifest["shards"]))
+        self.manifest = manifest
+        self.manifest.setdefault("shard_format", self.shard_format)
+        self._manifest_stat = stat_now
+        return changed
+
+    def shards_since(self, watermark: int) -> list[dict]:
+        """Manifest entries past a covered prefix of ``watermark`` shards —
+        the live controller's pending set. ``manifest["shards"]`` is
+        append-only (quarantine removes, but that breaks watermarks by
+        design), so this is a slice, not a diff."""
+        if watermark < 0:
+            raise ValueError(f"watermark must be >= 0, got {watermark}")
+        return self.manifest["shards"][watermark:]
+
     def save_manifest(self) -> None:
         """Persist the manifest atomically (temp file + rename): a process
         killed mid-save leaves the previous manifest intact, never a torn
         JSON (tests/test_robustness.py kill-mid-write suite)."""
         _write_atomic_text(self._manifest_path,
                            json.dumps(self.manifest, indent=1))
+        self._manifest_stat = self._stat_manifest()
 
     def merge_manifest_key(self, key: str, subkey: str, value) -> None:
         """Atomically merge ``manifest[key][subkey] = value`` into the
@@ -263,6 +322,7 @@ class TelemetryStore:
         self.manifest["shards"].append(
             {"file": path.name, "host": host, "day": day, "rows": len(frame),
              "format": self.shard_format, "sha256": checksum_shard(path)})
+        self._bump_generation()
         if flush_manifest:
             self.save_manifest()
         return path
@@ -298,6 +358,7 @@ class TelemetryStore:
         path = self._write_shard_file(stem, frame)
         entry["rows"] = len(frame)
         entry["sha256"] = checksum_shard(path)
+        self._bump_generation()
         return path
 
     def _shard_entry(self, name: str) -> dict | None:
@@ -427,6 +488,7 @@ class TelemetryStore:
         record = dict(entry or {"file": name})
         record["reason"] = reason
         self.manifest.setdefault("quarantine", []).append(record)
+        self._bump_generation()
         self._move_to_quarantine(self.root / name)
         obs.counter("repro_shards_quarantined_total", reason=reason,
                     help="telemetry shards skipped or quarantined, by reason")

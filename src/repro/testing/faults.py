@@ -80,6 +80,41 @@ def corrupt_npy_dir(path: str | pathlib.Path,
     truncate_file(pathlib.Path(path) / column)
 
 
+def corrupt_checkpoint(path: str | pathlib.Path,
+                       mode: str = "truncate") -> None:
+    """Damage a live-controller checkpoint file in place. ``truncate`` cuts
+    it mid-JSON (a torn copy), ``poison`` overwrites it with an unparseable
+    payload that still *looks* like a checkpoint, ``bitflip`` flips one
+    byte. The controller must respond with a
+    ``repro_fallbacks_total{reason="checkpoint_corrupt"}`` and a cold
+    start, never a crash (tests/test_live.py)."""
+    if mode == "truncate":
+        truncate_file(path, keep_fraction=0.4)
+    elif mode == "poison":
+        pathlib.Path(path).write_text('{"schema_version": 1, "tick": 3, "fr')
+    elif mode == "bitflip":
+        bitflip_file(path)
+    else:
+        raise ValueError(f"unknown corrupt_checkpoint mode {mode!r}")
+
+
+def skew_shard(store, name: str, skew_s: float = -3600.0) -> None:
+    """Backwards-timestamp / clock-skew corruptor: rewrite one shard with
+    every timestamp shifted by ``skew_s`` (negative = the producer's clock
+    stepped backwards), checksum recomputed — a byte-valid shard whose
+    *semantics* are poisoned. Downstream, per-stream time-ordering checks
+    (FleetAccumulator, the replayers, the IR builder) reject the stream;
+    the live controller must degrade to serving its stale knee, flagged,
+    instead of crashing."""
+    from repro.telemetry.records import TelemetryFrame
+
+    frame = store.read_shard(name)
+    cols = dict(frame.columns)
+    cols["timestamp"] = cols["timestamp"] + float(skew_s)
+    store.rewrite_shard(name, TelemetryFrame(cols))
+    store.save_manifest()
+
+
 # --------------------------------------------------------------------------- #
 # Worker fault plan (crash / hang inside pool workers)
 # --------------------------------------------------------------------------- #

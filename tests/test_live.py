@@ -1,0 +1,692 @@
+"""Live-controller suite: tick loop, crash/resume bit-identity, degradation.
+
+The load-bearing contract (ISSUE 10): ``kill -9`` at *any* tick-phase
+boundary — post-ingest/pre-extend, post-extend/pre-checkpoint,
+mid-checkpoint-write — followed by a restart from the checkpoint converges
+to a frontier **bit-identical** to an uninterrupted run over the same
+shard sequence. The in-process property test walks every boundary by
+patching :func:`repro.live.checkpoint.fault_hook`; the chaos-gated test
+does it for real with a fire-once ``os._exit`` plan in a child process
+(``REPRO_CHAOS=1``, the CI chaos lane).
+
+Degradation is tested with the PR 8 corruptors: a corrupt checkpoint
+cold-starts (``repro_fallbacks_total{reason="checkpoint_corrupt"}``), a
+clock-skewed shard (byte-valid, semantically poisoned) exhausts the ladder
+and serves the stale knee with the watermark held, and an unreadable shard
+is skipped with coverage accounting — never an exception.
+"""
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import tempfile
+
+import numpy as np
+import pytest
+
+import repro.obs as obs
+from repro.live import (Checkpoint, DcgmDirectoryProducer, LiveConfig,
+                        LiveController, Rung, SimulatorProducer,
+                        SyntheticProducer, TickSupervisor, ladder,
+                        load_checkpoint, parse_power_json, remove_checkpoint,
+                        save_checkpoint, watermark_valid)
+from repro.live import checkpoint as checkpoint_mod
+from repro.live import controller as controller_mod
+from repro.live.checkpoint import MID_CHECKPOINT_STAGE
+from repro.live.controller import PRE_CHECKPOINT_STAGE, PRE_EXTEND_STAGE
+from repro.telemetry import FaultTolerance, TelemetryStore, analyze_store
+from repro.telemetry.storage import MANIFEST_NAME
+from repro.testing import faults
+from repro.whatif import frontier_to_dict
+from repro.whatif import ir as ir_mod
+from repro.whatif.search import default_families
+
+chaos = pytest.mark.skipif(not os.environ.get("REPRO_CHAOS"),
+                           reason="kill -9 crash/resume lane; "
+                                  "set REPRO_CHAOS=1 to run")
+
+#: shard sequence every crash/resume scenario replays
+N_WINDOWS = 3
+PRODUCER_KW = dict(n_streams=16, window_s=30, dt_s=5.0, seed=3)
+
+
+def clear_ir_caches():
+    ir_mod._IR_CACHE.clear()
+    ir_mod._IR_UNSUPPORTED.clear()
+
+
+def fast_families():
+    return [f for f in default_families(composites=False)
+            if f.name == "downscale"]
+
+
+def fast_cfg(**kw):
+    sk = {"max_rounds": 1, "families": fast_families()}
+    sk.update(kw.pop("search_kwargs", {}))
+    kw.setdefault("max_evals", 16)
+    return LiveConfig(search_kwargs=sk, **kw)
+
+
+def fkey(frontier):
+    """The bit-identity witness: canonical JSON of the frontier codec."""
+    return json.dumps(frontier_to_dict(frontier), sort_keys=True)
+
+
+def drive(root, ckpt_path, n_windows, cfg=None, producer_kw=None):
+    """The daemon loop in test form: drain pending shards before the next
+    append (a restart ticks through the backlog it crashed on before new
+    windows land, preserving the per-tick shard grouping), append windows
+    until ``n_windows`` have been emitted, stop when drained.
+
+    Creating the store/producer/controller fresh on every call *is* the
+    restart: the producer resumes from the manifest's shard count (its
+    windows are deterministic per ``(seed, window)``), the controller from
+    the checkpoint."""
+    store = TelemetryStore(root)
+    prod = SyntheticProducer(store, **(producer_kw or PRODUCER_KW))
+    prod.window = len(store.manifest["shards"])
+    ctrl = LiveController(store, ckpt_path, cfg or fast_cfg())
+    for _ in range(20 * n_windows + 20):
+        store.refresh()
+        if store.shards_since(ctrl.n_shards):
+            ctrl.tick()
+        elif prod.window < n_windows:
+            prod.step()
+        else:
+            return ctrl
+    raise AssertionError("driver did not drain — controller wedged?")
+
+
+class SimCrash(RuntimeError):
+    """In-process stand-in for kill -9 at a tick-phase boundary."""
+
+
+def arm_crash(monkeypatch, stage, skip=0):
+    """Patch the fault hook to raise once at the ``skip``-th occurrence of
+    ``stage`` (each tick passes each boundary once, so ``skip`` == the
+    crashing tick index). Both namespaces are patched: the controller
+    imported the name, ``save_checkpoint`` calls its own module's."""
+    state = {"remaining": skip, "fired": False}
+
+    def hook(s):
+        if s != stage or state["fired"]:
+            return
+        if state["remaining"] > 0:
+            state["remaining"] -= 1
+            return
+        state["fired"] = True
+        raise SimCrash(s)
+
+    monkeypatch.setattr(controller_mod, "fault_hook", hook)
+    monkeypatch.setattr(checkpoint_mod, "fault_hook", hook)
+    return state
+
+
+# --------------------------------------------------------------------------- #
+# storage: O(1) polling (satellite 1)
+# --------------------------------------------------------------------------- #
+def make_frame(n=10, t0=0.0, job=1):
+    from repro.telemetry.records import TelemetryFrame
+    return TelemetryFrame({
+        "timestamp": t0 + np.arange(n, dtype=np.float64),
+        "hostname": np.zeros(n, np.int32),
+        "device_id": np.zeros(n, np.int32),
+        "platform": np.zeros(n, np.int32),
+        "power": np.full(n, 120.0),
+        "sm": np.full(n, 50.0),
+        "job_id": np.full(n, job, np.int64),
+        "program_resident": np.ones(n, np.int8),
+    })
+
+
+def test_generation_counts_shard_mutations(tmp_path):
+    store = TelemetryStore(tmp_path / "s")
+    assert store.generation == 0
+    store.append(make_frame(t0=0.0), host="h0")
+    g1 = store.generation
+    store.append(make_frame(t0=100.0), host="h0")
+    g2 = store.generation
+    assert g2 > g1 > 0
+    name = store.manifest["shards"][-1]["file"]
+    store.quarantine_shard(name, "test")
+    store.save_manifest()
+    assert store.generation > g2
+
+
+def test_shards_since_slices_the_suffix(tmp_path):
+    store = TelemetryStore(tmp_path / "s")
+    for i in range(3):
+        store.append(make_frame(t0=100.0 * i), host="h0")
+    assert len(store.shards_since(0)) == 3
+    suffix = store.shards_since(2)
+    assert [s["file"] for s in suffix] == \
+        [store.manifest["shards"][2]["file"]]
+    assert store.shards_since(3) == []
+    with pytest.raises(ValueError):
+        store.shards_since(-1)
+
+
+def test_refresh_adopts_concurrent_appends(tmp_path):
+    reader = TelemetryStore(tmp_path / "s")
+    writer = TelemetryStore(tmp_path / "s")
+    assert reader.refresh() is False          # nothing changed
+    writer.append(make_frame(), host="h0")
+    assert reader.refresh() is True
+    assert len(reader.manifest["shards"]) == 1
+    assert reader.generation == writer.generation
+    assert reader.refresh() is False          # idempotent
+
+
+def test_refresh_keeps_snapshot_on_torn_manifest(tmp_path):
+    store = TelemetryStore(tmp_path / "s")
+    store.append(make_frame(), host="h0")
+    snapshot = json.dumps(store.manifest, sort_keys=True)
+    manifest = tmp_path / "s" / MANIFEST_NAME
+    manifest.write_text('{"shards": [{"file": "tele')   # mid-write read
+    assert store.refresh() is False
+    assert json.dumps(store.manifest, sort_keys=True) == snapshot
+
+
+# --------------------------------------------------------------------------- #
+# controller: tick loop
+# --------------------------------------------------------------------------- #
+def test_tick_idle_refreshed_and_published(tmp_path):
+    store = TelemetryStore(tmp_path / "store")
+    prod = SyntheticProducer(store, **PRODUCER_KW)
+    pub = tmp_path / "knee.json"
+    ctrl = LiveController(store, tmp_path / "ckpt.json", fast_cfg(),
+                          publish_path=pub)
+    r = ctrl.tick()
+    assert r.result == "idle" and not pub.exists()
+    prod.step()
+    r = ctrl.tick()
+    assert r.result == "refreshed" and r.rung == "warm_numpy"
+    assert r.n_new_shards == 1 and r.coalesced == 0
+    assert r.knee is not None and r.staleness_s >= 0
+    assert ctrl.n_shards == 1
+    published = json.loads(pub.read_text())
+    assert published["stale"] is False and published["tick"] == 1
+    ckpt = load_checkpoint(tmp_path / "ckpt.json", store)
+    assert ckpt.tick == 1 and ckpt.n_shards == 1
+    assert ckpt.frontier is not None
+
+
+def test_tick_coalesces_backlog_into_one_extend(tmp_path):
+    store = TelemetryStore(tmp_path / "store")
+    prod = SyntheticProducer(store, **PRODUCER_KW)
+    ctrl = LiveController(store, tmp_path / "ckpt.json", fast_cfg())
+    for _ in range(3):
+        prod.step()
+    r = ctrl.tick()
+    assert r.result == "refreshed"
+    assert r.n_new_shards == 3 and r.coalesced == 2
+    assert ctrl.n_shards == 3
+    assert ctrl.tick_no == 1                  # one tick covered the backlog
+
+
+def test_run_drains_then_stops_when_idle(tmp_path):
+    store = TelemetryStore(tmp_path / "store")
+    prod = SyntheticProducer(store, **PRODUCER_KW)
+    prod.step()
+    ctrl = LiveController(store, tmp_path / "ckpt.json", fast_cfg())
+    results = ctrl.run(max_ticks=5, stop_when_idle=True)
+    assert [r.result for r in results] == ["refreshed", "idle"]
+
+
+def test_publish_is_idempotent_across_restart(tmp_path):
+    store = TelemetryStore(tmp_path / "store")
+    prod = SyntheticProducer(store, **PRODUCER_KW)
+    prod.step()
+    pub = tmp_path / "knee.json"
+    ctrl = LiveController(store, tmp_path / "ckpt.json", fast_cfg(),
+                          publish_path=pub)
+    ctrl.tick()
+    published = pub.read_text()
+    pub.unlink()                    # crash between checkpoint and publish
+    LiveController(store, tmp_path / "ckpt.json", fast_cfg(),
+                   publish_path=pub)
+    assert pub.read_text() == published
+
+
+# --------------------------------------------------------------------------- #
+# crash/resume bit-identity (the tentpole property, satellite 3)
+# --------------------------------------------------------------------------- #
+@pytest.fixture(scope="module")
+def baseline_key(tmp_path_factory):
+    """The uninterrupted run's frontier over the canonical shard sequence."""
+    root = tmp_path_factory.mktemp("baseline")
+    clear_ir_caches()
+    ctrl = drive(root / "store", root / "ckpt.json", N_WINDOWS)
+    assert ctrl.frontier is not None and ctrl.tick_no == N_WINDOWS
+    return fkey(ctrl.frontier)
+
+
+def test_restart_every_tick_is_bit_identical(tmp_path, baseline_key):
+    """A controller rebuilt from its checkpoint after *every* tick (the
+    crash-after-commit case: the restart state is the new checkpoint)
+    converges to the uninterrupted frontier."""
+    root, ckpt = tmp_path / "store", tmp_path / "ckpt.json"
+    store = TelemetryStore(root)
+    prod = SyntheticProducer(store, **PRODUCER_KW)
+    for _ in range(N_WINDOWS):
+        prod.step()
+        clear_ir_caches()
+        ctrl = drive(root, ckpt, n_windows=0)   # fresh controller each time
+    assert ctrl.tick_no == N_WINDOWS
+    assert fkey(ctrl.frontier) == baseline_key
+
+
+@pytest.mark.parametrize("crash_tick", [0, 1])
+@pytest.mark.parametrize("stage", [PRE_EXTEND_STAGE, PRE_CHECKPOINT_STAGE,
+                                   MID_CHECKPOINT_STAGE])
+def test_crash_at_any_boundary_resumes_bit_identical(
+        tmp_path, monkeypatch, baseline_key, stage, crash_tick):
+    """Crash at every tick-phase boundary × tick index; the restarted run's
+    final frontier equals the uninterrupted baseline byte for byte."""
+    root, ckpt = tmp_path / "store", tmp_path / "ckpt.json"
+    clear_ir_caches()
+    state = arm_crash(monkeypatch, stage, skip=crash_tick)
+    with pytest.raises(SimCrash):
+        drive(root, ckpt, N_WINDOWS)
+    assert state["fired"]
+    monkeypatch.undo()              # the "process" died; restart clean
+    clear_ir_caches()               # a real restart has cold IR caches
+    ctrl = drive(root, ckpt, N_WINDOWS)
+    assert ctrl.tick_no == N_WINDOWS
+    assert ctrl.n_shards == N_WINDOWS
+    assert fkey(ctrl.frontier) == baseline_key
+
+
+@chaos
+@pytest.mark.parametrize("stage", [PRE_EXTEND_STAGE, PRE_CHECKPOINT_STAGE,
+                                   MID_CHECKPOINT_STAGE])
+def test_kill9_child_resumes_bit_identical(tmp_path, stage):
+    """The real thing: a child driver process is killed by a fire-once
+    ``os._exit(13)`` plan at the given boundary, relaunched, and must
+    converge to the clean baseline's frontier."""
+    child = (
+        "import json, pathlib, sys\n"
+        "from repro.telemetry.storage import TelemetryStore\n"
+        "from repro.live import LiveController, LiveConfig, "
+        "SyntheticProducer\n"
+        "from repro.whatif.report import frontier_to_dict\n"
+        "from repro.whatif.search import default_families\n"
+        "root, ckpt, out, n_windows = (sys.argv[1], sys.argv[2], "
+        "sys.argv[3], int(sys.argv[4]))\n"
+        f"producer_kw = {PRODUCER_KW!r}\n"
+        "store = TelemetryStore(root)\n"
+        "prod = SyntheticProducer(store, **producer_kw)\n"
+        "prod.window = len(store.manifest['shards'])\n"
+        "fams = [f for f in default_families(composites=False) "
+        "if f.name == 'downscale']\n"
+        "cfg = LiveConfig(max_evals=16, "
+        "search_kwargs={'max_rounds': 1, 'families': fams})\n"
+        "ctrl = LiveController(store, ckpt, cfg)\n"
+        "for _ in range(20 * n_windows + 20):\n"
+        "    store.refresh()\n"
+        "    if store.shards_since(ctrl.n_shards):\n"
+        "        ctrl.tick()\n"
+        "    elif prod.window < n_windows:\n"
+        "        prod.step()\n"
+        "    else:\n"
+        "        break\n"
+        "else:\n"
+        "    sys.exit(2)\n"
+        "pathlib.Path(out).write_text(json.dumps("
+        "frontier_to_dict(ctrl.frontier), sort_keys=True))\n"
+    )
+
+    def launch(root, ckpt, out):
+        return subprocess.run(
+            [sys.executable, "-c", child, str(root), str(ckpt), str(out),
+             str(N_WINDOWS)],
+            env=os.environ.copy(), timeout=600).returncode
+
+    # clean baseline first, before any plan lands in the environment
+    base_out = tmp_path / "baseline.json"
+    assert launch(tmp_path / "base_store", tmp_path / "base_ckpt.json",
+                  base_out) == 0
+
+    out = tmp_path / "frontier.json"
+    with faults.plan(tmp_path / "plan", crash=[stage]):
+        rc = launch(tmp_path / "store", tmp_path / "ckpt.json", out)
+        assert rc == faults.CRASH_EXIT_CODE     # died at the boundary
+        assert not out.exists()
+        rc = launch(tmp_path / "store", tmp_path / "ckpt.json", out)
+        assert rc == 0                          # fire-once: restart is clean
+    assert out.read_text() == base_out.read_text()
+
+
+# --------------------------------------------------------------------------- #
+# checkpoint: atomicity + tolerant restore (satellite 2)
+# --------------------------------------------------------------------------- #
+def test_checkpoint_roundtrip(tmp_path):
+    path = tmp_path / "ckpt.json"
+    ckpt = Checkpoint(tick=4, n_shards=7, source_rows=9000, generation=11,
+                      frontier={"schema_version": 1, "outcomes": []})
+    save_checkpoint(ckpt, path)
+    assert load_checkpoint(path) == ckpt
+    remove_checkpoint(path)
+    assert load_checkpoint(path) is None
+
+
+def test_checkpoint_commit_is_atomic(tmp_path):
+    path = tmp_path / "ckpt.json"
+    first = Checkpoint(tick=1, n_shards=1, source_rows=10, generation=1,
+                       frontier=None)
+    save_checkpoint(first, path)
+    with faults.dying_renames():
+        with pytest.raises(faults.SimulatedKill):
+            save_checkpoint(Checkpoint(tick=2, n_shards=2, source_rows=20,
+                                       generation=2, frontier=None), path)
+    assert load_checkpoint(path) == first       # destination untouched
+    assert path.with_name(path.name + ".tmp").exists()  # orphaned temp
+    remove_checkpoint(path)
+    assert not path.with_name(path.name + ".tmp").exists()
+
+
+@pytest.mark.parametrize("mode", ["truncate", "poison"])
+def test_corrupt_checkpoint_cold_starts_never_crashes(tmp_path, mode):
+    root, ckpt = tmp_path / "store", tmp_path / "ckpt.json"
+    store = TelemetryStore(root)
+    prod = SyntheticProducer(store, **PRODUCER_KW)
+    prod.step()
+    LiveController(store, ckpt, fast_cfg()).tick()
+    faults.corrupt_checkpoint(ckpt, mode=mode)
+    obs.enable()
+    try:
+        obs.reset()
+        ctrl = LiveController(store, ckpt, fast_cfg())
+        assert ctrl.tick_no == 0 and ctrl.frontier is None  # cold start
+        r = ctrl.tick()                  # and the loop still works
+        text = obs.render_prometheus()
+    finally:
+        obs.disable()
+        obs.reset()
+    assert r.result == "refreshed" and ctrl.n_shards == 1
+    assert ('repro_fallbacks_total{from="checkpoint",'
+            'reason="checkpoint_corrupt",to="cold_start"} 1') in text
+    assert "repro_live_checkpoint_corrupt_total" in text
+
+
+def test_bitflipped_checkpoint_never_crashes(tmp_path):
+    """A single flipped bit may stay parseable JSON — the contract is only
+    'never crash, resume or cold-start': the controller must construct."""
+    root, ckpt = tmp_path / "store", tmp_path / "ckpt.json"
+    store = TelemetryStore(root)
+    SyntheticProducer(store, **PRODUCER_KW).step()
+    LiveController(store, ckpt, fast_cfg()).tick()
+    faults.corrupt_checkpoint(ckpt, mode="bitflip")
+    ctrl = LiveController(store, ckpt, fast_cfg())
+    assert ctrl.tick().result in ("refreshed", "idle")
+
+
+def test_broken_watermark_cold_starts(tmp_path):
+    root, ckpt = tmp_path / "store", tmp_path / "ckpt.json"
+    store = TelemetryStore(root)
+    SyntheticProducer(store, **PRODUCER_KW).step()
+    rows = store.total_rows
+    save_checkpoint(Checkpoint(tick=3, n_shards=1, source_rows=rows + 1,
+                               generation=1, frontier=None), ckpt)
+    assert not watermark_valid(load_checkpoint(ckpt), store)
+    obs.enable()
+    try:
+        obs.reset()
+        ctrl = LiveController(store, ckpt, fast_cfg())
+        text = obs.render_prometheus()
+    finally:
+        obs.disable()
+        obs.reset()
+    assert ctrl.tick_no == 0
+    assert ('repro_fallbacks_total{from="checkpoint",'
+            'reason="watermark_broken",to="cold_start"} 1') in text
+
+
+# --------------------------------------------------------------------------- #
+# degradation: poisoned + unreadable shards
+# --------------------------------------------------------------------------- #
+def test_skewed_shard_serves_stale_knee_and_holds_watermark(tmp_path):
+    root, ckpt = tmp_path / "store", tmp_path / "ckpt.json"
+    store = TelemetryStore(root)
+    prod = SyntheticProducer(store, **PRODUCER_KW)
+    prod.step()
+    cfg = fast_cfg(fault=FaultTolerance(max_retries=0, timeout_s=None,
+                                        backoff_s=0.0))
+    ctrl = LiveController(store, ckpt, cfg)
+    assert ctrl.tick().result == "refreshed"
+    good_key = fkey(ctrl.frontier)
+    prod.step()
+    # byte-valid shard, clock stepped back an hour: per-stream ordering
+    # is violated across shards, poisoning both the IR and row paths
+    faults.skew_shard(store, store.manifest["shards"][-1]["file"])
+    obs.enable()
+    try:
+        obs.reset()
+        clear_ir_caches()
+        r = ctrl.tick()
+        text = obs.render_prometheus()
+    finally:
+        obs.disable()
+        obs.reset()
+    assert r.result == "stale" and r.stale
+    assert r.knee is not None                    # previous knee still served
+    assert fkey(ctrl.frontier) == good_key       # frontier unchanged
+    assert ctrl.n_shards == 1                    # watermark held: stays pending
+    assert 'to="stale_knee"' in text
+    assert 'repro_live_ticks_total{result="stale"} 1' in text
+    ckpt_state = load_checkpoint(ckpt, store)
+    assert ckpt_state.n_shards == 1              # checkpoint not advanced
+
+
+def test_unreadable_shard_skipped_with_coverage(tmp_path):
+    root, ckpt = tmp_path / "store", tmp_path / "ckpt.json"
+    store = TelemetryStore(root)
+    prod = SyntheticProducer(store, **PRODUCER_KW)
+    prod.step()
+    ctrl = LiveController(store, ckpt, fast_cfg())
+    assert ctrl.tick().result == "refreshed"
+    prod.step()
+    faults.truncate_file(root / store.manifest["shards"][-1]["file"])
+    clear_ir_caches()
+    r = ctrl.tick()                  # strict=False: skip, account, proceed
+    assert r.result == "refreshed"
+    assert r.coverage < 1.0
+    assert ctrl.n_shards == 2        # watermark advances past the skip
+
+
+# --------------------------------------------------------------------------- #
+# supervisor: retry, ladder, deadline
+# --------------------------------------------------------------------------- #
+def test_ladder_shapes():
+    assert [r.name for r in ladder("numpy")] == ["warm_numpy", "cold_numpy"]
+    assert [r.name for r in ladder("jax")] == \
+        ["warm_jax", "warm_numpy", "cold_numpy"]
+    assert ladder("jax")[0] == Rung("warm_jax", "jax", True)
+    with pytest.raises(ValueError):
+        TickSupervisor(rungs=[])
+
+
+def test_supervisor_first_rung_success():
+    sup = TickSupervisor(backend="numpy")
+    res, rung, err = sup.run(lambda rung: rung.name)
+    assert (res, rung.name, err) == ("warm_numpy", "warm_numpy", None)
+
+
+def test_supervisor_retries_then_descends_ladder():
+    calls = []
+
+    def attempt(rung):
+        calls.append(rung.name)
+        if rung.warm:
+            raise RuntimeError("warm poisoned")
+        return "cold ok"
+
+    fault = FaultTolerance(max_retries=1, timeout_s=None, backoff_s=0.0)
+    obs.enable()
+    try:
+        obs.reset()
+        sup = TickSupervisor(fault, backend="jax")
+        res, rung, err = sup.run(attempt)
+        text = obs.render_prometheus()
+    finally:
+        obs.disable()
+        obs.reset()
+    assert res == "cold ok" and rung.name == "cold_numpy" and err is None
+    # each failing rung attempted max_retries + 1 times
+    assert calls == ["warm_jax", "warm_jax", "warm_numpy", "warm_numpy",
+                     "cold_numpy"]
+    assert "repro_live_tick_retries_total 2" in text
+    assert ('repro_fallbacks_total{from="warm_jax",'
+            'reason="RuntimeError",to="warm_numpy"} 1') in text
+    assert 'from="warm_numpy",reason="RuntimeError",to="cold_numpy"' in text
+
+
+def test_supervisor_exhausted_returns_last_error():
+    boom = ValueError("all rungs poisoned")
+
+    def attempt(rung):
+        raise boom
+
+    fault = FaultTolerance(max_retries=0, timeout_s=None, backoff_s=0.0)
+    res, rung, err = TickSupervisor(fault, backend="numpy").run(attempt)
+    assert res is None and rung is None and err is boom
+
+
+def test_supervisor_deadline_abandons_hung_attempt():
+    import time
+
+    def attempt(rung):
+        time.sleep(30)
+
+    fault = FaultTolerance(max_retries=3, timeout_s=0.3, backoff_s=0.0)
+    obs.enable()
+    try:
+        obs.reset()
+        res, rung, err = TickSupervisor(fault, backend="numpy").run(attempt)
+        text = obs.render_prometheus()
+    finally:
+        obs.disable()
+        obs.reset()
+    assert (res, rung, err) == (None, None, None)   # err None -> "deadline"
+    assert "repro_live_deadline_misses_total 1" in text
+
+
+def test_supervisor_threaded_path_still_succeeds():
+    def attempt(rung):
+        if rung.warm:
+            raise RuntimeError("warm fails fast")
+        return 42
+
+    fault = FaultTolerance(max_retries=0, timeout_s=30.0, backoff_s=0.0)
+    res, rung, err = TickSupervisor(fault, backend="numpy").run(attempt)
+    assert res == 42 and rung.name == "cold_numpy" and err is None
+
+
+# --------------------------------------------------------------------------- #
+# producers (satellite coverage for the feeds)
+# --------------------------------------------------------------------------- #
+def test_simulator_producer_matches_one_shot_emission(tmp_path):
+    from repro.cluster import generate_cluster
+    kw = dict(n_devices=4, horizon_s=900, seed=5, min_job_s=300)
+    one_shot = TelemetryStore(tmp_path / "one_shot")
+    generate_cluster(store=one_shot, shard_s=300, **kw)
+    drip = TelemetryStore(tmp_path / "drip")
+    prod = SimulatorProducer(drip, window_s=300,
+                             n_devices=4, horizon_s=900, seed=5,
+                             min_job_s=300)
+    total = 0
+    while not prod.exhausted:
+        total += prod.step()
+    assert total == one_shot.total_rows == drip.total_rows
+    a = analyze_store(one_shot, min_job_duration_s=300, compact=False)
+    b = analyze_store(drip, min_job_duration_s=300, compact=False)
+    assert a.fleet == b.fleet
+    assert {j.job_id: j.breakdown for j in a.jobs} == \
+        {j.job_id: j.breakdown for j in b.jobs}
+
+
+def test_synthetic_producer_deterministic(tmp_path):
+    stores = []
+    for name in ("a", "b"):
+        store = TelemetryStore(tmp_path / name)
+        prod = SyntheticProducer(store, **PRODUCER_KW)
+        prod.step()
+        prod.step()
+        stores.append(store)
+    rows = [[(s["file"], s["rows"], s["sha256"])
+             for s in st.manifest["shards"]] for st in stores]
+    assert rows[0] == rows[1]        # byte-identical shard sequences
+
+
+def test_dcgm_directory_producer_both_layouts(tmp_path):
+    dumps = tmp_path / "dumps"
+    dumps.mkdir()
+    n = 30
+    (dumps / "a_dcgm.json").write_text(json.dumps({
+        "DCGM_FI_DEV_POWER_USAGE": [150.0 + i for i in range(n)],
+        "DCGM_FI_PROF_SM_ACTIVE": [0.5] * n,
+        "timestamp": list(range(n)),
+        "device_id": 0,
+    }))
+    (dumps / "b_power.json").write_text(json.dumps({
+        "samples": [{"ts": float(i), "power_w": 200.0, "sm_pct": 40.0,
+                     "device": 1} for i in range(n)],
+    }))
+    (dumps / "c_garbage.json").write_text("{not json")
+    store = TelemetryStore(tmp_path / "store")
+    obs.enable()
+    try:
+        obs.reset()
+        prod = DcgmDirectoryProducer(store, dumps)
+        assert prod.step() == 3
+        text = obs.render_prometheus()
+    finally:
+        obs.disable()
+        obs.reset()
+    assert len(prod.verdicts) == 2            # garbage skipped, not ingested
+    assert len(store.manifest["shards"]) == 2
+    assert store.total_rows == 2 * n
+    assert ('repro_shards_quarantined_total{reason="unparseable_dump"} 1'
+            in text)
+    assert prod.step() == 0                   # repoll is idempotent
+
+
+def test_parse_power_json_shapes():
+    cols, kw = parse_power_json({"DCGM_FI_DEV_POWER_USAGE": [1.0],
+                                 "timestamp": [0.0], "hostname": 4})
+    assert "DCGM_FI_DEV_POWER_USAGE" in cols and kw["hostname"] == 4
+    cols, kw = parse_power_json([{"ts": 1.0, "power_w": 99.0,
+                                  "sm_pct": 50.0}])
+    assert cols["DCGM_FI_DEV_POWER_USAGE"] == [99.0]
+    assert cols["DCGM_FI_PROF_SM_ACTIVE"] == [0.5]   # percent -> ratio
+    with pytest.raises(ValueError):
+        parse_power_json({"neither": "layout"})
+    with pytest.raises(ValueError):
+        parse_power_json("a string")
+
+
+# --------------------------------------------------------------------------- #
+# observability families (satellite 5)
+# --------------------------------------------------------------------------- #
+def test_live_families_registered_and_lintable(tmp_path):
+    obs.enable()
+    try:
+        obs.reset()
+        obs.init_live_metrics()
+        text = obs.render_prometheus()
+    finally:
+        obs.disable()
+        obs.reset()
+    assert obs.lint_exposition(text) == []
+    for name, kind, _ in obs.LIVE_FAMILIES:
+        sample = f"{name}_count" if kind == "histogram" else name
+        assert f"\n{sample}" in text or text.startswith(sample)
+    prom = tmp_path / "metrics.prom"
+    prom.write_text(text)
+    import prom_lint
+    assert prom_lint.check_file(str(prom), [
+        "repro_live_ticks_total", "repro_live_staleness_seconds_count",
+        "repro_live_checkpoint_writes_total",
+        "repro_live_checkpoint_restores_total",
+        "repro_live_coalesced_shards_total"]) == []
